@@ -1,0 +1,33 @@
+"""Paper Fig. 1: consistent (chromatic) vs inconsistent (BSP/Jacobi)
+asynchronous ALS — prediction error after equal sweep budgets.
+
+The paper's claim: "Consistent iterations converge rapidly to a lower
+error while inconsistent iterations oscillate and converge slowly."
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, time_fn
+from repro.apps import als
+from repro.core import ChromaticEngine, bsp_engine
+
+
+def run() -> None:
+    sweeps = 12
+    rmse = {}
+    for mode in ("consistent", "inconsistent"):
+        prob = als.synthetic_netflix(60, 50, d=6, density=0.25,
+                                     noise=0.05, seed=7)
+        upd = als.make_update(6, lam=0.05, eps=0.0)
+        if mode == "consistent":
+            eng = ChromaticEngine(prob.graph, upd, max_supersteps=sweeps)
+        else:
+            eng = bsp_engine(prob.graph, upd, max_supersteps=sweeps)
+        us = time_fn(lambda: eng.run(num_supersteps=sweeps), iters=1)
+        st = eng.run(num_supersteps=sweeps)
+        err = als.dataset_rmse(prob, st.vertex_data)
+        rmse[mode] = err
+        emit(f"fig1_als_{mode}", us / sweeps, f"rmse={err:.4f}")
+    emit("fig1_gap", 0.0,
+         f"consistent_better={rmse['consistent'] <= rmse['inconsistent']}")

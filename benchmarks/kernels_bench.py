@@ -1,0 +1,40 @@
+"""Pallas kernels vs pure-jnp oracle timings (interpret mode on CPU —
+relative numbers are indicative only; the kernels target TPU Mosaic)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_fn
+from repro.kernels import ops, ref
+
+
+def run() -> None:
+    rng = np.random.default_rng(0)
+    nv, deg, rows, feat = 512, 8, 512, 64
+    nbrs = jnp.asarray(rng.integers(0, rows, (nv, deg)), jnp.int32)
+    w = jnp.asarray(rng.random((nv, deg)), jnp.float32)
+    x = jnp.asarray(rng.normal(size=(rows, feat)), jnp.float32)
+    us = time_fn(lambda: ref.ell_spmv_ref(nbrs, w, x))
+    emit("kernel_ell_spmv_ref", us, f"nv={nv};deg={deg};f={feat}")
+    us = time_fn(lambda: ops.ell_spmv(nbrs, w, x))
+    emit("kernel_ell_spmv_pallas_interp", us, "interpret=True")
+
+    d = 16
+    mask = jnp.asarray(rng.random((nv, deg)) < 0.7)
+    r = jnp.asarray(rng.normal(size=(nv, deg)), jnp.float32)
+    xf = jnp.asarray(rng.normal(size=(rows, d)), jnp.float32)
+    us = time_fn(lambda: ref.als_normal_eq_ref(nbrs, mask, r, xf))
+    emit("kernel_als_neq_ref", us, f"d={d}")
+    us = time_fn(lambda: ops.als_normal_eq(nbrs, mask, r, xf))
+    emit("kernel_als_neq_pallas_interp", us, "interpret=True")
+
+    bh, wlen, dh = 8, 2048, 64
+    q = jnp.asarray(rng.normal(size=(bh, dh)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(bh, wlen, dh)), jnp.bfloat16)
+    v = jnp.asarray(rng.normal(size=(bh, wlen, dh)), jnp.bfloat16)
+    kvl = jnp.full((bh,), wlen, jnp.int32)
+    us = time_fn(lambda: ref.decode_window_attention_ref(q, k, v, kvl))
+    emit("kernel_window_attn_ref", us, f"w={wlen}")
+    us = time_fn(lambda: ops.decode_window_attention(q, k, v, kvl))
+    emit("kernel_window_attn_pallas_interp", us, "interpret=True")

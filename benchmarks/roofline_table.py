@@ -1,0 +1,40 @@
+"""Render the §Roofline table from dry-run JSONL results (if present)."""
+from __future__ import annotations
+
+import json
+import os
+
+from benchmarks.common import emit
+
+RESULTS = [
+    ("results/dryrun_16x16.jsonl", "16x16"),
+    ("results/dryrun_2x16x16.jsonl", "2x16x16"),
+]
+
+
+def run() -> None:
+    found = False
+    for path, mesh in RESULTS:
+        if not os.path.exists(path):
+            continue
+        found = True
+        ok = err = 0
+        with open(path) as f:
+            for line in f:
+                row = json.loads(line)
+                if "error" in row:
+                    err += 1
+                    emit(f"roofline_{mesh}_{row['name']}", 0.0, "ERROR")
+                    continue
+                ok += 1
+                emit(
+                    f"roofline_{mesh}_{row['name']}", 0.0,
+                    f"Tc={row['t_compute_s']:.3e};"
+                    f"Tm={row['t_memory_s']:.3e};"
+                    f"Tx={row['t_collective_s']:.3e};"
+                    f"bottleneck={row['bottleneck']};"
+                    f"useful={row['usefulness']:.2f}")
+        emit(f"roofline_{mesh}_summary", 0.0, f"ok={ok};errors={err}")
+    if not found:
+        emit("roofline_table", 0.0,
+             "no dry-run results yet (python -m repro.launch.dryrun --all)")

@@ -1,0 +1,32 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.
+  fig1   consistent vs inconsistent ALS (paper Fig. 1)
+  fig6ab scaling + per-node communication (Fig. 6a/6b)
+  fig6cd IPB sweep + GraphLab/Hadoop/MPI comparison (Fig. 6c/6d, 7a)
+  fig8   weak scaling + maxpending/k_select sweep (Fig. 8a/8b)
+  kernels Pallas kernels vs jnp oracle
+  roofline dry-run roofline table (per arch x shape x mesh)
+"""
+import sys
+
+
+def main() -> None:
+    from benchmarks import (fig1_consistency, fig6_scaling,
+                            fig6cd_comparison, fig8_locking, kernels_bench,
+                            roofline_table)
+    only = sys.argv[1] if len(sys.argv) > 1 else None
+    mods = {
+        "fig1": fig1_consistency, "fig6ab": fig6_scaling,
+        "fig6cd": fig6cd_comparison, "fig8": fig8_locking,
+        "kernels": kernels_bench, "roofline": roofline_table,
+    }
+    print("name,us_per_call,derived")
+    for name, mod in mods.items():
+        if only and name != only:
+            continue
+        mod.run()
+
+
+if __name__ == "__main__":
+    main()

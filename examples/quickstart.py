@@ -1,0 +1,53 @@
+"""Quickstart: the paper's running example (PageRank, Ex. 3.1 + §3.3).
+
+Builds a small web graph, defines the Alg.-1 update function, attaches
+the "second most popular page" sync, and runs the chromatic engine to
+convergence.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+
+from repro.apps import pagerank
+from repro.core import ChromaticEngine
+
+
+def main() -> None:
+    rng = np.random.default_rng(0)
+    n = 200
+    # preferential-attachment-ish web graph
+    edges = set()
+    for v in range(1, n):
+        for _ in range(rng.integers(1, 4)):
+            u = int(rng.integers(0, v))
+            edges.add((u, v))
+    edges = np.asarray(sorted(edges))
+
+    graph = pagerank.make_graph(edges, n)
+    print(f"data graph: {n} vertices, {len(edges)} edges, "
+          f"{graph.n_colors} colors")
+
+    engine = ChromaticEngine(
+        graph,
+        pagerank.make_update(eps=1e-5),
+        syncs=[pagerank.second_most_popular_sync(),
+               pagerank.total_rank_sync()],
+        max_supersteps=100,
+    )
+    state = engine.run()
+
+    ranks = np.asarray(state.vertex_data["rank"])
+    top = np.argsort(-ranks)[:5]
+    print(f"converged in {int(state.superstep)} supersteps, "
+          f"{int(state.n_updates)} update-function calls "
+          f"(adaptive: {int(state.n_updates) / (int(state.superstep) * n):.0%} "
+          f"of a full-sweep schedule)")
+    print("top pages:", [(int(v), round(float(ranks[v]), 3)) for v in top])
+    second_rank, _ = state.globals["top2"]
+    print(f"sync op 'second most popular page': rank={float(second_rank):.3f}"
+          f" (oracle: {sorted(ranks)[-2]:.3f})")
+    print(f"sync op 'total rank': {float(state.globals['total_rank']):.2f}")
+
+
+if __name__ == "__main__":
+    main()

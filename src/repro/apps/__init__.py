@@ -1,0 +1,2 @@
+"""Paper §5 applications expressed as GraphLab update functions."""
+from repro.apps import pagerank, als, coem, lbp, gibbs

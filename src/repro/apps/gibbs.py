@@ -1,0 +1,99 @@
+"""Gibbs sampling on a Markov Random Field (paper §5.4).
+
+"Strict sequential consistency is necessary to preserve statistical
+properties [22]" — the chromatic engine *is* the parallel colored Gibbs
+sampler of Gonzalez et al. [22]: same-colored variables are conditionally
+independent given the rest, so sampling a color phase in parallel equals
+some sequential scan.
+
+Ising/Potts pairwise MRF.  Vertex data: current spin, a per-vertex PRNG
+key (split every update — stateless update functions force the RNG state
+into the data graph, which is exactly where GraphLab wants algorithm
+state), and sufficient statistics for marginal estimates.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.coloring import greedy_coloring
+from repro.core.graph import DataGraph
+from repro.core.update import Consistency, ScopeBatch, UpdateFn, UpdateResult
+
+
+def make_update(beta: float, field: float = 0.0, burn_in: int = 0) -> UpdateFn:
+    """Ising Gibbs sweep; spins in {0,1}, energy -beta * s_u s_v (±1)."""
+    def update(scope: ScopeBatch) -> UpdateResult:
+        key = scope.v_data["key"]                    # [B, 2] uint32
+        nbr_spin = scope.nbr_data["spin"]            # [B, D] int32
+        pm = jnp.where(scope.nbr_mask, 2.0 * nbr_spin - 1.0, 0.0)
+        local = 2.0 * (beta * pm.sum(axis=1) + field)
+        p_up = jax.nn.sigmoid(local)
+        def draw(k, p):
+            k1, k2 = jax.random.split(jax.random.wrap_key_data(k))
+            u = jax.random.uniform(k2)
+            return jax.random.key_data(k1), (u < p).astype(jnp.int32)
+        new_key, spin = jax.vmap(draw)(key, p_up)
+        sweep = scope.v_data["sweep"] + 1
+        collect = (sweep > burn_in).astype(jnp.float32)
+        return UpdateResult(
+            v_data={
+                "spin": spin,
+                "key": new_key,
+                "sweep": sweep,
+                "ones": scope.v_data["ones"] + collect * spin,
+                "n": scope.v_data["n"] + collect,
+            },
+            resched_self=jnp.ones(spin.shape, bool),  # keep sweeping
+        )
+    return UpdateFn(update, Consistency.EDGE, name="gibbs")
+
+
+@dataclasses.dataclass
+class IsingProblem:
+    graph: DataGraph
+    beta: float
+    field: float
+    edges: np.ndarray
+
+
+def ising_problem(edges: np.ndarray, n_vertices: int, beta: float,
+                  field: float = 0.0, seed: int = 0) -> IsingProblem:
+    rng = np.random.default_rng(seed)
+    keys = jax.vmap(lambda s: jax.random.key_data(jax.random.PRNGKey(s)))(
+        jnp.arange(seed * 1000003, seed * 1000003 + n_vertices))
+    g = DataGraph.from_edges(
+        n_vertices, edges,
+        vertex_data={
+            "spin": rng.integers(0, 2, n_vertices).astype(np.int32),
+            "key": np.asarray(keys),
+            "sweep": np.zeros(n_vertices, np.int32),
+            "ones": np.zeros(n_vertices, np.float32),
+            "n": np.zeros(n_vertices, np.float32),
+        })
+    g = g.with_colors(greedy_coloring(n_vertices, edges))
+    return IsingProblem(g, beta, field, np.asarray(edges))
+
+
+def marginals(vertex_data) -> np.ndarray:
+    ones = np.asarray(vertex_data["ones"])
+    n = np.maximum(np.asarray(vertex_data["n"]), 1.0)
+    return ones / n
+
+
+def exact_marginals(edges: np.ndarray, n_vertices: int, beta: float,
+                    field: float = 0.0) -> np.ndarray:
+    """Brute-force enumeration oracle (tiny graphs only)."""
+    assert n_vertices <= 16
+    states = np.arange(2 ** n_vertices)
+    bits = ((states[:, None] >> np.arange(n_vertices)) & 1)  # [S, Nv]
+    pm = 2.0 * bits - 1.0
+    energy = field * pm.sum(axis=1)
+    for u, v in edges:
+        energy = energy + beta * pm[:, u] * pm[:, v]
+    w = np.exp(energy - energy.max())
+    w = w / w.sum()
+    return (w[:, None] * bits).sum(axis=0)

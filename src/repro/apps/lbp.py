@@ -1,0 +1,145 @@
+"""Loopy Belief Propagation + GMM co-segmentation (paper §5.2, CoSeg).
+
+3-D grid data graph (frames x height x width of super-pixels).  Vertex
+data: super-pixel feature statistics (the color/texture stub), unary
+log-potentials, current belief.  Edge data: the two directed messages of
+sum-product BP in log domain (``msg01``: endpoint0 -> endpoint1, ``msg10``
+reverse) — exactly the paper's directed edge data.
+
+The update executes the residual-BP local iteration [27]: recompute
+outgoing messages from the cavity belief under a Potts smoothness
+potential, reschedule a neighbor when its incoming message moved by more
+than ``eps``, with the residual as the task priority — the adaptive
+prioritized schedule that requires the locking engine in the paper (here:
+the PriorityEngine).  The GMM parameters are maintained by a **sync**: the
+centroid M-step folds soft label assignments over all vertices, and the
+update reads the fresh centroids from ``scope.globals`` to rebuild its
+unary potentials — the paper's "CoSeg alternates between LBP ... and
+updating the GMM" loop.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.coloring import greedy_coloring
+from repro.core.graph import DataGraph, grid_edges_3d
+from repro.core.sync import SyncOp
+from repro.core.update import Consistency, ScopeBatch, UpdateFn, UpdateResult
+
+
+def make_update(n_labels: int, beta: float = 1.0, gamma: float = 2.0,
+                eps: float = 1e-2, use_gmm_sync: bool = True) -> UpdateFn:
+    log_psi = -beta * (1.0 - jnp.eye(n_labels))      # Potts potential
+
+    def update(scope: ScopeBatch) -> UpdateResult:
+        feat = scope.v_data["feat"]                  # [B, F]
+        if use_gmm_sync and "gmm" in scope.globals:
+            mu = scope.globals["gmm"]                # [K, F]
+            unary = -gamma * ((feat[:, None, :] - mu[None]) ** 2).sum(-1)
+        else:
+            unary = scope.v_data["unary"]            # [B, K]
+        msg01 = scope.edge_data["msg01"]             # [B, D, K]
+        msg10 = scope.edge_data["msg10"]
+        inc = jnp.where(scope.is_src[..., None], msg10, msg01)   # into v
+        old_out = jnp.where(scope.is_src[..., None], msg01, msg10)
+        inc = jnp.where(scope.nbr_mask[..., None], inc, 0.0)
+        belief = unary + inc.sum(axis=1)                         # [B, K]
+        cavity = belief[:, None, :] - inc                        # [B, D, K]
+        # m_vu(x_u) = logsumexp_xv cavity(x_v) + log_psi(x_v, x_u)
+        new_out = jax.nn.logsumexp(
+            cavity[..., :, None] + log_psi[None, None], axis=2)  # [B, D, K]
+        new_out = new_out - jax.nn.logsumexp(new_out, axis=-1, keepdims=True)
+        residual = jnp.where(
+            scope.nbr_mask, jnp.abs(new_out - old_out).max(-1), 0.0)
+        out01 = jnp.where(scope.is_src[..., None], new_out, msg01)
+        out10 = jnp.where(scope.is_src[..., None], msg10, new_out)
+        belief = belief - jax.nn.logsumexp(belief, -1, keepdims=True)
+        return UpdateResult(
+            v_data={"feat": feat, "unary": unary, "belief": belief},
+            edge_data={"msg01": out01, "msg10": out10},
+            resched_nbrs=residual > eps,
+            priority=residual.max(axis=1),
+        )
+    return UpdateFn(update, Consistency.EDGE, name="lbp")
+
+
+def gmm_sync(n_labels: int, n_feat: int, tau: int = 1) -> SyncOp:
+    """Soft k-means M-step over beliefs — the GMM parameter sync."""
+    def fold(acc, row):
+        p = jax.nn.softmax(row["belief"])            # [K]
+        return (acc[0] + p[:, None] * row["feat"][None, :], acc[1] + p)
+    return SyncOp(
+        key="gmm", fold=fold,
+        merge=lambda a, b: (a[0] + b[0], a[1] + b[1]),
+        finalize=lambda acc: acc[0] / jnp.maximum(acc[1], 1e-6)[:, None],
+        acc0=(jnp.zeros((n_labels, n_feat), jnp.float32),
+              jnp.zeros((n_labels,), jnp.float32)),
+        tau=tau)
+
+
+@dataclasses.dataclass
+class CoSegProblem:
+    graph: DataGraph
+    shape: tuple
+    n_labels: int
+    true_labels: np.ndarray
+    centroids: np.ndarray
+
+
+def synthetic_coseg(n_frames: int, h: int, w: int, n_labels: int = 4,
+                    n_feat: int = 3, noise: float = 0.4, seed: int = 0,
+                    use_gmm_sync: bool = True) -> CoSegProblem:
+    """Planted smooth labeling on a 3-D grid with noisy features."""
+    rng = np.random.default_rng(seed)
+    nv, edges = grid_edges_3d(n_frames, h, w)
+    # planted labels: vertical bands drifting across frames
+    labels = np.zeros((n_frames, h, w), dtype=np.int64)
+    for f in range(n_frames):
+        shift = f % max(w // n_labels, 1)
+        for y in range(h):
+            for x in range(w):
+                labels[f, y, x] = ((x + shift) * n_labels) // w % n_labels
+    labels = labels.reshape(-1)
+    centroids = rng.normal(size=(n_labels, n_feat)).astype(np.float32) * 2.0
+    feat = (centroids[labels]
+            + noise * rng.normal(size=(nv, n_feat))).astype(np.float32)
+    gamma = 2.0
+    unary = -gamma * ((feat[:, None, :] - centroids[None]) ** 2).sum(-1)
+    g = DataGraph.from_edges(
+        nv, edges,
+        vertex_data={
+            "feat": feat,
+            "unary": unary.astype(np.float32),
+            "belief": unary.astype(np.float32),
+        },
+        edge_data={
+            "msg01": np.zeros((len(edges), n_labels), np.float32),
+            "msg10": np.zeros((len(edges), n_labels), np.float32),
+        })
+    g = g.with_colors(greedy_coloring(nv, edges))
+    return CoSegProblem(g, (n_frames, h, w), n_labels, labels, centroids)
+
+
+def label_accuracy(problem: CoSegProblem, vertex_data) -> float:
+    """Best-permutation-free accuracy (centroids keep label identity)."""
+    pred = np.asarray(vertex_data["belief"]).argmax(axis=1)
+    return float((pred == problem.true_labels).mean())
+
+
+def frame_partition(problem: CoSegProblem, n_machines: int) -> np.ndarray:
+    """The paper's natural partitioning: slice across frames (§5.2)."""
+    f, h, w = problem.shape
+    frames = np.arange(f * h * w) // (h * w)
+    return (frames * n_machines) // f
+
+
+def striped_partition(problem: CoSegProblem, n_machines: int) -> np.ndarray:
+    """The paper's worst-case partition: frames striped across machines
+    (Fig. 8b) — every scope acquisition crosses shards."""
+    f, h, w = problem.shape
+    frames = np.arange(f * h * w) // (h * w)
+    return frames % n_machines

@@ -1,0 +1,26 @@
+"""GraphLab abstraction in JAX — the paper's core contribution.
+
+Public API:
+    DataGraph, bipartite_edges, grid_edges_3d
+    Consistency, UpdateFn, ScopeBatch, UpdateResult
+    SyncOp, sum_sync, top_two_sync
+    greedy_coloring, distance2_coloring, single_color, bipartite_coloring
+    ChromaticEngine, PriorityEngine, bsp_engine, run_sequential
+    two_phase_partition, random_partition
+    ShardPlan, DistributedChromaticEngine
+"""
+from repro.core.graph import DataGraph, bipartite_edges, grid_edges_3d
+from repro.core.update import (Consistency, ScopeBatch, UpdateFn,
+                               UpdateResult, gather_scopes, scatter_result)
+from repro.core.sync import SyncOp, sum_sync, top_two_sync
+from repro.core.coloring import (greedy_coloring, distance2_coloring,
+                                 single_color, bipartite_coloring,
+                                 verify_coloring)
+from repro.core.engine_chromatic import ChromaticEngine, EngineState
+from repro.core.engine_priority import PriorityEngine
+from repro.core.engine_bsp import bsp_engine
+from repro.core.engine_sequential import run_sequential
+from repro.core.partition import (two_phase_partition, random_partition,
+                                  over_partition, build_meta_graph,
+                                  balance_meta_graph, cut_edges)
+from repro.core.distributed import ShardPlan, DistributedChromaticEngine

@@ -1,0 +1,99 @@
+"""Vertex colorings for the chromatic engine (paper §4.2.1).
+
+* ``greedy_coloring``     -- 1st-order coloring => edge consistency model.
+* ``distance2_coloring``  -- 2nd-order coloring => full consistency model.
+* ``single_color``        -- trivial coloring   => vertex consistency model.
+* ``bipartite_coloring``  -- the paper's fast path: "many optimization
+  problems in ML are naturally expressed as bipartite graphs" (ALS, CoEM);
+  a bipartite graph is two-colored by construction.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def greedy_coloring(n_vertices: int, edges: np.ndarray, order: np.ndarray | None = None) -> np.ndarray:
+    """First-fit greedy coloring: no adjacent vertices share a color."""
+    adj: list[list[int]] = [[] for _ in range(n_vertices)]
+    for u, v in np.asarray(edges, dtype=np.int64):
+        if u == v:
+            continue
+        adj[int(u)].append(int(v))
+        adj[int(v)].append(int(u))
+    colors = np.full(n_vertices, -1, dtype=np.int32)
+    if order is None:
+        # largest-degree-first tends to produce fewer colors
+        order = np.argsort([-len(a) for a in adj], kind="stable")
+    for v in order:
+        used = {colors[u] for u in adj[v] if colors[u] >= 0}
+        c = 0
+        while c in used:
+            c += 1
+        colors[v] = c
+    return colors
+
+
+def distance2_coloring(n_vertices: int, edges: np.ndarray) -> np.ndarray:
+    """Coloring of the square graph: no vertex shares a color with any
+    distance<=2 neighbor.  Satisfies the *full* consistency model under
+    the chromatic engine (paper §4.2.1)."""
+    adj: list[set[int]] = [set() for _ in range(n_vertices)]
+    for u, v in np.asarray(edges, dtype=np.int64):
+        if u == v:
+            continue
+        adj[int(u)].add(int(v))
+        adj[int(v)].add(int(u))
+    colors = np.full(n_vertices, -1, dtype=np.int32)
+    order = np.argsort([-len(a) for a in adj], kind="stable")
+    for v in order:
+        used = set()
+        for u in adj[v]:
+            if colors[u] >= 0:
+                used.add(colors[u])
+            for w in adj[u]:
+                if w != v and colors[w] >= 0:
+                    used.add(colors[w])
+        c = 0
+        while c in used:
+            c += 1
+        colors[v] = c
+    return colors
+
+
+def single_color(n_vertices: int) -> np.ndarray:
+    """All vertices one color: the vertex consistency model (fully
+    independent map operations), and also the *unsafe* Jacobi mode the
+    paper's 'adventurous user' (§3.5) may select."""
+    return np.zeros(n_vertices, dtype=np.int32)
+
+
+def bipartite_coloring(n_left: int, n_vertices: int) -> np.ndarray:
+    """Two-coloring of a bipartite graph with left block [0, n_left)."""
+    colors = np.zeros(n_vertices, dtype=np.int32)
+    colors[n_left:] = 1
+    return colors
+
+
+def verify_coloring(n_vertices: int, edges: np.ndarray, colors: np.ndarray, distance: int = 1) -> bool:
+    """Property check used by tests: valid (distance-1 or -2) coloring."""
+    edges = np.asarray(edges, dtype=np.int64)
+    colors = np.asarray(colors)
+    ok = True
+    for u, v in edges:
+        if u != v and colors[u] == colors[v]:
+            return False
+    if distance == 2:
+        adj: list[list[int]] = [[] for _ in range(n_vertices)]
+        for u, v in edges:
+            if u == v:
+                continue
+            adj[int(u)].append(int(v))
+            adj[int(v)].append(int(u))
+        for v in range(n_vertices):
+            seen = {}
+            for u in adj[v]:
+                for w in adj[u]:
+                    if w != v:
+                        if colors[w] == colors[v]:
+                            return False
+    return ok

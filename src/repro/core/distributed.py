@@ -1,0 +1,490 @@
+"""Distributed data graph + distributed chromatic engine (paper §4).
+
+Host-side, ``ShardPlan.build`` performs the paper's load procedure: take a
+vertex->machine assignment (from ``partition.two_phase_partition`` or
+``random_partition``), give every shard its owned vertices plus **ghosts**
+(boundary vertices/edges of neighbors, §4.1 Fig. 4), and precompute the
+static communication schedule:
+
+* ``send/recv`` (per color): owned color-c vertices that peers ghost —
+  the "synchronize modified ghost data between colors" traffic of the
+  chromatic engine (§4.2.1), realized as a single ``all_to_all`` per
+  phase.  Sending only the *current color's* rows is the static-schedule
+  form of the paper's versioned "only transmit modified data".
+* ``esend/erecv`` (per color): replicated cut-edge data written by the
+  color-c endpoint, pushed to the replica holder.
+* ``tsend/trecv``: task-set backflow — reschedule flags & priorities
+  raised on ghost rows are OR/max-combined into the owner's task set.
+  This replaces the paper's cross-machine task scheduling messages; and
+  termination detection is a ``psum`` of owned active counts, replacing
+  the Misra consensus algorithm (§4.2.2, see DESIGN.md).
+
+Device-side, ``DistributedChromaticEngine`` runs the same color-phase
+program as the single-shard engine inside ``shard_map`` over a 1-D
+"shard" mesh axis; all shapes are uniform across shards (SPMD).
+
+Consistency support: EDGE / VERTEX / UNSAFE (writes to self + adjacent
+edges).  FULL-consistency *neighbor writes* would require ghost-data
+backflow and are not supported distributed (none of the paper's
+applications write neighbor vertex data).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.core.graph import DataGraph
+from repro.core.sync import SyncOp
+from repro.core.update import UpdateFn, gather_scopes, scatter_result
+
+PyTree = Any
+
+
+class LocalStruct(NamedTuple):
+    """Per-shard graph structure adapter consumed by gather/scatter."""
+    nbrs: jax.Array
+    nbr_mask: jax.Array
+    edge_ids: jax.Array
+    is_src: jax.Array
+    degree: jax.Array
+    n_vertices: int   # rows per shard R (scatter sentinel)
+
+
+@dataclasses.dataclass
+class ShardPlan:
+    """Static distributed layout + communication schedule (host-built)."""
+    M: int                 # number of shards (== mesh axis size)
+    R: int                 # rows per shard (owned + ghost + padding)
+    E_loc: int             # local edges per shard (excl. pad row)
+    n_colors: int
+    Cmax: int              # color batch width
+    Hv: int                # vertex-exchange width per (color, peer)
+    He: int                # edge-exchange width per (color, peer)
+    Hg: int                # task-backflow width per peer
+    # ---- device arrays, leading dim M ----
+    nbrs: jax.Array        # [M, R, D] local neighbor slots
+    nbr_mask: jax.Array    # [M, R, D]
+    edge_ids: jax.Array    # [M, R, D] local edge ids (pad -> E_loc)
+    is_src: jax.Array      # [M, R, D]
+    degree: jax.Array      # [M, R]
+    owned_mask: jax.Array  # [M, R]
+    color_ids: jax.Array   # [M, n_colors, Cmax] local owned slots
+    color_valid: jax.Array # [M, n_colors, Cmax]
+    send_idx: jax.Array    # [M, n_colors, M, Hv] local owned slot to send
+    send_mask: jax.Array   # [M, n_colors, M, Hv]
+    recv_idx: jax.Array    # [M, n_colors, M, Hv] local ghost slot to fill
+    esend_idx: jax.Array   # [M, n_colors, M, He]
+    esend_mask: jax.Array  # [M, n_colors, M, He]
+    erecv_idx: jax.Array   # [M, n_colors, M, He]
+    tsend_idx: jax.Array   # [M, M, Hg] local ghost slot whose flags go home
+    tsend_mask: jax.Array  # [M, M, Hg]
+    trecv_idx: jax.Array   # [M, M, Hg] owner's owned slot
+    # ---- host-side maps ----
+    local_to_global: np.ndarray  # [M, R] global vertex id or -1
+    ledge_to_global: np.ndarray  # [M, E_loc] global edge id or -1
+    assignment: np.ndarray       # [Nv]
+
+    # ------------------------------------------------------------------
+    @staticmethod
+    def build(graph: DataGraph, assignment: np.ndarray, M: int) -> "ShardPlan":
+        if graph.colors is None:
+            raise ValueError("graph needs colors")
+        nv, ne, D = graph.n_vertices, graph.n_edges, graph.max_deg
+        colors = np.asarray(graph.colors)
+        n_colors = int(colors.max()) + 1 if nv else 1
+        assignment = np.asarray(assignment, dtype=np.int64)
+        edges = graph.edges_np
+
+        owned = [np.nonzero(assignment == i)[0] for i in range(M)]
+        adj = graph.adjacency_lists
+        ghosts: list[np.ndarray] = []
+        for i in range(M):
+            gs: set[int] = set()
+            own = set(owned[i].tolist())
+            for v in owned[i]:
+                for u in adj[int(v)]:
+                    if u not in own:
+                        gs.add(u)
+            ghosts.append(np.asarray(sorted(gs), dtype=np.int64))
+        O = max(1, max(len(o) for o in owned))
+        G = max(1, max(len(g) for g in ghosts)) if any(len(g) for g in ghosts) else 1
+        R = O + G
+
+        g2l = [dict() for _ in range(M)]   # global id -> local slot
+        local_to_global = np.full((M, R), -1, dtype=np.int64)
+        for i in range(M):
+            for s, v in enumerate(owned[i]):
+                g2l[i][int(v)] = s
+                local_to_global[i, s] = v
+            for s, v in enumerate(ghosts[i]):
+                g2l[i][int(v)] = O + s
+                local_to_global[i, O + s] = v
+
+        # ---- local edges: every edge incident to an owned vertex ----
+        e2l = [dict() for _ in range(M)]
+        ledges: list[list[int]] = [[] for _ in range(M)]
+        for e, (u, v) in enumerate(edges):
+            for i in {int(assignment[u]), int(assignment[v])}:
+                e2l[i][e] = len(ledges[i])
+                ledges[i].append(e)
+        E_loc = max(1, max(len(l) for l in ledges))
+        ledge_to_global = np.full((M, E_loc), -1, dtype=np.int64)
+        for i in range(M):
+            ledge_to_global[i, : len(ledges[i])] = ledges[i]
+
+        # ---- local adjacency for owned rows ----
+        h_nbrs = np.asarray(graph.nbrs)
+        h_mask = np.asarray(graph.nbr_mask)
+        h_eids = np.asarray(graph.edge_ids)
+        h_issrc = np.asarray(graph.is_src)
+        h_deg = np.asarray(graph.degree)
+        nbrs_l = np.zeros((M, R, D), dtype=np.int32)
+        mask_l = np.zeros((M, R, D), dtype=bool)
+        eids_l = np.full((M, R, D), E_loc, dtype=np.int32)
+        issrc_l = np.zeros((M, R, D), dtype=bool)
+        deg_l = np.zeros((M, R), dtype=np.int32)
+        owned_mask = np.zeros((M, R), dtype=bool)
+        for i in range(M):
+            for s, v in enumerate(owned[i]):
+                owned_mask[i, s] = True
+                deg_l[i, s] = h_deg[v]
+                for j in range(D):
+                    if not h_mask[v, j]:
+                        continue
+                    u = int(h_nbrs[v, j])
+                    nbrs_l[i, s, j] = g2l[i][u]
+                    mask_l[i, s, j] = True
+                    eids_l[i, s, j] = e2l[i][int(h_eids[v, j])]
+                    issrc_l[i, s, j] = h_issrc[v, j]
+
+        # ---- per-color owned batches ----
+        batches = [[np.asarray([s for s, v in enumerate(owned[i])
+                                if colors[v] == c], dtype=np.int64)
+                    for c in range(n_colors)] for i in range(M)]
+        Cmax = max(1, max(len(b) for bi in batches for b in bi))
+        color_ids = np.zeros((M, n_colors, Cmax), dtype=np.int32)
+        color_valid = np.zeros((M, n_colors, Cmax), dtype=bool)
+        for i in range(M):
+            for c in range(n_colors):
+                b = batches[i][c]
+                color_ids[i, c, : len(b)] = b
+                color_valid[i, c, : len(b)] = True
+
+        # ---- vertex ghost exchange (owner -> ghost), per color ----
+        sends: dict = {}
+        for i in range(M):
+            for v in ghosts[i]:
+                j = int(assignment[v])        # owner
+                c = int(colors[v])
+                sends.setdefault((c, j, i), []).append(int(v))
+        Hv = max(1, max((len(v) for v in sends.values()), default=1))
+        send_idx = np.zeros((M, n_colors, M, Hv), dtype=np.int32)
+        send_mask = np.zeros((M, n_colors, M, Hv), dtype=bool)
+        recv_idx = np.full((M, n_colors, M, Hv), R, dtype=np.int32)
+        for (c, j, i), vs in sends.items():    # j owner sends to i
+            for t, v in enumerate(vs):
+                send_idx[j, c, i, t] = g2l[j][v]
+                send_mask[j, c, i, t] = True
+                recv_idx[i, c, j, t] = g2l[i][v]
+
+        # ---- cut-edge replica push (color-c endpoint owner -> peer) ----
+        esends: dict = {}
+        for e, (u, v) in enumerate(edges):
+            iu, iv = int(assignment[u]), int(assignment[v])
+            if iu == iv:
+                continue
+            for (w, ow, peer) in ((u, iu, iv), (v, iv, iu)):
+                c = int(colors[int(w)])
+                esends.setdefault((c, ow, peer), []).append(e)
+        He = max(1, max((len(v) for v in esends.values()), default=1))
+        esend_idx = np.zeros((M, n_colors, M, He), dtype=np.int32)
+        esend_mask = np.zeros((M, n_colors, M, He), dtype=bool)
+        erecv_idx = np.full((M, n_colors, M, He), E_loc, dtype=np.int32)
+        for (c, ow, peer), es in esends.items():
+            for t, e in enumerate(es):
+                esend_idx[ow, c, peer, t] = e2l[ow][e]
+                esend_mask[ow, c, peer, t] = True
+                erecv_idx[peer, c, ow, t] = e2l[peer][e]
+
+        # ---- task backflow (ghost flags -> owner), color independent ----
+        tsends: dict = {}
+        for i in range(M):
+            for v in ghosts[i]:
+                j = int(assignment[v])
+                tsends.setdefault((i, j), []).append(int(v))
+        Hg = max(1, max((len(v) for v in tsends.values()), default=1))
+        tsend_idx = np.zeros((M, M, Hg), dtype=np.int32)
+        tsend_mask = np.zeros((M, M, Hg), dtype=bool)
+        trecv_idx = np.full((M, M, Hg), R, dtype=np.int32)
+        for (i, j), vs in tsends.items():      # i holds ghosts of j's vertices
+            for t, v in enumerate(vs):
+                tsend_idx[i, j, t] = g2l[i][v]
+                tsend_mask[i, j, t] = True
+                trecv_idx[j, i, t] = g2l[j][v]
+
+        return ShardPlan(
+            M=M, R=R, E_loc=E_loc, n_colors=n_colors, Cmax=Cmax,
+            Hv=Hv, He=He, Hg=Hg,
+            nbrs=jnp.asarray(nbrs_l), nbr_mask=jnp.asarray(mask_l),
+            edge_ids=jnp.asarray(eids_l), is_src=jnp.asarray(issrc_l),
+            degree=jnp.asarray(deg_l), owned_mask=jnp.asarray(owned_mask),
+            color_ids=jnp.asarray(color_ids), color_valid=jnp.asarray(color_valid),
+            send_idx=jnp.asarray(send_idx), send_mask=jnp.asarray(send_mask),
+            recv_idx=jnp.asarray(recv_idx),
+            esend_idx=jnp.asarray(esend_idx), esend_mask=jnp.asarray(esend_mask),
+            erecv_idx=jnp.asarray(erecv_idx),
+            tsend_idx=jnp.asarray(tsend_idx), tsend_mask=jnp.asarray(tsend_mask),
+            trecv_idx=jnp.asarray(trecv_idx),
+            local_to_global=local_to_global, ledge_to_global=ledge_to_global,
+            assignment=assignment,
+        )
+
+    # ------------------------------------------------------------------
+    def shard_vertex_data(self, vertex_data: PyTree) -> PyTree:
+        """Global [Nv, ...] -> local [M, R, ...] (owned + ghost copies)."""
+        idx = np.where(self.local_to_global >= 0, self.local_to_global, 0)
+        sel = jnp.asarray(idx)
+        msk = jnp.asarray(self.local_to_global >= 0)
+        def shard(a):
+            out = a[sel.reshape(-1)].reshape((self.M, self.R) + a.shape[1:])
+            return out * jnp.asarray(
+                msk, out.dtype).reshape((self.M, self.R) + (1,) * (a.ndim - 1)) \
+                if jnp.issubdtype(out.dtype, jnp.floating) else out
+        return jax.tree.map(shard, vertex_data)
+
+    def shard_edge_data(self, edge_data: PyTree) -> PyTree:
+        idx = np.where(self.ledge_to_global >= 0, self.ledge_to_global, 0)
+        sel = jnp.asarray(idx)
+        def shard(a):
+            out = a[sel.reshape(-1)].reshape(
+                (self.M, self.E_loc) + a.shape[1:])
+            pad = jnp.zeros((self.M, 1) + a.shape[1:], a.dtype)
+            return jnp.concatenate([out, pad], axis=1)  # [M, E_loc+1, ...]
+        return jax.tree.map(shard, edge_data)
+
+    def unshard_vertex_data(self, local: PyTree, n_vertices: int) -> PyTree:
+        """Local [M, R, ...] -> global [Nv, ...] from owned rows."""
+        l2g = jnp.asarray(np.where(self.local_to_global >= 0,
+                                   self.local_to_global, n_vertices))
+        omask = np.asarray(self.owned_mask)
+        tgt = jnp.asarray(np.where(omask, np.asarray(l2g), n_vertices))
+        def unshard(a):
+            flat = a.reshape((self.M * self.R,) + a.shape[2:])
+            out = jnp.zeros((n_vertices,) + a.shape[2:], a.dtype)
+            return out.at[tgt.reshape(-1)].set(flat, mode="drop")
+        return jax.tree.map(unshard, local)
+
+
+# ======================================================================
+@dataclasses.dataclass
+class DistributedChromaticEngine:
+    """Chromatic engine over a 1-D device mesh via shard_map."""
+
+    graph: DataGraph
+    plan: ShardPlan
+    update_fn: UpdateFn
+    syncs: Sequence[SyncOp] = ()
+    max_supersteps: int = 100
+    exchange_edges: bool = False   # app writes edge data on cut edges?
+    axis: str = "shard"
+
+    def __post_init__(self):
+        devs = jax.devices()
+        if len(devs) < self.plan.M:
+            raise ValueError(f"need {self.plan.M} devices, have {len(devs)}")
+        self.mesh = Mesh(np.array(devs[: self.plan.M]), (self.axis,))
+
+    # -- per-shard program (runs under shard_map; leading dim 1) --------
+    def _local_struct(self, p_nbrs, p_mask, p_eids, p_issrc, p_deg):
+        return LocalStruct(p_nbrs, p_mask, p_eids, p_issrc, p_deg, self.plan.R)
+
+    def _build_step(self):
+        plan, upd, axis = self.plan, self.update_fn, self.axis
+        M = plan.M
+
+        def color_phase(c, carry, struct, plan_b, globals_):
+            vdata, edata, active, priority, n_upd = carry
+            ids = plan_b["color_ids"][c]
+            valid = plan_b["color_valid"][c]
+            sel = valid & active[ids]
+            scope = gather_scopes(struct, vdata, edata, ids, globals_)
+            res = upd(scope)
+            vdata, edata = scatter_result(struct, vdata, edata, ids, sel,
+                                          scope, res)
+            safe_ids = jnp.where(sel, ids, plan.R)
+            active = active.at[safe_ids].set(False, mode="drop")
+            priority = priority.at[safe_ids].set(0.0, mode="drop")
+            if res.resched_self is not None:
+                re_self = sel & res.resched_self
+                active = active.at[jnp.where(re_self, ids, plan.R)].set(
+                    True, mode="drop")
+                if res.priority is not None:
+                    priority = priority.at[ids].max(
+                        jnp.where(re_self, res.priority, -jnp.inf))
+            if res.resched_nbrs is not None:
+                nmask = scope.nbr_mask & sel[:, None] & res.resched_nbrs
+                safe = jnp.where(nmask, scope.nbr_ids, plan.R)
+                active = active.at[safe.reshape(-1)].max(
+                    nmask.reshape(-1), mode="drop")
+                if res.priority is not None:
+                    pr = jnp.where(nmask, res.priority[:, None], -jnp.inf)
+                    priority = priority.at[safe.reshape(-1)].max(
+                        pr.reshape(-1), mode="drop")
+            n_upd = n_upd + sel.sum(dtype=jnp.int32)
+
+            # ---- ghost data push (owner -> ghost) ----
+            sidx, smask = plan_b["send_idx"][c], plan_b["send_mask"][c]
+            ridx = plan_b["recv_idx"][c]          # [M, Hv]
+            def push_v(arr):
+                buf = arr[sidx]                    # [M, Hv, ...]
+                buf = jax.lax.all_to_all(buf, axis, 0, 0, tiled=True)
+                return arr.at[ridx.reshape(-1)].set(
+                    buf.reshape((-1,) + buf.shape[2:]), mode="drop")
+            vdata = jax.tree.map(push_v, vdata)
+
+            if self.exchange_edges:
+                esidx = plan_b["esend_idx"][c]
+                eridx = plan_b["erecv_idx"][c]
+                def push_e(arr):
+                    buf = arr[esidx]
+                    buf = jax.lax.all_to_all(buf, axis, 0, 0, tiled=True)
+                    return arr.at[eridx.reshape(-1)].set(
+                        buf.reshape((-1,) + buf.shape[2:]), mode="drop")
+                edata = jax.tree.map(push_e, edata)
+
+            # ---- task backflow (ghost flags/priority -> owner) ----
+            tsidx, tsmask = plan_b["tsend_idx"], plan_b["tsend_mask"]
+            tridx = plan_b["trecv_idx"]
+            flags = active[tsidx] & tsmask                        # [M, Hg]
+            prios = jnp.where(flags, priority[tsidx], -jnp.inf)
+            fb = jax.lax.all_to_all(
+                jnp.stack([flags.astype(jnp.float32), prios], -1),
+                axis, 0, 0, tiled=True)                           # [M, Hg, 2]
+            inflag = fb[..., 0] > 0.5
+            active = active.at[tridx.reshape(-1)].max(
+                inflag.reshape(-1), mode="drop")
+            priority = priority.at[tridx.reshape(-1)].max(
+                jnp.where(inflag, fb[..., 1], -jnp.inf).reshape(-1),
+                mode="drop")
+            # consume ghost-side flags (they now live at the owner)
+            cleared = active.at[jnp.where(tsmask, tsidx, plan.R).reshape(-1)
+                                ].set(False, mode="drop")
+            active = cleared
+            return (vdata, edata, active, priority, n_upd)
+
+        def superstep(state, struct, plan_b, n_colors):
+            vdata, edata, active, priority, globals_, step, n_upd = state
+            carry = (vdata, edata, active, priority, n_upd)
+            carry = jax.lax.fori_loop(
+                0, n_colors,
+                lambda c, s: color_phase(c, s, struct, plan_b, globals_),
+                carry)
+            vdata, edata, active, priority, n_upd = carry
+            new_globals = dict(globals_)
+            for s_op in self.syncs:
+                due = (step + 1) % max(s_op.tau, 1) == 0
+                part = s_op.local_reduce(vdata, valid=plan_b["owned_mask"])
+                parts = jax.tree.map(
+                    lambda x: jax.lax.all_gather(x, axis), part)
+                acc = jax.tree.map(lambda x: x[0], parts)
+                for m in range(1, M):
+                    acc = s_op.merge(acc, jax.tree.map(lambda x: x[m], parts))
+                fresh = s_op.finalize(acc)
+                new_globals[s_op.key] = jax.tree.map(
+                    lambda new, old: jnp.where(due, new, old),
+                    fresh, globals_[s_op.key])
+            return (vdata, edata, active, priority, new_globals,
+                    step + 1, n_upd)
+
+        return color_phase, superstep
+
+    # ------------------------------------------------------------------
+    def run(self, active: np.ndarray | None = None,
+            num_supersteps: int | None = None):
+        plan = self.plan
+        nv = self.graph.n_vertices
+        vdata0 = plan.shard_vertex_data(self.graph.vertex_data)
+        # strip the global pad row before sharding edges
+        edata_global = jax.tree.map(lambda a: a[:-1], self.graph.edge_data)
+        edata0 = plan.shard_edge_data(edata_global)
+        if active is None:
+            active = np.ones(nv, bool)
+        act_global = jnp.asarray(active)
+        act0 = plan.shard_vertex_data({"a": act_global})["a"] \
+            & plan.owned_mask
+        prio0 = act0.astype(jnp.float32)
+        globals0 = {s.key: s.run(self.graph.vertex_data) for s in self.syncs}
+
+        plan_arrays = dict(
+            nbrs=plan.nbrs, nbr_mask=plan.nbr_mask, edge_ids=plan.edge_ids,
+            is_src=plan.is_src, degree=plan.degree,
+            owned_mask=plan.owned_mask,
+            color_ids=plan.color_ids, color_valid=plan.color_valid,
+            send_idx=plan.send_idx, send_mask=plan.send_mask,
+            recv_idx=plan.recv_idx, esend_idx=plan.esend_idx,
+            esend_mask=plan.esend_mask, erecv_idx=plan.erecv_idx,
+            tsend_idx=plan.tsend_idx, tsend_mask=plan.tsend_mask,
+            trecv_idx=plan.trecv_idx,
+        )
+        _, superstep = self._build_step()
+        n_colors = plan.n_colors
+        axis = self.axis
+        max_ss = self.max_supersteps
+        fixed = num_supersteps
+
+        def shard_fn(plan_blk, vdata, edata, act, prio, globals_):
+            # blocks arrive with leading dim 1; squeeze it
+            plan_b = jax.tree.map(lambda a: a[0], plan_blk)
+            vdata = jax.tree.map(lambda a: a[0], vdata)
+            edata = jax.tree.map(lambda a: a[0], edata)
+            act, prio = act[0], prio[0]
+            struct = LocalStruct(plan_b["nbrs"], plan_b["nbr_mask"],
+                                 plan_b["edge_ids"], plan_b["is_src"],
+                                 plan_b["degree"], plan.R)
+            state = (vdata, edata, act, prio, globals_, jnp.int32(0),
+                     jnp.int32(0))
+
+            def body(state):
+                return superstep(state, struct, plan_b, n_colors)
+
+            if fixed is not None:
+                for _ in range(fixed):
+                    state = body(state)
+            else:
+                def cond(state):
+                    act_l = state[2] & plan_b["owned_mask"]
+                    total = jax.lax.psum(act_l.sum(dtype=jnp.int32), axis)
+                    return (total > 0) & (state[5] < max_ss)
+                state = jax.lax.while_loop(cond, body, state)
+            vdata, edata, act, prio, globals_, step, n_upd = state
+            n_upd = jax.lax.psum(n_upd, axis)
+            expand = lambda t: jax.tree.map(lambda a: a[None], t)
+            return (expand(vdata), expand(edata), act[None], prio[None],
+                    globals_, step, n_upd)
+
+        from jax.experimental.shard_map import shard_map
+        spec_s = P(self.axis)
+        fn = shard_map(
+            shard_fn, mesh=self.mesh,
+            in_specs=(spec_s, spec_s, spec_s, spec_s, spec_s, P()),
+            out_specs=(spec_s, spec_s, spec_s, spec_s, P(), P(), P()),
+            check_rep=False)
+        with jax.transfer_guard("allow"):
+            out = jax.jit(fn)(plan_arrays, vdata0, edata0, act0, prio0,
+                              globals0)
+        vdata, edata, act, prio, globals_, step, n_upd = out
+        result_vdata = plan.unshard_vertex_data(vdata, nv)
+        return dict(
+            vertex_data=result_vdata,
+            local_vertex_data=vdata,
+            local_edge_data=edata,
+            globals=globals_,
+            supersteps=int(step),
+            n_updates=int(n_upd),
+            active_any=bool((act & plan.owned_mask).any()),
+        )

@@ -1,0 +1,34 @@
+"""BSP / Jacobi baseline engine — the "Pregel/Hadoop-style" comparison.
+
+All active vertices update simultaneously from the *previous* superstep's
+data (bulk-synchronous, no sequential consistency across the step).  This
+is precisely the chromatic engine run with the trivial single coloring
+(every vertex one color): the per-phase snapshot semantics make every
+update read pre-step data.  The paper's Fig. 1 (consistent vs
+inconsistent ALS) and the Hadoop comparisons (§6.2) are reproduced
+against this engine.
+
+For the *message materialization* cost model of MapReduce (the paper's
+"the Map only serves to emit the vertex probability table for every
+edge"), see ``repro.baselines.mapreduce``: the same computation phrased
+so that every edge materializes a full message, whose byte volume the
+benchmark accounts.
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import numpy as np
+
+from repro.core.coloring import single_color
+from repro.core.engine_chromatic import ChromaticEngine
+from repro.core.graph import DataGraph
+from repro.core.sync import SyncOp
+from repro.core.update import UpdateFn
+
+
+def bsp_engine(graph: DataGraph, update_fn: UpdateFn,
+               syncs: Sequence[SyncOp] = (), max_supersteps: int = 100
+               ) -> ChromaticEngine:
+    g = graph.with_colors(single_color(graph.n_vertices))
+    return ChromaticEngine(g, update_fn, syncs, max_supersteps)

@@ -1,0 +1,66 @@
+"""Sequential reference executor — the oracle for Def. 3.1.
+
+Executes update tasks strictly one at a time in the chromatic engine's
+canonical (color, vertex-id) order, calling the *same* vectorized update
+function with batch size 1.  A parallel engine is sequentially consistent
+iff its resulting data graph equals this executor's bit-for-bit (for a
+deterministic update function).  Used only in tests; intentionally
+unjitted and simple.
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.graph import DataGraph
+from repro.core.sync import SyncOp
+from repro.core.update import UpdateFn, gather_scopes, scatter_result
+
+
+def run_sequential(
+    graph: DataGraph,
+    update_fn: UpdateFn,
+    syncs: Sequence[SyncOp] = (),
+    active: np.ndarray | None = None,
+    max_supersteps: int = 100,
+):
+    """Returns (vertex_data, edge_data, globals, n_updates)."""
+    nv = graph.n_vertices
+    colors = np.asarray(graph.colors)
+    n_colors = int(colors.max()) + 1 if colors.size else 1
+    per_color = [np.nonzero(colors == c)[0] for c in range(n_colors)]
+    vdata, edata = graph.vertex_data, graph.edge_data
+    act = np.ones(nv, bool) if active is None else np.asarray(active).copy()
+    globals_ = {s.key: s.run(vdata) for s in syncs}
+    n_updates = 0
+
+    for step in range(max_supersteps):
+        if not act.any():
+            break
+        for c in range(n_colors):
+            # snapshot the phase's task selection exactly like the engine:
+            # tasks added *during* phase c run no earlier than phase c+1.
+            sel = [v for v in per_color[c] if act[v]]
+            for v in sel:
+                ids = jnp.asarray([v], jnp.int32)
+                scope = gather_scopes(graph, vdata, edata, ids, globals_)
+                res = update_fn(scope)
+                valid = jnp.ones((1,), bool)
+                vdata, edata = scatter_result(
+                    graph, vdata, edata, ids, valid, scope, res)
+                act[v] = False
+                if res.resched_self is not None and bool(res.resched_self[0]):
+                    act[v] = True
+                if res.resched_nbrs is not None:
+                    nmask = np.asarray(scope.nbr_mask[0] & res.resched_nbrs[0])
+                    for j, nb in enumerate(np.asarray(scope.nbr_ids[0])):
+                        if nmask[j]:
+                            act[int(nb)] = True
+                n_updates += 1
+        for s in syncs:
+            if (step + 1) % max(s.tau, 1) == 0:
+                globals_[s.key] = s.run(vdata)
+    return vdata, edata, globals_, n_updates

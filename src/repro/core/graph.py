@@ -1,0 +1,178 @@
+"""The GraphLab data graph (paper §3.1), adapted to static-shape JAX arrays.
+
+The paper's data graph G = (V, E, D) stores mutable user data on vertices
+and (optionally directed) edges while the *structure* is static.  That
+static-structure guarantee is exactly what ``jit`` wants: we freeze the
+adjacency into padded ELL form (``[Nv, max_deg]``) once, and all engine
+iterations are pure array programs over it.
+
+Conventions
+-----------
+* ``nbrs[v, j]``      -- vertex id of the j-th neighbor of v (0 if padded)
+* ``nbr_mask[v, j]``  -- True for real neighbor slots
+* ``edge_ids[v, j]``  -- id of the edge {v, nbrs[v,j]}; padded slots point
+                         at the *pad edge* row ``n_edges`` so that scatters
+                         to padded slots are harmless.
+* ``is_src[v, j]``    -- True iff v is endpoint 0 of that edge.  This is how
+                         the paper's "data on directed edges" (D_{u->v} vs
+                         D_{v->u}) is recovered from an undirected adjacency:
+                         edge data may carry separate fields per direction
+                         and the update function picks using ``is_src``.
+
+Vertex data and edge data are pytrees of arrays with leading dim ``Nv``
+resp. ``n_edges + 1`` (one pad row).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PyTree = Any
+
+
+def _tree_pad_rows(tree: PyTree, n_rows: int) -> PyTree:
+    """Append ``n_rows`` zero rows to every leaf (leading axis)."""
+    def pad(a):
+        a = jnp.asarray(a)
+        pad_shape = (n_rows,) + a.shape[1:]
+        return jnp.concatenate([a, jnp.zeros(pad_shape, a.dtype)], axis=0)
+    return jax.tree.map(pad, tree)
+
+
+@dataclasses.dataclass
+class DataGraph:
+    """Static graph structure + mutable vertex/edge data (device arrays)."""
+
+    n_vertices: int
+    n_edges: int
+    max_deg: int
+    # --- static structure (int32 / bool device arrays) ---
+    nbrs: jax.Array            # [Nv, max_deg] int32
+    nbr_mask: jax.Array        # [Nv, max_deg] bool
+    edge_ids: jax.Array        # [Nv, max_deg] int32 (pad slots -> n_edges)
+    is_src: jax.Array          # [Nv, max_deg] bool
+    degree: jax.Array          # [Nv] int32
+    # --- mutable user data ---
+    vertex_data: PyTree        # leaves [Nv, ...]
+    edge_data: PyTree          # leaves [n_edges + 1, ...] (last row = pad)
+    # --- host-side copies of structure for partitioning / coloring ---
+    edges_np: np.ndarray       # [n_edges, 2] int64 host copy
+    # --- optional annotations ---
+    colors: jax.Array | None = None   # [Nv] int32, attached by coloring.py
+    n_colors: int = 0
+
+    # ------------------------------------------------------------------
+    @staticmethod
+    def from_edges(
+        n_vertices: int,
+        edges: np.ndarray,
+        vertex_data: PyTree,
+        edge_data: PyTree = None,
+        max_deg: int | None = None,
+    ) -> "DataGraph":
+        """Build the padded ELL structure from an undirected edge list.
+
+        ``edges``: [Ne, 2] integer array, each row an undirected edge
+        {u, v} (self loops and duplicates are the caller's business;
+        both are handled but duplicates count twice toward degree).
+        """
+        edges = np.asarray(edges, dtype=np.int64)
+        if edges.size == 0:
+            edges = edges.reshape(0, 2)
+        ne = len(edges)
+        deg = np.zeros(n_vertices, dtype=np.int64)
+        for col in (0, 1):
+            np.add.at(deg, edges[:, col], 1)
+        md = int(deg.max()) if ne else 1
+        if max_deg is not None:
+            if max_deg < md:
+                raise ValueError(f"max_deg={max_deg} < actual max degree {md}")
+            md = max_deg
+        md = max(md, 1)
+
+        nbrs = np.zeros((n_vertices, md), dtype=np.int32)
+        mask = np.zeros((n_vertices, md), dtype=bool)
+        eids = np.full((n_vertices, md), ne, dtype=np.int32)  # pad edge
+        is_src = np.zeros((n_vertices, md), dtype=bool)
+        cursor = np.zeros(n_vertices, dtype=np.int64)
+        us, vs = edges[:, 0], edges[:, 1]
+        for e in range(ne):
+            u, v = us[e], vs[e]
+            cu, cv = cursor[u], cursor[v]
+            nbrs[u, cu], mask[u, cu], eids[u, cu], is_src[u, cu] = v, True, e, True
+            cursor[u] = cu + 1
+            nbrs[v, cv], mask[v, cv], eids[v, cv] = u, True, e
+            cursor[v] = cv + 1
+
+        edge_data = {} if edge_data is None else edge_data
+        return DataGraph(
+            n_vertices=n_vertices,
+            n_edges=ne,
+            max_deg=md,
+            nbrs=jnp.asarray(nbrs),
+            nbr_mask=jnp.asarray(mask),
+            edge_ids=jnp.asarray(eids),
+            is_src=jnp.asarray(is_src),
+            degree=jnp.asarray(deg, dtype=jnp.int32),
+            vertex_data=jax.tree.map(jnp.asarray, vertex_data),
+            edge_data=_tree_pad_rows(edge_data, 1),
+            edges_np=edges,
+        )
+
+    # ------------------------------------------------------------------
+    def with_colors(self, colors: np.ndarray) -> "DataGraph":
+        colors = np.asarray(colors)
+        return dataclasses.replace(
+            self,
+            colors=jnp.asarray(colors, dtype=jnp.int32),
+            n_colors=int(colors.max()) + 1 if colors.size else 1,
+        )
+
+    def replace_data(self, vertex_data=None, edge_data=None) -> "DataGraph":
+        return dataclasses.replace(
+            self,
+            vertex_data=self.vertex_data if vertex_data is None else vertex_data,
+            edge_data=self.edge_data if edge_data is None else edge_data,
+        )
+
+    # convenience -------------------------------------------------------
+    @property
+    def adjacency_lists(self) -> list[list[int]]:
+        """Host-side adjacency (for coloring / partitioning / oracles)."""
+        adj: list[list[int]] = [[] for _ in range(self.n_vertices)]
+        for u, v in self.edges_np:
+            adj[int(u)].append(int(v))
+            adj[int(v)].append(int(u))
+        return adj
+
+
+def bipartite_edges(n_left: int, n_right: int, pairs: np.ndarray) -> tuple[int, np.ndarray]:
+    """Helper: map (left_i, right_j) pairs to global vertex ids.
+
+    Left vertices get ids [0, n_left), right vertices [n_left, n_left+n_right).
+    Returns (n_vertices, edges).
+    """
+    pairs = np.asarray(pairs, dtype=np.int64)
+    edges = np.stack([pairs[:, 0], pairs[:, 1] + n_left], axis=1)
+    return n_left + n_right, edges
+
+
+def grid_edges_3d(nx: int, ny: int, nz: int) -> tuple[int, np.ndarray]:
+    """6-connected 3-D grid (the CoSeg super-pixel graph, paper §5.2)."""
+    def vid(x, y, z):
+        return (x * ny + y) * nz + z
+    edges = []
+    for x in range(nx):
+        for y in range(ny):
+            for z in range(nz):
+                if x + 1 < nx:
+                    edges.append((vid(x, y, z), vid(x + 1, y, z)))
+                if y + 1 < ny:
+                    edges.append((vid(x, y, z), vid(x, y + 1, z)))
+                if z + 1 < nz:
+                    edges.append((vid(x, y, z), vid(x, y, z + 1)))
+    return nx * ny * nz, np.asarray(edges, dtype=np.int64)

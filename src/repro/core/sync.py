@@ -1,0 +1,124 @@
+"""The sync operation (paper §3.3): (Key, Fold, Merge, Finalize, acc0, tau).
+
+Fold aggregates vertex data into an accumulator, Merge combines partial
+accumulators (the paper's "Global Synchronous Reduce"), Finalize transforms
+the final value, and the result is stored globally under Key for update
+functions to read.  tau is the interval (in engine supersteps here; the
+paper leaves the resolution to the implementation, see its footnote 2).
+
+Fold must be expressible as a commutative-associative reduction for a
+parallel implementation — the same requirement the paper's distributed
+runtime imposes implicitly (Fold runs per-machine, Merge combines
+machines).  We execute Fold as a ``lax.scan``-free tree reduction: first
+``fold`` is applied to each vertex independently against ``acc0`` (a
+"contribution"), then ``merge`` tree-reduces.  For the common map-reduce
+style syncs (sums, top-k, error norms) this is exact and fast; a strictly
+sequential Fold can be requested with ``sequential=True`` (lax.scan).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class SyncOp:
+    key: str
+    fold: Callable[[PyTree, PyTree], PyTree]      # (acc, v_data_row) -> acc
+    merge: Callable[[PyTree, PyTree], PyTree]     # (acc, acc') -> acc
+    finalize: Callable[[PyTree], PyTree]          # acc -> result
+    acc0: PyTree
+    tau: int = 1            # run every `tau` supersteps
+    sequential: bool = False
+
+    def local_reduce(self, vertex_data: PyTree, valid: jax.Array | None = None) -> PyTree:
+        """Fold+Merge over the local vertex set -> partial accumulator."""
+        n = jax.tree.leaves(vertex_data)[0].shape[0]
+        if self.sequential:
+            def body(acc, row):
+                vrow, ok = row
+                new = self.fold(acc, vrow)
+                if valid is not None:
+                    new = jax.tree.map(lambda a, b: jnp.where(ok, a, b), new, acc)
+                return new, None
+            ok = valid if valid is not None else jnp.ones((n,), bool)
+            acc, _ = jax.lax.scan(body, self.acc0, (vertex_data, ok))
+            return acc
+        # parallel path: per-vertex contribution then tree-reduce with merge
+        contrib = jax.vmap(lambda row: self.fold(self.acc0, row))(vertex_data)
+        if valid is not None:
+            acc0_b = jax.tree.map(
+                lambda a: jnp.broadcast_to(a, (n,) + jnp.shape(a)), self.acc0)
+            contrib = jax.tree.map(
+                lambda c, z: jnp.where(
+                    valid.reshape((-1,) + (1,) * (c.ndim - 1)), c, z),
+                contrib, acc0_b)
+
+        def tree_reduce(c):
+            m = jax.tree.leaves(c)[0].shape[0]
+            while m > 1:
+                half = m // 2
+                a = jax.tree.map(lambda x: x[:half], c)
+                b = jax.tree.map(lambda x: x[half:2 * half], c)
+                merged = jax.vmap(self.merge)(a, b)
+                if m % 2:
+                    tail = jax.tree.map(lambda x: x[m - 1:m], c)
+                    merged = jax.tree.map(
+                        lambda x, t: jnp.concatenate([x, t], 0), merged, tail)
+                c = merged
+                m = half + (m % 2)
+            return jax.tree.map(lambda x: x[0], c)
+
+        return tree_reduce(contrib)
+
+    def run(self, vertex_data: PyTree, valid: jax.Array | None = None) -> PyTree:
+        return self.finalize(self.local_reduce(vertex_data, valid))
+
+
+def sum_sync(key: str, value_fn: Callable[[PyTree], jax.Array], tau: int = 1,
+             finalize: Callable | None = None, init=0.0) -> SyncOp:
+    """Convenience constructor for the ubiquitous additive sync."""
+    return SyncOp(
+        key=key,
+        fold=lambda acc, row: acc + value_fn(row),
+        merge=lambda a, b: a + b,
+        finalize=finalize or (lambda a: a),
+        acc0=jnp.asarray(init, jnp.float32),
+        tau=tau,
+    )
+
+
+def top_two_sync(key: str, rank_fn: Callable[[PyTree], jax.Array], id_fn=None,
+                 tau: int = 1) -> SyncOp:
+    """The paper's running example: second most popular page (§3.3).
+
+    acc = (top2 values, top2 ids); Finalize extracts entry [1].
+    """
+    neg = jnp.asarray(-jnp.inf, jnp.float32)
+
+    def fold(acc, row):
+        vals, ids = acc
+        r = rank_fn(row).astype(jnp.float32)
+        i = (id_fn(row) if id_fn is not None else jnp.int32(-1))
+        allv = jnp.concatenate([vals, r[None]])
+        alli = jnp.concatenate([ids, jnp.asarray(i, jnp.int32)[None]])
+        top, idx = jax.lax.top_k(allv, 2)
+        return (top, alli[idx])
+
+    def merge(a, b):
+        allv = jnp.concatenate([a[0], b[0]])
+        alli = jnp.concatenate([a[1], b[1]])
+        top, idx = jax.lax.top_k(allv, 2)
+        return (top, alli[idx])
+
+    return SyncOp(
+        key=key, fold=fold, merge=merge,
+        finalize=lambda acc: (acc[0][1], acc[1][1]),
+        acc0=(jnp.full((2,), neg), jnp.full((2,), -1, jnp.int32)),
+        tau=tau,
+    )

@@ -1,0 +1,146 @@
+"""Update functions and scopes (paper §3.2) in vectorized JAX form.
+
+The paper's update function is ``Update : (v, S_v) -> (S_v, T)`` — a
+stateless procedure over the scope of a single vertex that returns the
+modified scope and a set of new tasks.  Under ``jit`` we execute a whole
+*batch* of non-adjacent vertices at once (the engines guarantee
+non-adjacency per the chosen consistency model), so the user writes the
+same scope program but over a leading batch axis:
+
+    def update(scope: ScopeBatch) -> UpdateResult: ...
+
+Everything in ``ScopeBatch`` has a leading axis B = number of vertices in
+the batch.  Padded neighbor slots have ``nbr_mask == False``; user code
+must mask with it (exactly like the paper's user code must iterate only
+real neighbors).
+
+Task scheduling (the returned set T) is expressed by ``resched_self``
+(schedule myself again) and ``resched_nbrs`` (schedule neighbor slots),
+plus an optional ``priority`` used by the priority engine — this is the
+paper's "reschedule neighbors only on substantial change" adaptivity.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+class Consistency(enum.Enum):
+    """Paper §3.5 consistency models."""
+    FULL = "full"        # exclusive R/W on whole scope  -> distance-2 coloring
+    EDGE = "edge"        # R/W vertex+edges, R neighbors -> distance-1 coloring
+    VERTEX = "vertex"    # R/W vertex only               -> single color
+    UNSAFE = "unsafe"    # no guarantee (paper: "at their own risk")
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class ScopeBatch:
+    """The scopes S_v of a batch of vertices, materialized by gathers."""
+    v_ids: jax.Array        # [B] int32 vertex ids
+    v_data: PyTree          # [B, ...]      central vertex data (R/W)
+    nbr_ids: jax.Array      # [B, D] int32
+    nbr_mask: jax.Array     # [B, D] bool
+    nbr_data: PyTree        # [B, D, ...]   adjacent vertex data (R; R/W if FULL)
+    edge_data: PyTree       # [B, D, ...]   adjacent edge data (R/W if EDGE/FULL)
+    is_src: jax.Array       # [B, D] bool   True iff v is endpoint 0 of slot edge
+    degree: jax.Array       # [B] int32
+    globals: dict           # latest sync-op results, keyed by SyncOp.key
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class UpdateResult:
+    v_data: PyTree                       # [B, ...] new central vertex data
+    edge_data: PyTree | None = None      # [B, D, ...] new adjacent edge data
+    nbr_data: PyTree | None = None       # [B, D, ...] new adjacent vertex data (FULL only)
+    resched_self: jax.Array | None = None   # [B] bool
+    resched_nbrs: jax.Array | None = None   # [B, D] bool
+    priority: jax.Array | None = None       # [B] float32 (priority engine)
+
+
+@dataclasses.dataclass(frozen=True)
+class UpdateFn:
+    """An update function plus the consistency model it requires."""
+    fn: Callable[[ScopeBatch], UpdateResult]
+    consistency: Consistency = Consistency.EDGE
+    name: str = "update"
+
+    def __call__(self, scope: ScopeBatch) -> UpdateResult:
+        return self.fn(scope)
+
+
+# ----------------------------------------------------------------------
+# Scope materialization: the gather (pull) half of the engine.
+# ----------------------------------------------------------------------
+
+def gather_scopes(graph_struct, vertex_data, edge_data, v_ids, globals_) -> ScopeBatch:
+    """Materialize ScopeBatch for the vertex ids ``v_ids`` ([B] int32).
+
+    ``graph_struct`` is anything exposing nbrs / nbr_mask / edge_ids /
+    is_src / degree arrays (a DataGraph or a ShardedGraph local block).
+    """
+    nbrs = graph_struct.nbrs[v_ids]            # [B, D]
+    mask = graph_struct.nbr_mask[v_ids]
+    eids = graph_struct.edge_ids[v_ids]
+    take_v = lambda a: a[v_ids]
+    take_n = lambda a: a[nbrs]
+    take_e = lambda a: a[eids]
+    return ScopeBatch(
+        v_ids=v_ids,
+        v_data=jax.tree.map(take_v, vertex_data),
+        nbr_ids=nbrs,
+        nbr_mask=mask,
+        nbr_data=jax.tree.map(take_n, vertex_data),
+        edge_data=jax.tree.map(take_e, edge_data),
+        is_src=graph_struct.is_src[v_ids],
+        degree=graph_struct.degree[v_ids],
+        globals=globals_,
+    )
+
+
+def scatter_result(
+    graph_struct, vertex_data, edge_data, v_ids, valid, scope: ScopeBatch,
+    result: UpdateResult,
+):
+    """Write back an UpdateResult (the push half).  ``valid`` masks padded
+    batch rows.  Engines guarantee batches are conflict-free for the
+    declared consistency model, so plain scatters are exact."""
+    nv_total = jax.tree.leaves(vertex_data)[0].shape[0]
+    safe_vids = jnp.where(valid, v_ids, nv_total)  # OOB sentinel -> dropped
+
+    def put_v(dst, new):
+        return dst.at[safe_vids].set(new, mode="drop")
+
+    vertex_data = jax.tree.map(lambda d, n: put_v(d, n), vertex_data, result.v_data)
+
+    if result.edge_data is not None:
+        eids = graph_struct.edge_ids[v_ids]                      # [B, D]
+        emask = scope.nbr_mask & valid[:, None]                  # [B, D]
+        # route masked-off writes to the pad edge row
+        pad = edge_data and jax.tree.leaves(edge_data)[0].shape[0] - 1
+        safe_eids = jnp.where(emask, eids, pad)
+        def put_e(dst, new):
+            flat_ids = safe_eids.reshape(-1)
+            flat_new = new.reshape((-1,) + new.shape[2:])
+            return dst.at[flat_ids].set(flat_new, mode="drop")
+        edge_data = jax.tree.map(lambda d, n: put_e(d, n), edge_data, result.edge_data)
+
+    if result.nbr_data is not None:
+        nbrs = scope.nbr_ids
+        nmask = scope.nbr_mask & valid[:, None]
+        nv = graph_struct.nbrs.shape[0]
+        safe_nbrs = jnp.where(nmask, nbrs, nv)  # drop OOB
+        def put_n(dst, new):
+            flat_ids = safe_nbrs.reshape(-1)
+            flat_new = new.reshape((-1,) + new.shape[2:])
+            return dst.at[flat_ids].set(flat_new, mode="drop")
+        vertex_data = jax.tree.map(lambda d, n: put_n(d, n), vertex_data, result.nbr_data)
+
+    return vertex_data, edge_data

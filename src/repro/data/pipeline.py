@@ -1,0 +1,85 @@
+"""Data pipeline: deterministic synthetic corpora + dry-run input specs.
+
+``make_batch`` produces real arrays for CPU smoke/examples;
+``input_specs`` produces ShapeDtypeStructs for the dry-run (weak-type
+correct, no allocation) for every (arch x input shape) combination —
+training batches, prefill request batches, or decode (token + ServeState)
+per the shape's kind.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import InputShape, ModelConfig
+from repro.serve import engine as serve_engine
+
+
+def _split_train_seq(cfg: ModelConfig, seq_len: int):
+    """audio: seq budget split between encoder frames and decoder tokens;
+    vlm: patch tokens carved out of the sequence."""
+    if cfg.arch_type == "audio":
+        return seq_len // 2, seq_len // 2
+    if cfg.arch_type == "vlm":
+        return cfg.n_frontend_tokens, seq_len - cfg.n_frontend_tokens
+    return 0, seq_len
+
+
+def make_batch(cfg: ModelConfig, batch: int, seq_len: int, seed: int = 0):
+    """Synthetic batch (markov-ish token stream so loss can decrease)."""
+    rng = np.random.default_rng(seed)
+    front, txt = _split_train_seq(cfg, seq_len)
+    # order-0 markov stream with skewed unigram distribution
+    probs = rng.dirichlet(np.full(min(cfg.vocab, 4096), 0.5))
+    ids = rng.choice(len(probs), size=(batch, txt + 1), p=probs)
+    tokens = jnp.asarray(ids[:, :-1], jnp.int32)
+    labels = jnp.asarray(ids[:, 1:], jnp.int32)
+    out = {"tokens": tokens, "labels": labels}
+    if cfg.arch_type == "audio":
+        out["frames"] = jnp.asarray(
+            rng.normal(size=(batch, front, cfg.d_model)), jnp.float32)
+    elif cfg.arch_type == "vlm":
+        out["patches"] = jnp.asarray(
+            rng.normal(size=(batch, front, cfg.d_model)), jnp.float32)
+    return out
+
+
+# ----------------------------------------------------------------------
+# Dry-run specs (ShapeDtypeStruct only)
+# ----------------------------------------------------------------------
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def train_input_specs(cfg: ModelConfig, shape: InputShape) -> dict:
+    b, s = shape.global_batch, shape.seq_len
+    front, txt = _split_train_seq(cfg, s)
+    out = {
+        "tokens": _sds((b, txt), jnp.int32),
+        "labels": _sds((b, txt), jnp.int32),
+    }
+    if cfg.arch_type == "audio":
+        out["frames"] = _sds((b, front, cfg.d_model), jnp.float32)
+    elif cfg.arch_type == "vlm":
+        out["patches"] = _sds((b, front, cfg.d_model), jnp.float32)
+    return out
+
+
+def decode_input_specs(cfg: ModelConfig, shape: InputShape):
+    """(token, ServeState) ShapeDtypeStructs for serve_step."""
+    b, s = shape.global_batch, shape.seq_len
+    cache = serve_engine.init_cache  # reuse the real structure via eval_shape
+    state = jax.eval_shape(lambda: cache(cfg, b, s))
+    token = _sds((b, 1), jnp.int32)
+    return token, state
+
+
+def param_specs_struct(cfg: ModelConfig, dtype=jnp.bfloat16):
+    """ShapeDtypeStructs for the full parameter pytree (no allocation)."""
+    from repro.models import model as M
+    return jax.eval_shape(
+        lambda: M.init_params(jax.random.PRNGKey(0), cfg, dtype))

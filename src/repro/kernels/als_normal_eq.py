@@ -1,0 +1,73 @@
+"""Pallas TPU kernel: batched ALS normal-equation accumulation.
+
+The O(d^3 + deg) ALS update (paper §5.1) splits into a deg-bound
+accumulation (this kernel) and a d^3 solve (LAPACK / jnp.linalg.solve
+outside).  Per vertex v with neighbor factors X_j = x[nbrs[v, j]]:
+
+    A[v] = sum_j m[v,j] * X_j X_j^T        [d, d]
+    b[v] = sum_j m[v,j] * r[v,j] * X_j     [d]
+
+Tiling mirrors ell_spmv: vertex row blocks on the grid, full shard-local
+factor block x resident in VMEM, static unroll over neighbor slots; the
+rank-1 accumulations are VPU outer products (d is small, 4-64 — the
+paper's Fig. 5a sweeps exactly this).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_TV = 128
+
+
+def _als_kernel(nbrs_ref, m_ref, r_ref, x_ref, a_ref, b_ref, *, max_deg: int):
+    nb = nbrs_ref[...]          # [TV, D]
+    m = m_ref[...]              # [TV, D]
+    r = r_ref[...]              # [TV, D]
+    x = x_ref[...]              # [R, d]
+    d = x.shape[1]
+    tv = nb.shape[0]
+    a = jnp.zeros((tv, d, d), x.dtype)
+    b = jnp.zeros((tv, d), x.dtype)
+    for j in range(max_deg):
+        xi = x[nb[:, j]]                         # [TV, d]
+        xm = xi * m[:, j][:, None]
+        a = a + xm[:, :, None] * xi[:, None, :]  # masked outer product
+        b = b + xm * r[:, j][:, None]
+    a_ref[...] = a
+    b_ref[...] = b
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def als_normal_eq(nbrs: jax.Array, mask: jax.Array, ratings: jax.Array,
+                  x: jax.Array, interpret: bool = False):
+    """Returns (A [Nv, d, d], b [Nv, d]); caller adds ridge and solves."""
+    nv, dd = nbrs.shape
+    r_, d = x.shape
+    tv = min(_TV, nv)
+    nv_pad = pl.cdiv(nv, tv) * tv
+    pad = lambda arr: jnp.zeros((nv_pad, dd), arr.dtype).at[:nv].set(arr)
+    m = mask.astype(x.dtype)
+    a, b = pl.pallas_call(
+        functools.partial(_als_kernel, max_deg=dd),
+        grid=(nv_pad // tv,),
+        in_specs=[
+            pl.BlockSpec((tv, dd), lambda i: (i, 0)),
+            pl.BlockSpec((tv, dd), lambda i: (i, 0)),
+            pl.BlockSpec((tv, dd), lambda i: (i, 0)),
+            pl.BlockSpec((r_, d), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((tv, d, d), lambda i: (i, 0, 0)),
+            pl.BlockSpec((tv, d), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((nv_pad, d, d), x.dtype),
+            jax.ShapeDtypeStruct((nv_pad, d), x.dtype),
+        ],
+        interpret=interpret,
+    )(pad(nbrs), pad(m), pad(ratings), x)
+    return a[:nv], b[:nv]

@@ -1,0 +1,39 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+On the CPU container the kernels run in ``interpret=True`` mode (Python
+emulation of the kernel body — the validation path the brief prescribes);
+on a TPU backend they compile to Mosaic.  ``use_pallas=False`` falls back
+to the pure-jnp oracle, which is also what the distributed engines use
+when shapes are too small to be worth a kernel launch.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels import ref
+from repro.kernels.ell_spmv import ell_spmv as _ell_spmv_kernel
+from repro.kernels.als_normal_eq import als_normal_eq as _als_kernel
+from repro.kernels.window_attention import (
+    decode_window_attention as _window_kernel)
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def ell_spmv(nbrs, w, x, use_pallas: bool = True):
+    if not use_pallas:
+        return ref.ell_spmv_ref(nbrs, w, x)
+    return _ell_spmv_kernel(nbrs, w, x, interpret=_interpret())
+
+
+def als_normal_eq(nbrs, mask, ratings, x, use_pallas: bool = True):
+    if not use_pallas:
+        return ref.als_normal_eq_ref(nbrs, mask, ratings, x)
+    return _als_kernel(nbrs, mask, ratings, x, interpret=_interpret())
+
+
+def decode_window_attention(q, k, v, kv_len, use_pallas: bool = True):
+    if not use_pallas:
+        return ref.decode_window_attention_ref(q, k, v, kv_len)
+    return _window_kernel(q, k, v, kv_len, interpret=_interpret())

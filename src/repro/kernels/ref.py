@@ -1,0 +1,31 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contract)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ell_spmv_ref(nbrs: jax.Array, w: jax.Array, x: jax.Array) -> jax.Array:
+    """y[v] = sum_j w[v,j] * x[nbrs[v,j]]."""
+    gathered = x[nbrs]                        # [Nv, D, F]
+    return (w[..., None] * gathered).sum(axis=1)
+
+
+def als_normal_eq_ref(nbrs, mask, ratings, x):
+    xg = x[nbrs]                              # [Nv, D, d]
+    m = mask.astype(x.dtype)
+    xm = xg * m[..., None]
+    a = jnp.einsum("vdi,vdj->vij", xm, xg)
+    b = jnp.einsum("vdi,vd->vi", xm, ratings)
+    return a, b
+
+
+def decode_window_attention_ref(q, k, v, kv_len):
+    """q: [B, dh]; k/v: [B, W, dh]; kv_len: [B]."""
+    scale = 1.0 / (q.shape[-1] ** 0.5)
+    s = jnp.einsum("bd,bwd->bw", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    pos = jnp.arange(k.shape[1])[None, :]
+    s = jnp.where(pos < kv_len[:, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bw,bwd->bd", p, v.astype(jnp.float32))

@@ -1,0 +1,99 @@
+"""Pallas TPU kernel: sliding-window flash attention, decode step.
+
+The serving hot loop for the long-context shapes (decode_32k, long_500k):
+one new query token attends to the last ``window`` entries of a KV cache.
+Flash-style online softmax over KV tiles keeps VMEM usage at one
+[TK, dh] K tile + one [TK, dh] V tile per step regardless of window
+length — the sub-quadratic serving path that lets full-attention
+architectures run the long_500k shape (DESIGN.md §5).
+
+Grid: (batch*heads, window tiles).  The running (max, denom, acc) state
+lives in the output refs across the KV-tile grid axis (TPU grids are
+sequential over the last axis, so carrying state is legal).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_TK = 512        # KV rows per tile
+
+
+def _decode_kernel(q_ref, k_ref, v_ref, len_ref, o_ref, m_ref, l_ref,
+                   acc_ref, *, tk: int, scale: float):
+    t = pl.program_id(1)
+    q = q_ref[...]              # [1, dh]
+    k = k_ref[0]                # [TK, dh]  (block carries a leading 1)
+    v = v_ref[0]                # [TK, dh]
+    kv_len = len_ref[0]         # valid cache length for this row
+
+    @pl.when(t == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, -jnp.inf)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    pos = t * tk + jax.lax.iota(jnp.int32, tk)
+    mask = pos < kv_len
+    s = (q @ k.T) * scale                        # [1, TK]
+    s = jnp.where(mask[None, :], s, -jnp.inf)
+    m_prev, l_prev = m_ref[...], l_ref[...]
+    m_cur = jnp.maximum(m_prev, s.max(axis=-1))
+    p = jnp.exp(s - m_cur[:, None])
+    p = jnp.where(mask[None, :], p, 0.0)
+    alpha = jnp.exp(m_prev - m_cur)
+    l_cur = alpha * l_prev + p.sum(axis=-1)
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + p @ v
+    m_ref[...] = m_cur
+    l_ref[...] = l_cur
+
+    @pl.when(t == pl.num_programs(1) - 1)
+    def _fini():
+        o_ref[...] = acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)[:, None]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def decode_window_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                            kv_len: jax.Array,
+                            interpret: bool = False) -> jax.Array:
+    """q: [B, dh]; k/v: [B, W, dh]; kv_len: [B] valid lengths.
+
+    Returns [B, dh].  B is batch*heads flattened; W the window capacity.
+    """
+    bh, dh = q.shape
+    w = k.shape[1]
+    tk = min(_TK, w)
+    w_pad = pl.cdiv(w, tk) * tk
+    if w_pad != w:
+        zk = jnp.zeros((bh, w_pad - w, dh), k.dtype)
+        k = jnp.concatenate([k, zk], axis=1)
+        v = jnp.concatenate([v, zk], axis=1)
+    scale = 1.0 / (dh ** 0.5)
+    grid = (bh, w_pad // tk)
+    out, _, _, _ = pl.pallas_call(
+        functools.partial(_decode_kernel, tk=tk, scale=scale),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, dh), lambda b, t: (b, 0)),
+            pl.BlockSpec((1, tk, dh), lambda b, t: (b, t, 0)),
+            pl.BlockSpec((1, tk, dh), lambda b, t: (b, t, 0)),
+            pl.BlockSpec((1,), lambda b, t: (b,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, dh), lambda b, t: (b, 0)),
+            pl.BlockSpec((1,), lambda b, t: (b,)),
+            pl.BlockSpec((1,), lambda b, t: (b,)),
+            pl.BlockSpec((1, dh), lambda b, t: (b, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bh, dh), jnp.float32),
+            jax.ShapeDtypeStruct((bh,), jnp.float32),
+            jax.ShapeDtypeStruct((bh,), jnp.float32),
+            jax.ShapeDtypeStruct((bh, dh), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q.astype(jnp.float32), k, v, kv_len.astype(jnp.int32))
+    return out

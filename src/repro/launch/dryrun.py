@@ -1,0 +1,218 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512").strip()
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh).
+
+For each combination this builds the production mesh, constructs
+ShapeDtypeStruct stand-ins for params/optimizer/batch (or token +
+ServeState for decode shapes), lowers the jitted step with explicit
+in/out shardings, compiles, and reports:
+
+  * memory_analysis()    — proves the step fits per-chip HBM
+  * cost_analysis()      — FLOPs / bytes for the roofline terms
+  * collective bytes     — parsed from the optimized HLO
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-4b \
+      --shape train_4k [--multi-pod] [--out results.json]
+  PYTHONPATH=src python -m repro.launch.dryrun --all
+"""
+import argparse
+import gzip
+import json
+import os as _os
+import sys
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro import configs
+from repro.configs.base import INPUT_SHAPES
+from repro.data import pipeline
+from repro.launch import sharding, shardctx
+from repro.launch.mesh import make_production_mesh
+from repro.optim import adamw
+from repro.roofline import analysis, hlo_parse
+from repro.train.steps import (make_prefill_step, make_serve_step,
+                               make_train_step)
+
+
+def dryrun_one(arch: str, shape_name: str, multi_pod: bool = False,
+               verbose: bool = True, serve_tp: bool = False,
+               tag: str = "") -> dict:
+    cfg = configs.get(arch)
+    shape = INPUT_SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.devices.size
+    mesh_name = "x".join(str(s) for s in mesh.devices.shape)
+
+    t0 = time.time()
+    params_s = pipeline.param_specs_struct(cfg)
+    # serving layout (pure TP, resident weights) only makes sense for
+    # inference shapes; training always uses FSDP x TP.
+    use_fsdp = not (serve_tp and shape.kind in ("decode", "prefill"))
+    pspecs = sharding.param_specs(params_s, cfg, mesh, fsdp=use_fsdp)
+
+    def ns(spec_tree):
+        return jax.tree.map(
+            lambda sp: NamedSharding(mesh, sp), spec_tree,
+            is_leaf=lambda x: isinstance(x, P))
+    shard = lambda tree, specs: jax.tree.map(
+        lambda s, sp: jax.ShapeDtypeStruct(
+            s.shape, s.dtype, sharding=NamedSharding(mesh, sp)),
+        tree, specs)
+
+    shardctx.set_mesh(mesh)
+    with mesh:
+        if shape.kind == "train":
+            batch_s = pipeline.train_input_specs(cfg, shape)
+            bspecs = sharding.batch_specs(cfg, shape, mesh, batch_s)
+            opt_s = jax.eval_shape(adamw.init, params_s)
+            ospecs = type(opt_s)(
+                m=pspecs, v=pspecs, step=P())
+            step = make_train_step(cfg, adamw.AdamWConfig())
+            fn = jax.jit(
+                step,
+                in_shardings=(ns(pspecs), ns(ospecs), ns(bspecs)),
+                out_shardings=(ns(pspecs), ns(ospecs), None),
+            )
+            args = (shard(params_s, pspecs),
+                    type(opt_s)(m=shard(opt_s.m, pspecs),
+                                v=shard(opt_s.v, pspecs),
+                                step=opt_s.step),
+                    shard(batch_s, bspecs))
+        elif shape.kind == "prefill":
+            batch_s = pipeline.train_input_specs(cfg, shape)
+            batch_s.pop("labels")
+            bspecs = sharding.batch_specs(cfg, shape, mesh, batch_s)
+            step = make_prefill_step(cfg)
+            fn = jax.jit(step, in_shardings=(ns(pspecs), ns(bspecs)),
+                         out_shardings=None)
+            args = (shard(params_s, pspecs), shard(batch_s, bspecs))
+        else:  # decode
+            token_s, state_s = pipeline.decode_input_specs(cfg, shape)
+            sspecs = sharding.serve_state_specs(cfg, shape, mesh, state_s)
+            tspec = sharding.batch_specs(cfg, shape, mesh,
+                                         {"t": token_s})["t"]
+            step = make_serve_step(cfg)
+            fn = jax.jit(step, in_shardings=(ns(pspecs), ns(tspec), ns(sspecs)),
+                         out_shardings=(None, ns(sspecs)))
+            args = (shard(params_s, pspecs),
+                    jax.ShapeDtypeStruct(
+                        token_s.shape, token_s.dtype,
+                        sharding=NamedSharding(mesh, tspec)),
+                    shard(state_s, sspecs))
+
+        lowered = fn.lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0]
+    hlo = compiled.as_text()
+    # cache the optimized HLO so the roofline walker can be re-run
+    # without recompiling (repro.roofline.reanalyze)
+    _os.makedirs("results/hlo", exist_ok=True)
+    hlo_path = (f"results/hlo/{arch}__{shape_name}__{mesh_name}"
+                f"{('__' + tag) if tag else ''}.txt.gz")
+    with gzip.open(hlo_path, "wt") as f:
+        f.write(hlo)
+    # proper accounting: walk the HLO with while-loop trip counts
+    # (cost_analysis visits scan bodies once — useless for scanned layers)
+    walked = hlo_parse.analyze(hlo)
+    # walker works on post-SPMD per-device shapes; the spec's formulas
+    # divide GLOBAL totals by chip count, so scale up.
+    flops = walked.flops * chips
+    bytes_ = walked.bytes * chips
+    coll_total = walked.coll_bytes * chips
+    mf = analysis.model_flops(cfg, shape)
+    bytes_per_chip = analysis.parse_memory_analysis(mem)
+
+    rf = analysis.Roofline(
+        name=f"{arch}:{shape_name}", mesh=mesh_name, chips=chips,
+        hlo_flops=flops, hlo_bytes=bytes_, coll_bytes=coll_total,
+        model_flops=mf, bytes_per_chip=bytes_per_chip)
+    row = rf.row()
+    row.update({
+        "coll_breakdown": {k: v * chips for k, v in
+                           walked.coll_breakdown.items()},
+        "xla_cost_analysis": {
+            "flops_body_once": float(cost.get("flops", 0.0)),
+            "bytes_body_once": float(cost.get("bytes accessed", 0.0)),
+        },
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "memory_analysis": {
+            "argument_gb": getattr(mem, "argument_size_in_bytes", 0) / 1e9,
+            "output_gb": getattr(mem, "output_size_in_bytes", 0) / 1e9,
+            "temp_gb": getattr(mem, "temp_size_in_bytes", 0) / 1e9,
+            "alias_gb": getattr(mem, "alias_size_in_bytes", 0) / 1e9,
+        },
+    })
+    if verbose:
+        ma = row["memory_analysis"]
+        print(f"[{arch} x {shape_name} @ {mesh_name}] "
+              f"compile {t_compile:.0f}s | "
+              f"args {ma['argument_gb']:.2f}GB out {ma['output_gb']:.2f}GB "
+              f"temp {ma['temp_gb']:.2f}GB | "
+              f"Tc {row['t_compute_s']:.3e} Tm {row['t_memory_s']:.3e} "
+              f"Tx {row['t_collective_s']:.3e} -> {row['bottleneck']} | "
+              f"useful {row['usefulness']:.2f}")
+        sys.stdout.flush()
+    return row
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--serve-tp", action="store_true",
+                    help="serving param layout (pure TP) for decode/prefill")
+    ap.add_argument("--tag", default="", help="HLO cache suffix")
+    ap.add_argument("--seq-shard", action="store_true",
+                    help="sequence-sharded residual stream (B3)")
+    ap.add_argument("--all", action="store_true",
+                    help="all (arch x shape) on the chosen mesh")
+    ap.add_argument("--out", default=None, help="append JSONL here")
+    args = ap.parse_args()
+
+    combos = []
+    if args.all:
+        for a in configs.ARCHS:
+            for s in INPUT_SHAPES:
+                combos.append((a, s))
+    else:
+        combos.append((args.arch, args.shape))
+
+    results = []
+    for arch, shape in combos:
+        try:
+            if args.seq_shard:
+                shardctx.set_residual_layout("seq")
+            row = dryrun_one(arch, shape, args.multi_pod,
+                             serve_tp=args.serve_tp, tag=args.tag)
+        except Exception as e:
+            row = {"name": f"{arch}:{shape}",
+                   "mesh": "2x16x16" if args.multi_pod else "16x16",
+                   "error": f"{type(e).__name__}: {e}"}
+            print(f"[{arch} x {shape}] FAILED: {row['error']}")
+            traceback.print_exc()
+        results.append(row)
+        if args.out:
+            with open(args.out, "a") as f:
+                f.write(json.dumps(row) + "\n")
+    n_fail = sum(1 for r in results if "error" in r)
+    print(f"\n{len(results) - n_fail}/{len(results)} combinations lowered "
+          f"and compiled successfully")
+    return 1 if n_fail else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

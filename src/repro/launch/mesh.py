@@ -1,0 +1,30 @@
+"""Production meshes (spec-mandated shapes).
+
+A FUNCTION, not a module-level constant, so importing never touches jax
+device state.  Single pod: 16x16 = 256 chips (v5e pod), axes
+("data", "model").  Multi-pod: 2 pods = 512 chips, axes
+("pod", "data", "model") — "pod" is pure data parallelism over the DCN.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(n: int | None = None, axis: str = "shard"):
+    """1-D mesh over local devices (graph engine / tests)."""
+    import numpy as np
+    from jax.sharding import Mesh
+    devs = jax.devices()
+    n = n or len(devs)
+    return Mesh(np.array(devs[:n]), (axis,))
+
+
+def data_axes(mesh) -> tuple:
+    """The batch/FSDP axis bundle: ("pod","data") multi-pod, else ("data",)."""
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))

@@ -1,0 +1,89 @@
+"""Mesh context for activation-sharding hints inside model code.
+
+The launcher (dryrun / train driver) installs the mesh here before
+tracing; model code then emits ``with_sharding_constraint`` with concrete
+``NamedSharding``s (which do not require an ambient mesh context).  When
+unset — CPU smoke tests, unit tests — every hint is a no-op.
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Any
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+_MESH: Any = None
+
+
+def set_mesh(mesh) -> None:
+    global _MESH
+    _MESH = mesh
+
+
+def get_mesh():
+    return _MESH
+
+
+@contextlib.contextmanager
+def use_mesh(mesh):
+    global _MESH
+    prev = _MESH
+    _MESH = mesh
+    try:
+        yield
+    finally:
+        _MESH = prev
+
+
+def hint(x, *spec):
+    """Apply a sharding constraint if a mesh is installed.
+
+    Axis names that do not exist on the mesh, or that do not divide the
+    corresponding dimension, are dropped (so one rule covers single-pod,
+    multi-pod, and reduced smoke configurations).
+    """
+    mesh = _MESH
+    if mesh is None:
+        return x
+    names = set(mesh.axis_names)
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+
+    fixed = []
+    for dim, ax in zip(x.shape, spec):
+        if ax is None:
+            fixed.append(None)
+            continue
+        axs = tuple(a for a in (ax if isinstance(ax, tuple) else (ax,))
+                    if a in names)
+        n = 1
+        for a in axs:
+            n *= sizes[a]
+        if axs and dim % n == 0:
+            fixed.append(axs if len(axs) > 1 else axs[0])
+        else:
+            fixed.append(None)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*fixed)))
+
+
+DP = ("pod", "data")    # batch/FSDP axis bundle
+TP = "model"
+
+# residual-stream layout between layers: "d" shards d_model over TP
+# (baseline), "seq" shards the sequence axis instead (Megatron-SP style;
+# §Perf iteration B3).
+RESIDUAL_LAYOUT = "d"
+
+
+def set_residual_layout(kind: str) -> None:
+    global RESIDUAL_LAYOUT
+    assert kind in ("d", "seq")
+    RESIDUAL_LAYOUT = kind
+
+
+def residual_hint(x):
+    """Apply the configured residual-stream sharding to [B, S, d]."""
+    if RESIDUAL_LAYOUT == "seq":
+        return hint(x, DP, TP, None)
+    return hint(x, DP, None, TP)

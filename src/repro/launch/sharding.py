@@ -1,0 +1,184 @@
+"""Sharding rules: param / batch / cache PartitionSpecs (FSDP x TP).
+
+Baseline layout (the §Perf baseline):
+  * weights: FSDP over the "data" axis bundle on the d_model-ish dim,
+    tensor parallel over "model" on heads / ffn-hidden / experts,
+  * activations: batch over the data bundle, GSPMD propagates the rest,
+  * KV caches: batch over data, cache rows over "model" when the batch
+    axis alone cannot hold them (decode_32k) or batch is 1 (long_500k).
+
+Rules are path-based over the param pytree; stacked layer axes (from the
+scan-over-layers representation) are transparently skipped by padding
+specs with leading None.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import InputShape, ModelConfig
+
+PyTree = Any
+
+
+def _rule(path: str, ndim: int, F, T):
+    """Returns the spec for the *trailing logical dims* of the param."""
+    if "norm" in path or path.endswith(("conv_b", "dt_bias", "D")):
+        return ()
+    if "embed" in path or path.endswith("out"):
+        return (T, F)
+    if path.endswith(("wq", "wk", "wv")):
+        return (F, T)
+    if path.endswith("wo"):
+        return (T, F)
+    if path.endswith("router"):
+        return (F, None)
+    if path.endswith(("w_gate", "w_up")):
+        return (F, T)
+    if path.endswith("w_down"):
+        return (T, F)
+    if path.endswith("in_proj"):
+        return (F, T)
+    if path.endswith("out_proj"):
+        return (T, F)
+    if path.endswith("x_proj"):
+        return (T, None)
+    if path.endswith("dt_proj"):
+        return (None, T)
+    if path.endswith("conv_w"):
+        return (None, T)
+    if path.endswith("A_log"):
+        return (T, None)
+    if path.endswith(("w1", "w2")):       # vlm projector
+        return (F, T) if path.endswith("w1") else (T, F)
+    return None   # replicate
+
+
+_MOE_KEYS = ("w_gate", "w_up", "w_down")
+
+
+def param_specs(params_struct: PyTree, cfg: ModelConfig, mesh,
+                fsdp: bool = True) -> PyTree:
+    """fsdp=False is the *serving* layout: weights resident, sharded over
+    the model axis only (no per-step FSDP all-gathers) — the §Perf
+    optimization for decode shapes."""
+    F = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+    F = (F if len(F) > 1 else (F[0] if F else None)) if fsdp else None
+    T = "model" if "model" in mesh.axis_names else None
+
+    def spec_for(path_elems, leaf):
+        path = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                        for k in path_elems)
+        ndim = leaf.ndim
+        # expert weights are logically rank-3 ([E, d, dff]); stacked
+        # layer axis makes them rank-4.  Dense MLP weights are rank-2/3.
+        logical_moe = any(path.endswith(k) for k in _MOE_KEYS) and ndim >= 4
+        base = _rule(path, ndim, F, T)
+        if base is None:
+            return P()
+        # expert weights: logical rank 3
+        if logical_moe:
+            base = {"w_gate": ("model", F, None), "w_up": ("model", F, None),
+                    "w_down": ("model", F, None)}[path.split("/")[-1]]
+        lead = ndim - len(base)
+        spec = (None,) * lead + tuple(base)
+        # guard: divisibility — drop axes that do not divide
+        sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+        fixed = []
+        for dim, ax in zip(leaf.shape[lead:] if lead >= 0 else leaf.shape,
+                           base):
+            if ax is None:
+                fixed.append(None)
+                continue
+            axsz = (sizes[ax] if isinstance(ax, str)
+                    else int(jnp.prod(jnp.asarray([sizes[a] for a in ax]))))
+            fixed.append(ax if dim % axsz == 0 else None)
+        spec = (None,) * lead + tuple(fixed)
+        return P(*spec)
+
+    return jax.tree_util.tree_map_with_path(spec_for, params_struct)
+
+
+def batch_specs(cfg: ModelConfig, shape: InputShape, mesh,
+                batch_struct: dict) -> dict:
+    D = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    dsz = 1
+    for a in D:
+        dsz *= sizes[a]
+    D = D if shape.global_batch % dsz == 0 else \
+        (("data",) if shape.global_batch % sizes.get("data", 1) == 0
+         else ())
+    Dspec = D if len(D) != 1 else D[0]
+    out = {}
+    for k, v in batch_struct.items():
+        spec = [Dspec if D else None] + [None] * (v.ndim - 1)
+        out[k] = P(*spec)
+    return out
+
+
+def serve_state_specs(cfg: ModelConfig, shape: InputShape, mesh,
+                      state_struct) -> Any:
+    """Specs matching the ServeState structure (see serve.engine)."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    D = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+    dsz = 1
+    for a in D:
+        dsz *= sizes[a]
+    b = shape.global_batch
+    if b % dsz != 0:
+        D = ("data",) if b % sizes.get("data", 1) == 0 else ()
+    Dspec = (D if len(D) != 1 else D[0]) if D else None
+    T = "model" if "model" in mesh.axis_names else None
+
+    def kv_spec(leaf):
+        # [L, B, W, Hkv, dh]
+        l_, bb, w = leaf.shape[:3]
+        spec = [None, Dspec, None, None, None]
+        tsz = sizes.get("model", 1)
+        if w % tsz == 0 and w >= 4096:
+            spec[2] = T
+        if bb == 1 and Dspec is not None:
+            spec[1] = None
+        if bb == 1:
+            # long_500k: shard cache rows over everything that divides
+            full = tuple(mesh.axis_names)
+            fsz = 1
+            for a in full:
+                fsz *= sizes[a]
+            if w % fsz == 0:
+                spec[2] = full
+        return P(*spec)
+
+    def generic(leaf):
+        if leaf.ndim == 0:
+            return P()
+        spec = [None] * leaf.ndim
+        # leading dims: [L, B, ...] or [B]
+        if leaf.ndim == 1:       # cache_len [B]
+            spec[0] = Dspec if leaf.shape[0] > 1 else None
+            return P(*spec)
+        if leaf.shape[1] == shape.global_batch and shape.global_batch > 1:
+            spec[1] = Dspec
+        # mamba h: [L, B, di, ds] — di over model
+        tsz = sizes.get("model", 1)
+        if leaf.ndim >= 3 and leaf.shape[-2] % tsz == 0 \
+                and leaf.shape[-2] >= 1024:
+            spec[-2] = T
+        elif leaf.ndim >= 3 and leaf.shape[-1] % tsz == 0 \
+                and leaf.shape[-1] >= 1024:
+            spec[-1] = T
+        return P(*spec)
+
+    from repro.serve.engine import ServeState
+    return ServeState(
+        cache_k=jax.tree.map(kv_spec, state_struct.cache_k),
+        cache_v=jax.tree.map(kv_spec, state_struct.cache_v),
+        cache_len=jax.tree.map(generic, state_struct.cache_len),
+        mamba_state=jax.tree.map(generic, state_struct.mamba_state),
+        mem_k=jax.tree.map(kv_spec, state_struct.mem_k),
+        mem_v=jax.tree.map(kv_spec, state_struct.mem_v),
+    )

@@ -1,0 +1,47 @@
+"""Training launcher CLI.
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen3-4b \
+        --steps 50 --batch 4 --seq 128 [--reduced] [--ckpt path.npz]
+
+``--reduced`` (default on CPU) trains the smoke-sized variant; the full
+configs are for real pods — their distribution plan is validated by
+``repro.launch.dryrun``.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+
+from repro import configs
+from repro.optim import adamw
+from repro.train import trainer as trainer_lib
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=configs.ARCHS)
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--full", action="store_true",
+                    help="full config (pod-scale; default is reduced)")
+    ap.add_argument("--ckpt", default="")
+    args = ap.parse_args()
+
+    cfg = configs.get(args.arch)
+    if not args.full:
+        cfg = cfg.reduced()
+    pc = cfg.param_count()
+    print(f"{cfg.name} ({'full' if args.full else 'reduced'}): "
+          f"{pc['total'] / 1e6:.1f}M params")
+    tcfg = trainer_lib.TrainerConfig(
+        steps=args.steps, batch=args.batch, seq_len=args.seq,
+        ckpt_path=args.ckpt,
+        opt=adamw.AdamWConfig(lr=args.lr, warmup_steps=max(args.steps // 10, 1),
+                              total_steps=args.steps))
+    trainer_lib.train(cfg, tcfg)
+
+
+if __name__ == "__main__":
+    main()

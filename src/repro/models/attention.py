@@ -1,0 +1,250 @@
+"""GQA attention: training (full/sliding-window causal) and cached decode."""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import linear_init, rmsnorm, rmsnorm_init, rope
+
+
+def init(key, cfg, dtype=jnp.bfloat16) -> dict:
+    d, dh = cfg.d_model, cfg.dh
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": linear_init(ks[0], d, cfg.n_heads * dh, dtype),
+        "wk": linear_init(ks[1], d, cfg.n_kv_heads * dh, dtype),
+        "wv": linear_init(ks[2], d, cfg.n_kv_heads * dh, dtype),
+        "wo": linear_init(ks[3], cfg.n_heads * dh, d, dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = rmsnorm_init(dh)
+        p["k_norm"] = rmsnorm_init(dh)
+    return p
+
+
+def _qkv(p, cfg, x, positions):
+    b, s, _ = x.shape
+    dh = cfg.dh
+    q = (x @ p["wq"]).reshape(b, s, cfg.n_heads, dh)
+    k = (x @ p["wk"]).reshape(b, s, cfg.n_kv_heads, dh)
+    v = (x @ p["wv"]).reshape(b, s, cfg.n_kv_heads, dh)
+    if cfg.qk_norm:
+        q = rmsnorm(q, p["q_norm"], cfg.norm_eps)
+        k = rmsnorm(k, p["k_norm"], cfg.norm_eps)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _sdpa(q, k, v, mask, n_rep: int):
+    """q: [B,S,H,dh], k/v: [B,T,Hkv,dh]; mask [S,T] or [B,S,T] additive."""
+    if n_rep > 1:
+        k = jnp.repeat(k, n_rep, axis=2)
+        v = jnp.repeat(v, n_rep, axis=2)
+    scale = q.shape[-1] ** -0.5
+    s = jnp.einsum("bshd,bthd->bhst", q, k).astype(jnp.float32) * scale
+    s = s + mask
+    p = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhst,bthd->bshd", p, v)
+
+
+def causal_mask(s: int, window: int | None = None):
+    i = jnp.arange(s)[:, None]
+    j = jnp.arange(s)[None, :]
+    ok = j <= i
+    if window is not None:
+        ok &= (i - j) < window
+    return jnp.where(ok, 0.0, -jnp.inf).astype(jnp.float32)
+
+
+_FLASH_THRESHOLD = 2048
+_QC = 512      # query chunk
+_KC = 1024     # kv chunk
+
+
+def flash_attention(q, k, v, causal: bool, window: int | None,
+                    n_rep: int) -> jax.Array:
+    """Memory-bounded attention: online softmax over KV chunks inside a
+    scan over query chunks.  Peak live score block is [B,H,QC,KC] instead
+    of [B,H,S,S] — required for the 32k/500k shapes.  (The Pallas
+    window-attention kernel is the decode-path analogue.)"""
+    b, s, h, dh = q.shape
+    t = k.shape[1]
+    if n_rep > 1:
+        k = jnp.repeat(k, n_rep, axis=2)
+        v = jnp.repeat(v, n_rep, axis=2)
+    qc = min(_QC, s)
+    kc = min(_KC, t)
+    nq, nk = s // qc, t // kc          # shapes are pow2-padded upstream
+    scale = dh ** -0.5
+    qr = q.reshape(b, nq, qc, h, dh).transpose(1, 0, 3, 2, 4)  # [nq,B,H,qc,dh]
+    kr = k.reshape(b, nk, kc, h, dh).transpose(1, 0, 3, 2, 4)
+    vr = v.reshape(b, nk, kc, h, dh).transpose(1, 0, 3, 2, 4)
+
+    def q_block(qi, qb):
+        qpos = qi * qc + jnp.arange(qc)
+
+        def kv_step(carry, inp):
+            m_p, l_p, acc = carry
+            ki, kb, vb = inp
+            kpos = ki * kc + jnp.arange(kc)
+            # §Perf B1: score/prob tiles stored bf16 (the dominant HBM
+            # stream at S^2 scale); the running max/denominator stay f32,
+            # and the max-subtraction bounds |sc - m| so bf16's 8-bit
+            # mantissa costs ~1e-2 relative on pr — validated by
+            # test_flash_attention_matches_dense.
+            sc = jnp.einsum("bhqd,bhkd->bhqk", qb, kb) * scale
+            ok = jnp.ones((qc, kc), bool)
+            if causal:
+                ok &= kpos[None, :] <= qpos[:, None]
+            if window is not None:
+                ok &= (qpos[:, None] - kpos[None, :]) < window
+            neg = jnp.asarray(-jnp.inf, jnp.float32)
+            sc32 = jnp.where(ok, sc.astype(jnp.float32), neg)
+            m_c = jnp.maximum(m_p, sc32.max(-1))
+            # fully-masked blocks keep m == -inf; guard the exps so the
+            # running state stays finite (entries are masked to 0 anyway)
+            m_safe = jnp.where(jnp.isfinite(m_c), m_c, 0.0)
+            pr = jnp.exp((sc.astype(jnp.float32)
+                          - m_safe[..., None])).astype(qb.dtype)
+            pr = jnp.where(ok, pr, 0)
+            alpha = jnp.where(jnp.isfinite(m_p), jnp.exp(m_p - m_safe), 0.0)
+            l_c = alpha * l_p + pr.astype(jnp.float32).sum(-1)
+            acc = acc * alpha[..., None] + jnp.einsum(
+                "bhqk,bhkd->bhqd", pr, vb).astype(jnp.float32)
+            return (m_c, l_c, acc), None
+
+        m0 = jnp.full((b, h, qc), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((b, h, qc), jnp.float32)
+        a0 = jnp.zeros((b, h, qc, dh), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0), (jnp.arange(nk), kr, vr))
+        out = (acc / jnp.maximum(l, 1e-30)[..., None]).astype(q.dtype)
+        return out                                       # [B,H,qc,dh]
+
+    # checkpoint each q block: backward recomputes one block's score
+    # tiles instead of keeping all nq*nk of them live (memory parity
+    # with a flash kernel's recompute strategy)
+    q_block_ckpt = jax.checkpoint(
+        q_block, policy=jax.checkpoint_policies.nothing_saveable)
+    ob = jax.lax.map(lambda args: q_block_ckpt(*args), (jnp.arange(nq), qr))
+    return ob.transpose(1, 0, 3, 2, 4).reshape(b, s, h, dh)
+
+
+def self_attention(p, cfg, x, positions, causal: bool = True,
+                   window: int | None = "cfg") -> jax.Array:
+    b, s, d = x.shape
+    if window == "cfg":
+        window = cfg.window
+    q, k, v = _qkv(p, cfg, x, positions)
+    n_rep = cfg.n_heads // cfg.n_kv_heads
+    if s > _FLASH_THRESHOLD:
+        o = flash_attention(q, k, v, causal, window, n_rep)
+    else:
+        if causal:
+            mask = causal_mask(s, window)
+        else:
+            mask = jnp.zeros((s, s), jnp.float32)
+        o = _sdpa(q, k, v, mask, n_rep)
+    return o.reshape(b, s, -1) @ p["wo"]
+
+
+def cross_attention_init(key, cfg, dtype=jnp.bfloat16) -> dict:
+    return init(key, cfg, dtype)
+
+
+def cross_attention(p, cfg, x, mem_k, mem_v, mem_mask) -> jax.Array:
+    """x: [B,S,d]; mem_k/v precomputed [B,T,Hkv,dh]; mem_mask [B,T] bool."""
+    b, s, _ = x.shape
+    dh = cfg.dh
+    q = (x @ p["wq"]).reshape(b, s, cfg.n_heads, dh)
+    if cfg.qk_norm:
+        q = rmsnorm(q, p["q_norm"], cfg.norm_eps)
+    n_rep = cfg.n_heads // cfg.n_kv_heads
+    k, v = mem_k, mem_v
+    if max(s, k.shape[1]) > _FLASH_THRESHOLD:
+        # long memories: flash path (mem assumed fully valid — dry-run
+        # and full-batch serving; ragged memories use the dense path)
+        o = flash_attention(q, k, v, causal=False, window=None,
+                            n_rep=n_rep)
+        return o.reshape(b, s, -1) @ p["wo"]
+    if n_rep > 1:
+        k = jnp.repeat(k, n_rep, axis=2)
+        v = jnp.repeat(v, n_rep, axis=2)
+    mask = jnp.where(mem_mask[:, None, None, :], 0.0, -jnp.inf)  # [B,1,1,T]
+    scale = dh ** -0.5
+    sc = jnp.einsum("bshd,bthd->bhst", q, k).astype(jnp.float32) * scale
+    sc = sc + mask
+    pr = jax.nn.softmax(sc, axis=-1).astype(q.dtype)
+    o = jnp.einsum("bhst,bthd->bshd", pr, v)
+    return o.reshape(b, s, -1) @ p["wo"]
+
+
+def mem_kv(p, cfg, mem):
+    """Precompute cross-attention K/V from encoder output [B,T,d]."""
+    b, t, _ = mem.shape
+    dh = cfg.dh
+    k = (mem @ p["wk"]).reshape(b, t, cfg.n_kv_heads, dh)
+    v = (mem @ p["wv"]).reshape(b, t, cfg.n_kv_heads, dh)
+    if cfg.qk_norm:
+        k = rmsnorm(k, p["k_norm"], cfg.norm_eps)
+    return k, v
+
+
+# ----------------------------------------------------------------------
+# Decode path: one query token against a KV cache.
+# ----------------------------------------------------------------------
+
+def decode_attention(p, cfg, x, cache_k, cache_v, cache_len,
+                     slot=None):
+    """x: [B,1,d]; cache_k/v: [B,W,Hkv,dh]; cache_len: [B] valid rows.
+
+    Insert-then-attend: the new token's K/V go into the ring slot FIRST
+    and attention runs over the cache alone.  Keeping one contiguous
+    [B,W,...] operand lets the W axis stay sharded end-to-end (scores are
+    constrained to P(dp,·,·,model)); GSPMD then computes *partial*
+    softmax/combine per shard with tiny all-reduces instead of
+    all-gathering the whole cache per layer (§Perf iteration A2).  GQA is
+    a grouped einsum — no head-repeat materialization.
+
+    Returns (out [B,1,d], new_cache_k, new_cache_v).
+    """
+    from repro.launch import shardctx
+    b = x.shape[0]
+    dh = cfg.dh
+    hkv = cfg.n_kv_heads
+    n_rep = cfg.n_heads // hkv
+    pos = cache_len.astype(jnp.int32)[:, None]           # position = len
+    q = (x @ p["wq"]).reshape(b, 1, cfg.n_heads, dh)
+    k = (x @ p["wk"]).reshape(b, 1, hkv, dh)
+    v = (x @ p["wv"]).reshape(b, 1, hkv, dh)
+    if cfg.qk_norm:
+        q = rmsnorm(q, p["q_norm"], cfg.norm_eps)
+        k = rmsnorm(k, p["k_norm"], cfg.norm_eps)
+    q = rope(q, pos, cfg.rope_theta)
+    k = rope(k, pos, cfg.rope_theta)
+    w = cache_k.shape[1]
+    if slot is None:
+        slot = (cache_len % w).astype(jnp.int32)
+    bidx = jnp.arange(b)
+    cache_k = cache_k.at[bidx, slot].set(k[:, 0].astype(cache_k.dtype))
+    cache_v = cache_v.at[bidx, slot].set(v[:, 0].astype(cache_v.dtype))
+    t = jnp.arange(w)[None, :]
+    # ring buffer: once cache_len wraps past W every row is valid; the
+    # just-inserted slot is always valid
+    valid = (t < jnp.minimum(cache_len + 1, w)[:, None]) \
+        | (t == slot[:, None])                            # [B,W]
+    qg = q.reshape(b, hkv, n_rep, dh)
+    scale = dh ** -0.5
+    s = jnp.einsum("bgrd,btgd->bgrt", qg, cache_k).astype(jnp.float32)
+    s = s * scale
+    s = shardctx.hint(s, shardctx.DP, None, None, shardctx.TP)
+    s = jnp.where(valid[:, None, None, :], s, -jnp.inf)
+    m = s.max(axis=-1, keepdims=True)
+    pr = jnp.exp(s - m)
+    pr = pr / pr.sum(axis=-1, keepdims=True)
+    o = jnp.einsum("bgrt,btgd->bgrd", pr.astype(x.dtype), cache_v)
+    out = o.reshape(b, 1, -1) @ p["wo"]
+    return out, cache_k, cache_v

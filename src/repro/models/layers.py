@@ -1,0 +1,44 @@
+"""Primitive layers (pure functions over param pytrees; no flax)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def linear_init(key, d_in: int, d_out: int, dtype=jnp.bfloat16):
+    scale = (2.0 / (d_in + d_out)) ** 0.5
+    return jax.random.normal(key, (d_in, d_out), jnp.float32).astype(dtype) * scale
+
+
+def embed_init(key, vocab: int, d: int, dtype=jnp.bfloat16):
+    return jax.random.normal(key, (vocab, d), jnp.float32).astype(dtype) * 0.02
+
+
+def rmsnorm_init(d: int, dtype=jnp.float32):
+    return jnp.ones((d,), dtype)
+
+
+def rmsnorm(x, scale, eps: float = 1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt((x * x).mean(-1, keepdims=True) + eps)
+    return (x * scale).astype(dt)
+
+
+def rope(x, positions, theta: float = 1e4):
+    """x: [..., S, H, dh]; positions: broadcastable to [..., S]."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions[..., None].astype(jnp.float32) * freqs      # [..., S, half]
+    cos = jnp.cos(ang)[..., None, :]                            # [..., S, 1, half]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def act_fn(name: str):
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu,
+            "relu": jax.nn.relu}[name]

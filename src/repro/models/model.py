@@ -1,0 +1,340 @@
+"""Composable model definition covering all six assigned arch families.
+
+Pure-function style: ``init_params(key, cfg)`` builds a param pytree
+(per-layer params stacked on a leading axis so the forward pass is a
+``lax.scan`` over layers — essential to keep HLO size and compile time
+bounded at 94 layers), ``forward`` / ``prefill`` / ``decode_step`` are
+the three entry points the launcher lowers.
+
+Families:
+  dense / moe       uniform decoder layers (attention + MLP/MoE)
+  ssm               uniform Mamba-1 layers (no attention, no MLP)
+  hybrid (jamba)    scan over 8-layer periods: [attn, mamba x7], MoE on
+                    odd layers (cfg.attn_every, cfg.moe.every)
+  vlm               dense decoder consuming [projected patch embeddings;
+                    token embeddings] (frontend stubbed per the brief)
+  audio (enc-dec)   bidirectional encoder over frame embeddings (stub
+                    frontend) + causal decoder with cross-attention
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.launch import shardctx
+from repro.models import attention, mamba, moe
+from repro.models.layers import (act_fn, embed_init, linear_init, rmsnorm,
+                                 rmsnorm_init)
+
+PyTree = Any
+
+
+def vocab_padded(cfg: ModelConfig) -> int:
+    """Pad vocab to a shardable multiple (MaxText-style logit padding)."""
+    return -(-cfg.vocab // 512) * 512
+
+
+# ----------------------------------------------------------------------
+# Layer init
+# ----------------------------------------------------------------------
+
+def _mlp_init(key, cfg, dtype=jnp.bfloat16):
+    ks = jax.random.split(key, 3)
+    return {
+        "w_gate": linear_init(ks[0], cfg.d_model, cfg.d_ff, dtype),
+        "w_up": linear_init(ks[1], cfg.d_model, cfg.d_ff, dtype),
+        "w_down": linear_init(ks[2], cfg.d_ff, cfg.d_model, dtype),
+    }
+
+
+def _mlp_apply(p, cfg, x):
+    a = act_fn(cfg.act)
+    return (a(x @ p["w_gate"]) * (x @ p["w_up"])) @ p["w_down"]
+
+
+def init_layer(key, cfg, attn: bool, moe_layer: bool, cross: bool = False,
+               dtype=jnp.bfloat16) -> dict:
+    ks = jax.random.split(key, 4)
+    p = {"norm1": rmsnorm_init(cfg.d_model)}
+    p["mix"] = (attention.init(ks[0], cfg, dtype) if attn
+                else mamba.init(ks[0], cfg, dtype))
+    if cross:
+        p["norm_x"] = rmsnorm_init(cfg.d_model)
+        p["cross"] = attention.cross_attention_init(ks[2], cfg, dtype)
+    if moe_layer:
+        p["norm2"] = rmsnorm_init(cfg.d_model)
+        p["ffn"] = moe.init(ks[1], cfg, dtype)
+    elif cfg.d_ff:
+        p["norm2"] = rmsnorm_init(cfg.d_model)
+        p["ffn"] = _mlp_init(ks[1], cfg, dtype)
+    return p
+
+
+def _stack_init(key, cfg, n: int, attn: bool, moe_layer: bool,
+                cross: bool = False, dtype=jnp.bfloat16):
+    keys = jax.random.split(key, n)
+    return jax.vmap(
+        lambda k: init_layer(k, cfg, attn, moe_layer, cross, dtype))(keys)
+
+
+def init_params(key, cfg: ModelConfig, dtype=jnp.bfloat16) -> PyTree:
+    ks = jax.random.split(key, 8)
+    vp = vocab_padded(cfg)
+    params: dict = {
+        "embed": embed_init(ks[0], vp, cfg.d_model, dtype),
+        "final_norm": rmsnorm_init(cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        params["out"] = embed_init(ks[1], vp, cfg.d_model, dtype)
+    if cfg.arch_type in ("dense", "vlm"):
+        params["layers"] = _stack_init(ks[2], cfg, cfg.n_layers, True, False,
+                                       dtype=dtype)
+    elif cfg.arch_type == "moe":
+        params["layers"] = _stack_init(ks[2], cfg, cfg.n_layers, True, True,
+                                       dtype=dtype)
+    elif cfg.arch_type == "ssm":
+        params["layers"] = _stack_init(ks[2], cfg, cfg.n_layers, False,
+                                       False, dtype=dtype)
+    elif cfg.arch_type == "hybrid":
+        period = cfg.attn_every
+        n_periods = cfg.n_layers // period
+        params["layers"] = {
+            f"l{j}": _stack_init(
+                jax.random.fold_in(ks[2], j), cfg, n_periods,
+                attn=(j % period == 0), moe_layer=cfg.is_moe_layer(j),
+                dtype=dtype)
+            for j in range(period)
+        }
+    elif cfg.arch_type == "audio":
+        params["enc_layers"] = _stack_init(ks[3], cfg, cfg.n_enc_layers,
+                                           True, False, dtype=dtype)
+        params["enc_norm"] = rmsnorm_init(cfg.d_model)
+        params["layers"] = _stack_init(ks[2], cfg, cfg.n_layers, True,
+                                       False, cross=True, dtype=dtype)
+    else:
+        raise ValueError(cfg.arch_type)
+    if cfg.arch_type == "vlm":
+        params["projector"] = {
+            "w1": linear_init(ks[4], cfg.d_model, cfg.d_model, dtype),
+            "w2": linear_init(ks[5], cfg.d_model, cfg.d_model, dtype),
+        }
+    return params
+
+
+# ----------------------------------------------------------------------
+# Forward (training / prefill)
+# ----------------------------------------------------------------------
+
+def _layer_apply(p, cfg, x, positions, attn: bool, moe_layer: bool,
+                 causal: bool = True, mem=None):
+    x = shardctx.residual_hint(x)
+    h = rmsnorm(x, p["norm1"], cfg.norm_eps)
+    if attn:
+        x = x + attention.self_attention(p["mix"], cfg, h, positions,
+                                         causal=causal)
+    else:
+        x = x + mamba.apply_train(p["mix"], cfg, h)
+    if mem is not None:
+        hx = rmsnorm(x, p["norm_x"], cfg.norm_eps)
+        mk, mv = attention.mem_kv(p["cross"], cfg, mem)
+        mmask = jnp.ones(mem.shape[:2], bool)
+        x = x + attention.cross_attention(p["cross"], cfg, hx, mk, mv, mmask)
+    aux = jnp.float32(0.0)
+    if "ffn" in p:
+        h2 = rmsnorm(x, p["norm2"], cfg.norm_eps)
+        if moe_layer:
+            y, aux = moe.apply(p["ffn"], cfg, h2)
+        else:
+            y = _mlp_apply(p["ffn"], cfg, h2)
+        x = x + y
+    x = shardctx.residual_hint(x)
+    return x, aux
+
+
+def _run_stack(stacked, cfg, x, positions, attn: bool, moe_layer: bool,
+               causal: bool = True, mem=None, remat: bool = True):
+    def body(carry, lp):
+        x, aux = carry
+        fn = functools.partial(_layer_apply, cfg=cfg, attn=attn,
+                               moe_layer=moe_layer, causal=causal)
+        if remat:
+            fn = jax.checkpoint(
+                lambda lp_, x_, pos_, mem_: _layer_apply(
+                    lp_, cfg, x_, pos_, attn, moe_layer, causal, mem_),
+                policy=jax.checkpoint_policies.nothing_saveable)
+            x2, a = fn(lp, x, positions, mem)
+        else:
+            x2, a = _layer_apply(lp, cfg, x, positions, attn, moe_layer,
+                                 causal, mem)
+        return (x2, aux + a), None
+    (x, aux), _ = jax.lax.scan(body, (x, jnp.float32(0.0)), stacked)
+    return x, aux
+
+
+def _run_hybrid(layers, cfg, x, positions, remat: bool = True):
+    period = cfg.attn_every
+
+    def body(carry, period_params):
+        x, aux = carry
+        for j in range(period):
+            lp = period_params[f"l{j}"]
+            attn = (j % period == 0)
+            moe_layer = cfg.is_moe_layer(j)
+            if remat:
+                x, a = jax.checkpoint(
+                    lambda lp_, x_, pos_, _a=attn, _m=moe_layer:
+                        _layer_apply(lp_, cfg, x_, pos_, _a, _m),
+                    policy=jax.checkpoint_policies.nothing_saveable,
+                )(lp, x, positions)
+            else:
+                x, a = _layer_apply(lp, cfg, x, positions, attn, moe_layer)
+            aux = aux + a
+        return (x, aux), None
+
+    (x, aux), _ = jax.lax.scan(body, (x, jnp.float32(0.0)), layers)
+    return x, aux
+
+
+def _trunk(params, cfg, x, positions, remat: bool = True, mem=None):
+    if cfg.arch_type == "hybrid":
+        return _run_hybrid(params["layers"], cfg, x, positions, remat)
+    attn = cfg.arch_type != "ssm"
+    moe_layer = cfg.arch_type == "moe"
+    return _run_stack(params["layers"], cfg, x, positions, attn, moe_layer,
+                      causal=True, mem=mem, remat=remat)
+
+
+def _logits(params, cfg, x):
+    out = params.get("out", params["embed"])
+    # Gather the (small) FSDP-sharded d_model axis of the output embedding
+    # instead of letting GSPMD all-reduce the (huge) [B,S,V] partial
+    # logits over the data axis — see EXPERIMENTS.md §Perf.
+    out = _hint(out, ("model", None))
+    logits = jnp.einsum("bsd,vd->bsv", x, out).astype(jnp.float32)
+    logits = _hint(logits, (_DATA_HINT, None, "model"))
+    vp = vocab_padded(cfg)
+    if vp != cfg.vocab:   # mask padded vocabulary rows
+        logits = jnp.where(
+            jnp.arange(vp) < cfg.vocab, logits, -1e9)
+    return logits
+
+
+_DATA_HINT = ("pod", "data")
+
+
+def _hint(x, spec):
+    """Sharding constraint applied only when the mesh axes exist (no-op in
+    single-device smoke tests)."""
+    try:
+        mesh = jax.sharding.get_abstract_mesh()
+        if mesh is None or not mesh.axis_names:
+            return x
+        names = set(mesh.axis_names)
+        from jax.sharding import PartitionSpec as P
+        def ok(ax):
+            if ax is None:
+                return None
+            if isinstance(ax, tuple):
+                sub = tuple(a for a in ax if a in names)
+                return sub if sub else None
+            return ax if ax in names else None
+        cleaned = [ok(ax) for ax in spec]
+        # drop axes that do not divide the dim
+        sizes = dict(zip(mesh.axis_names, mesh.shape.values())) \
+            if hasattr(mesh, "shape") else {}
+        fixed = []
+        for dim, ax in zip(x.shape, cleaned):
+            if ax is None:
+                fixed.append(None)
+                continue
+            axs = ax if isinstance(ax, tuple) else (ax,)
+            n = 1
+            for a in axs:
+                n *= sizes.get(a, 1)
+            fixed.append(ax if n and dim % n == 0 else None)
+        return jax.lax.with_sharding_constraint(x, P(*fixed))
+    except Exception:
+        return x
+
+
+def _embed_tokens(params, cfg, tokens):
+    return params["embed"][tokens]
+
+
+def _encode(params, cfg, frames):
+    """Audio encoder: bidirectional (windowed) self-attention stack."""
+    pos = jnp.arange(frames.shape[1])[None]
+    x, _ = _run_stack(params["enc_layers"], cfg, frames, pos, attn=True,
+                      moe_layer=False, causal=False, remat=True)
+    return rmsnorm(x, params["enc_norm"], cfg.norm_eps)
+
+
+def forward(params, cfg: ModelConfig, batch: dict, remat: bool = True):
+    """Training forward: returns (loss, metrics)."""
+    if cfg.arch_type == "audio":
+        mem = _encode(params, cfg, batch["frames"].astype(jnp.bfloat16))
+        x = _embed_tokens(params, cfg, batch["tokens"])
+        pos = jnp.arange(x.shape[1])[None]
+        x, aux = _trunk(params, cfg, x, pos, remat, mem=mem)
+        label_mask = jnp.ones(batch["tokens"].shape, bool)
+    elif cfg.arch_type == "vlm":
+        patches = batch["patches"].astype(jnp.bfloat16)
+        pr = params["projector"]
+        patches = jax.nn.gelu(patches @ pr["w1"]) @ pr["w2"]
+        toks = _embed_tokens(params, cfg, batch["tokens"])
+        x = jnp.concatenate([patches, toks], axis=1)
+        pos = jnp.arange(x.shape[1])[None]
+        x, aux = _trunk(params, cfg, x, pos, remat)
+        x = x[:, patches.shape[1]:]          # loss on text positions only
+        label_mask = jnp.ones(batch["tokens"].shape, bool)
+    else:
+        x = _embed_tokens(params, cfg, batch["tokens"])
+        pos = jnp.arange(x.shape[1])[None]
+        x, aux = _trunk(params, cfg, x, pos, remat)
+        label_mask = jnp.ones(batch["tokens"].shape, bool)
+
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = _logits(params, cfg, x)
+    labels = batch["labels"]
+    # sharding-aware CE: no gather over the (model-sharded) vocab axis —
+    # logsumexp reduces locally + psums, the label logit comes from a
+    # fused one-hot contraction (never materializes unsharded logits).
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    vp = logits.shape[-1]
+    onehot = jax.nn.one_hot(labels, vp, dtype=logits.dtype)
+    label_logit = jnp.einsum("bsv,bsv->bs", logits, onehot)
+    nll = lse - label_logit
+    loss = (nll * label_mask).sum() / jnp.maximum(label_mask.sum(), 1)
+    aux_w = 0.01 if cfg.moe is not None else 0.0
+    return loss + aux_w * aux, {"nll": loss, "aux": aux}
+
+
+def prefill(params, cfg: ModelConfig, batch: dict):
+    """Inference prefill: forward without loss; returns last-token logits.
+
+    (KV-cache materialization from prefill is modeled for attention archs
+    in serve.py; SSM/hybrid prefill returns logits only — see DESIGN.md.)
+    """
+    if cfg.arch_type == "audio":
+        mem = _encode(params, cfg, batch["frames"].astype(jnp.bfloat16))
+        x = _embed_tokens(params, cfg, batch["tokens"])
+        pos = jnp.arange(x.shape[1])[None]
+        x, _ = _trunk(params, cfg, x, pos, remat=True, mem=mem)
+    elif cfg.arch_type == "vlm":
+        patches = batch["patches"].astype(jnp.bfloat16)
+        pr = params["projector"]
+        patches = jax.nn.gelu(patches @ pr["w1"]) @ pr["w2"]
+        toks = _embed_tokens(params, cfg, batch["tokens"])
+        x = jnp.concatenate([patches, toks], axis=1)
+        pos = jnp.arange(x.shape[1])[None]
+        x, _ = _trunk(params, cfg, x, pos, remat=True)
+    else:
+        x = _embed_tokens(params, cfg, batch["tokens"])
+        pos = jnp.arange(x.shape[1])[None]
+        x, _ = _trunk(params, cfg, x, pos, remat=True)
+    x = rmsnorm(x[:, -1:], params["final_norm"], cfg.norm_eps)
+    return _logits(params, cfg, x)[:, 0]

@@ -1,0 +1,109 @@
+"""Mixture-of-Experts layer with sort-based dispatch (expert parallel).
+
+The token->expert dispatch is a *bipartite data graph* — the GraphLab
+view of MoE (DESIGN.md §5): tokens on one side, experts on the other,
+the all_to_all is the ghost exchange, and the chromatic 2-coloring is the
+(tokens-phase, experts-phase) alternation.  The router load-balance aux
+loss is a sync operation (a global Fold/Merge of per-expert counts).
+
+Dispatch avoids the O(N·E) one-hot matrices of the GShard formulation:
+expert assignments are *sorted* (O(Nk log Nk)), positions within each
+expert computed by searchsorted, and tokens scattered into the capacity
+buffer [E, C, d] — dropping overflow like capacity-factor routing.
+Expert compute is one batched einsum over the expert axis, shardable on
+the "model" mesh axis (expert parallelism).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.launch import shardctx
+from repro.models.layers import act_fn, linear_init
+
+
+def init(key, cfg, dtype=jnp.bfloat16) -> dict:
+    m = cfg.moe
+    d, dff, e = cfg.d_model, m.d_ff_expert, m.n_experts
+    ks = jax.random.split(key, 4)
+    scale_in = (2.0 / (d + dff)) ** 0.5
+    return {
+        "router": linear_init(ks[0], d, e, jnp.float32),
+        "w_gate": (jax.random.normal(ks[1], (e, d, dff), jnp.float32)
+                   * scale_in).astype(dtype),
+        "w_up": (jax.random.normal(ks[2], (e, d, dff), jnp.float32)
+                 * scale_in).astype(dtype),
+        "w_down": (jax.random.normal(ks[3], (e, dff, d), jnp.float32)
+                   * scale_in).astype(dtype),
+    }
+
+
+def apply(p, cfg, x):
+    """x: [B, S, d] -> (y [B, S, d], aux_loss scalar).
+
+    Dispatch is per *group* (one batch row = one group, vmapped), the
+    GShard grouping that keeps sort/rank computation local to the data
+    shard — a global argsort over all tokens would all-gather the whole
+    token stream (observed as a 100x collective blow-up in the dry-run;
+    see EXPERIMENTS.md §Perf)."""
+    m = cfg.moe
+    b0, s0, d = x.shape
+    k = m.top_k
+    e = m.n_experts
+    # group selection: one batch row per group for training shapes; for
+    # decode (s == 1) a per-row group would run EVERY expert on every
+    # token (cap >= 1 each) — group the whole local batch instead.
+    if s0 == 1:
+        x = x.reshape(1, b0, d)
+    b, s = x.shape[:2]
+    cap = int(max(1, min(s, (s * k * m.capacity_factor) // e + 1)))
+
+    logits = (x.astype(jnp.float32) @ p["router"])           # [B, S, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, eidx = jax.lax.top_k(probs, k)                     # [B, S, k]
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+
+    # load-balance aux loss (the sync-op analogue): E * sum_e f_e * p_e
+    me = probs.mean(axis=(0, 1))                             # [E]
+    ce = jnp.zeros((e,), jnp.float32).at[eidx.reshape(-1)].add(
+        jnp.ones((b * s * k,), jnp.float32)) / (b * s * k)
+    aux = e * (me * ce).sum()
+
+    def dispatch_row(xr, er):
+        """xr: [S, d]; er: [S, k] -> buf [E, cap, d] + combine metadata."""
+        flat_e = er.reshape(-1)                              # [S*k]
+        order = jnp.argsort(flat_e)
+        sorted_e = flat_e[order]
+        start = jnp.searchsorted(sorted_e, jnp.arange(e))
+        pos_sorted = jnp.arange(s * k) - start[sorted_e]
+        tok_sorted = order // k
+        keep = pos_sorted < cap
+        buf = jnp.zeros((e, cap, d), xr.dtype)
+        scat_e = jnp.where(keep, sorted_e, e)
+        buf = buf.at[scat_e, jnp.where(keep, pos_sorted, 0)].set(
+            xr[tok_sorted], mode="drop")
+        inv = jnp.argsort(order)
+        return buf, pos_sorted[inv], keep[inv]
+
+    buf, pos_u, keep_u = jax.vmap(dispatch_row)(x, eidx)     # [B,E,cap,d]
+    buf = shardctx.hint(buf, shardctx.DP, shardctx.TP, None, None)
+
+    # ---- expert FFN: batched over the (expert-parallel) expert axis ----
+    act = act_fn(cfg.act)
+    h = act(jnp.einsum("becd,edf->becf", buf, p["w_gate"])) \
+        * jnp.einsum("becd,edf->becf", buf, p["w_up"])
+    out_buf = jnp.einsum("becf,efd->becd", h, p["w_down"])   # [B,E,cap,d]
+    # reshard for the combine: gathers index the expert axis, so move the
+    # sharding from E (expert-parallel, needed for the FFN einsums) to d
+    # — otherwise GSPMD materializes full-d replicated gather results.
+    out_buf = shardctx.hint(out_buf, shardctx.DP, None, None, shardctx.TP)
+
+    def combine_row(out_r, er, pos_r, keep_r, gate_r):
+        flat_e = er.reshape(-1)
+        contrib = out_r[flat_e, jnp.clip(pos_r, 0, cap - 1)]  # [S*k, d]
+        contrib = jnp.where(keep_r[:, None], contrib, 0.0)
+        return (contrib.reshape(s, k, d)
+                * gate_r[..., None].astype(out_r.dtype)).sum(axis=1)
+
+    y = jax.vmap(combine_row)(out_buf, eidx, pos_u, keep_u, gate)
+    return y.reshape(b0, s0, d), aux

@@ -1,0 +1,150 @@
+"""Roofline terms from compiled dry-run artifacts (no hardware needed).
+
+    compute   = HLO_FLOPs / (chips * 197e12)        [bf16 v5e]
+    memory    = HLO_bytes / (chips * 819e9)         [HBM]
+    collective= collective_bytes / (chips * 50e9)   [per-link ICI, serial]
+
+FLOPs/bytes come from ``compiled.cost_analysis()``; collective bytes are
+NOT in cost_analysis, so we parse the optimized HLO text and sum operand
+sizes of all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute ops.  ``MODEL_FLOPS`` (6·N·D train dense, 6·N_active·D
+MoE, 2·N·D decode) gives the usefulness ratio that flags remat/redundancy
+waste.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+
+PEAK_FLOPS = 197e12      # bf16 / chip
+HBM_BW = 819e9           # bytes/s / chip
+ICI_BW = 50e9            # bytes/s / link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "tf32": 4, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# e.g.  "bf16[16,512,128]{2,1,0} all-gather(...)"
+_OP_RE = re.compile(
+    r"=\s*(?:\()?([a-z0-9]+)\[([0-9,]*)\][^=]*?\s("
+    + "|".join(_COLLECTIVES) + r")(?:-start|-done)?\(")
+_TUPLE_RE = re.compile(
+    r"=\s*\(([^)]*)\)\s+(" + "|".join(_COLLECTIVES) + r")(?:-start)?\(")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum of *output* operand bytes per collective kind (counting each
+    op once; -start/-done pairs deduped by counting only -start or the
+    sync form)."""
+    out: dict = {k: 0 for k in _COLLECTIVES}
+    counts: dict = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        if "-done(" in line:
+            continue   # count the -start only
+        m = None
+        kind = None
+        for k in _COLLECTIVES:
+            if f" {k}(" in line or f" {k}-start(" in line:
+                kind = k
+                break
+        if kind is None:
+            continue
+        # left-hand side shape(s)
+        lhs = line.split("=")[0] if "=" in line else ""
+        rhs = line.split("=", 1)[1] if "=" in line else line
+        shapes = _SHAPE_RE.findall(rhs.split(kind)[0])
+        total = sum(_shape_bytes(dt, dims) for dt, dims in shapes)
+        out[kind] += total
+        counts[kind] += 1
+    out["counts"] = counts
+    out["total"] = sum(out[k] for k in _COLLECTIVES)
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    name: str
+    mesh: str
+    chips: int
+    hlo_flops: float
+    hlo_bytes: float
+    coll_bytes: float
+    model_flops: float
+    bytes_per_chip: float        # peak HBM from memory_analysis
+
+    @property
+    def t_compute(self) -> float:
+        return self.hlo_flops / (self.chips * PEAK_FLOPS)
+
+    @property
+    def t_memory(self) -> float:
+        return self.hlo_bytes / (self.chips * HBM_BW)
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes / (self.chips * ICI_BW)
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def usefulness(self) -> float:
+        return self.model_flops / max(self.hlo_flops, 1.0)
+
+    def row(self) -> dict:
+        return {
+            "name": self.name, "mesh": self.mesh, "chips": self.chips,
+            "t_compute_s": self.t_compute, "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "model_flops": self.model_flops, "hlo_flops": self.hlo_flops,
+            "usefulness": self.usefulness,
+            "hbm_per_chip_gb": self.bytes_per_chip / 1e9,
+        }
+
+
+def model_flops(cfg, shape) -> float:
+    """6·N·D (train), 2·N·D (forward/decode) with N = active params."""
+    pc = cfg.param_count()
+    n_active = pc["active"]
+    # enc-dec: each token passes the encoder OR the decoder, and the
+    # train-seq budget is split between frames and tokens -> halve.
+    encdec = 0.5 if cfg.enc_dec else 1.0
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len * encdec
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    # decode: one token per request
+    return 2.0 * n_active * shape.global_batch
+
+
+def parse_memory_analysis(mem) -> float:
+    """Extract peak bytes per chip from compiled.memory_analysis()."""
+    for attr in ("temp_size_in_bytes",):
+        if hasattr(mem, attr):
+            tot = (getattr(mem, "argument_size_in_bytes", 0)
+                   + getattr(mem, "output_size_in_bytes", 0)
+                   + getattr(mem, "temp_size_in_bytes", 0)
+                   - getattr(mem, "alias_size_in_bytes", 0))
+            return float(tot)
+    return 0.0

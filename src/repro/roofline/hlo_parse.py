@@ -1,0 +1,391 @@
+"""HLO cost walker: FLOPs / HBM bytes / collective bytes with loop trips.
+
+``compiled.cost_analysis()`` visits every computation ONCE — a scan over
+94 layers is costed as one layer, making roofline terms meaningless for
+scan-over-layers models.  This walker parses the optimized (post-SPMD)
+HLO text and accounts properly:
+
+  * ``while`` ops: body cost x trip count (trip count recovered from the
+    loop-condition's comparison constant — scans lower to counted loops);
+  * ``fusion``: one kernel — FLOPs recurse into the fused computation,
+    HBM bytes counted at the fusion boundary only (operands + outputs),
+    which is *more* faithful than cost_analysis' per-op bytes;
+  * ``dot``: 2 x prod(output) x prod(contracting dims);
+  * elementwise arithmetic: 1 FLOP/element; data movement: 0;
+  * collectives: output bytes (per-partition shapes), x trips.
+
+All results are PER DEVICE (post-SPMD shapes).  The roofline layer
+multiplies by chip count where the spec's global formulas expect totals.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "token": 0,
+    "f8e4m3": 1, "f8e5m2fnuz": 1, "f8e4m3b11fnuz": 1,
+}
+
+_ARITH_1FLOP = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum", "abs",
+    "negate", "compare", "select", "and", "or", "xor", "not", "sign",
+    "floor", "ceil", "round-nearest-afz", "clamp", "remainder",
+    "shift-left", "shift-right-logical", "shift-right-arithmetic",
+    "atan2", "power",
+}
+_ARITH_XFLOP = {"exponential": 4, "log": 4, "rsqrt": 2, "sqrt": 2,
+                "tanh": 6, "logistic": 6, "cosine": 4, "sine": 4,
+                "expm1": 4, "log1p": 4, "erf": 6, "cbrt": 4,
+                "exponential-minus-one": 4}
+_DATA_MOVE = {
+    "copy", "bitcast", "transpose", "reshape", "slice", "dynamic-slice",
+    "dynamic-update-slice", "broadcast", "iota", "constant", "parameter",
+    "get-tuple-element", "tuple", "concatenate", "pad", "reverse",
+    "convert", "gather", "scatter", "reduce", "reduce-window", "map",
+    "sort", "rng", "rng-bit-generator", "after-all", "custom-call",
+    "bitcast-convert", "optimization-barrier", "copy-start", "copy-done",
+    "partition-id", "replica-id", "domain", "infeed", "outfeed",
+}
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*)$")
+_CALL_RE = re.compile(r"(?:calls|to_apply|body)=%?([\w.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w.\-]+)")
+_OPCODE_RE = re.compile(r"^\(?[a-z0-9]+\[[0-9,]*\][^\s]*\s+([a-z0-9\-]+)\(")
+_TUPLE_OPCODE_RE = re.compile(r"^\([^)]*\)\s+([a-z0-9\-]+)\(")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+
+
+def _shape_list_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES.get(dt, 4)
+    return total
+
+
+def _shape_list_elems(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt == "pred" or dt.startswith(("s", "u")):
+            pass
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n
+    return total
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    opcode: str
+    out_text: str          # shape portion of the RHS before the opcode
+    line: str
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    ops: list
+    defs: dict             # name -> out_text (shape text)
+
+
+def parse_computations(hlo: str) -> tuple[dict, str]:
+    """Returns ({name: Computation}, entry_name)."""
+    comps: dict = {}
+    entry = None
+    cur = None
+    for raw in hlo.splitlines():
+        line = raw.strip()
+        if not line or line.startswith(("//", "#")):
+            continue
+        # computation header: "%name (args) -> type {" or "ENTRY ..."
+        if line.endswith("{") and ("->" in line or line.startswith("ENTRY")):
+            m = re.match(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(", line)
+            if m:
+                cur = Computation(m.group(1), [], {})
+                comps[cur.name] = cur
+                if line.startswith("ENTRY"):
+                    entry = cur.name
+                # parameters with shapes are in the header; record them
+                for pm in re.finditer(r"([\w.\-]+):\s*((?:\([^)]*\))|"
+                                      r"[a-z0-9]+\[[0-9,]*\][^,)]*)", line):
+                    cur.defs[pm.group(1)] = pm.group(2)
+            continue
+        if line == "}" or line.startswith("}"):
+            continue
+        if cur is None:
+            continue
+        m = _DEF_RE.match(line)
+        if not m:
+            continue
+        name, rhs = m.groups()
+        # opcode = token right before the first '('
+        om = _OPCODE_RE.match(rhs) or _TUPLE_OPCODE_RE.match(rhs)
+        if om:
+            opcode = om.group(1)
+        else:
+            om2 = re.match(r"^.*?\s([a-z0-9\-]+)\(", rhs)
+            opcode = om2.group(1) if om2 else "unknown"
+        out_text = rhs.split(opcode + "(")[0]
+        cur.defs[name] = out_text
+        cur.ops.append(Op(name, opcode, out_text, line))
+    return comps, entry
+
+
+def _trip_count(cond: Computation) -> int:
+    """Scan loops compare the induction var against a constant bound."""
+    consts = []
+    for op in cond.ops:
+        if op.opcode == "constant":
+            m = re.search(r"constant\((-?\d+)\)", op.line)
+            if m:
+                consts.append(int(m.group(1)))
+    # header-declared constants too
+    for line_consts in re.findall(r"constant\((-?\d+)\)",
+                                  " ".join(o.line for o in cond.ops)):
+        consts.append(int(line_consts))
+    pos = [c for c in consts if c > 0]
+    return max(pos) if pos else 1
+
+
+@dataclasses.dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll_bytes: float = 0.0
+    coll_breakdown: dict = dataclasses.field(
+        default_factory=lambda: defaultdict(float))
+    bytes_by_op: dict = dataclasses.field(
+        default_factory=lambda: defaultdict(float))
+
+    def __iadd__(self, other):
+        self.flops += other.flops
+        self.bytes += other.bytes
+        self.coll_bytes += other.coll_bytes
+        for k, v in other.coll_breakdown.items():
+            self.coll_breakdown[k] += v
+        for k, v in other.bytes_by_op.items():
+            self.bytes_by_op[k] += v
+        return self
+
+    def scaled(self, k: float) -> "Cost":
+        c = Cost(self.flops * k, self.bytes * k, self.coll_bytes * k)
+        c.coll_breakdown = defaultdict(
+            float, {kk: v * k for kk, v in self.coll_breakdown.items()})
+        c.bytes_by_op = defaultdict(
+            float, {kk: v * k for kk, v in self.bytes_by_op.items()})
+        return c
+
+
+def _dot_flops(op: Op, comp: Computation) -> float:
+    out_elems = _shape_list_elems(op.out_text)
+    m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", op.line)
+    operands = _OPERAND_RE.findall(op.line.split(op.opcode + "(", 1)[1])
+    contract = 1
+    if m and operands:
+        lhs_text = comp.defs.get(operands[0], "")
+        sm = _SHAPE_RE.search(lhs_text)
+        if sm:
+            dims = [int(d) for d in sm.group(2).split(",") if d]
+            for ci in m.group(1).split(","):
+                if ci and int(ci) < len(dims):
+                    contract *= dims[int(ci)]
+    return 2.0 * out_elems * contract
+
+
+def _operand_bytes(op: Op, comp: Computation) -> list:
+    rest = op.line.split(op.opcode + "(", 1)
+    if len(rest) != 2:
+        return []
+    arg_text = rest[1].split(")")[0]
+    return [_shape_list_bytes(comp.defs.get(nm, ""))
+            for nm in _OPERAND_RE.findall(arg_text)]
+
+
+def _op_hbm_bytes(op: Op, comp: Computation) -> float:
+    """Fusion-boundary bytes: output + operand buffer sizes.
+
+    In-place / sparse-access ops must NOT be charged their full buffer
+    (XLA aliases them; cost_analysis does the same):
+      * dynamic-update-slice: read+write of the updated slice only;
+      * scatter: updates x2 + indices (target aliased in place);
+      * gather / dynamic-slice: output x2 + indices.
+    """
+    out_b = _shape_list_bytes(op.out_text)
+    ops_b = _operand_bytes(op, comp)
+    if op.opcode == "dynamic-update-slice":
+        upd = ops_b[1] if len(ops_b) > 1 else 0
+        return 2 * upd + sum(ops_b[2:])
+    if op.opcode == "scatter":
+        upd = ops_b[2] if len(ops_b) > 2 else 0
+        idx = ops_b[1] if len(ops_b) > 1 else 0
+        return 2 * upd + idx
+    if op.opcode in ("gather", "dynamic-slice"):
+        return 2 * out_b + sum(ops_b[1:])
+    return out_b + sum(ops_b)
+
+
+def _comp_cost(comp_name: str, comps: dict, memo: dict,
+               flops_only: bool = False, depth: int = 0) -> Cost:
+    if comp_name in memo:
+        return memo[comp_name]
+    comp = comps.get(comp_name)
+    cost = Cost()
+    if comp is None:
+        return cost
+    memo[comp_name] = cost   # provisional (cycles shouldn't occur)
+    for op in comp.ops:
+        oc = op.opcode
+        if oc == "while":
+            body_m = _CALL_RE.search(op.line)
+            cond_m = _COND_RE.search(op.line)
+            trips = 1
+            if cond_m and cond_m.group(1) in comps:
+                trips = _trip_count(comps[cond_m.group(1)])
+            if body_m:
+                sub = _comp_cost(body_m.group(1), comps, {},
+                                 depth=depth + 1)
+                cost += sub.scaled(trips)
+        elif oc == "fusion":
+            call_m = _CALL_RE.search(op.line)
+            fused = comps.get(call_m.group(1)) if call_m else None
+            if call_m:
+                sub = _comp_cost(call_m.group(1), comps, memo,
+                                 flops_only=True)
+                cost.flops += sub.flops
+                cost.coll_bytes += sub.coll_bytes
+                for k, v in sub.coll_breakdown.items():
+                    cost.coll_breakdown[k] += v
+            # in-place DUS-rooted fusions (scan stacking, cache inserts):
+            # charge the updated slices, not the whole aliased buffer.
+            dus_updates = 0
+            sliced_params = {}
+            if fused is not None:
+                for fop in fused.ops:
+                    if fop.opcode == "dynamic-update-slice":
+                        obs = _operand_bytes(fop, fused)
+                        if len(obs) > 1:
+                            dus_updates += obs[1]
+                # scan-body slicing pattern: a fusion operand consumed
+                # only through dynamic-slice reads touches slice bytes,
+                # not the whole stacked buffer.
+                consumers: dict = defaultdict(set)
+                slice_out: dict = defaultdict(int)
+                for fop in fused.ops:
+                    rest = fop.line.split(fop.opcode + "(", 1)
+                    if len(rest) != 2:
+                        continue
+                    for nm in _OPERAND_RE.findall(rest[1].split(")")[0]):
+                        consumers[nm].add(fop.opcode)
+                        if fop.opcode == "dynamic-slice":
+                            slice_out[nm] += _shape_list_bytes(fop.out_text)
+                for pname, ocs in consumers.items():
+                    if ocs == {"dynamic-slice"}:
+                        sliced_params[pname] = slice_out[pname]
+            if dus_updates or sliced_params:
+                out_b = _shape_list_bytes(op.out_text)
+                # map fusion operands -> fused-computation parameter names
+                rest = op.line.split("fusion(", 1)
+                operand_names = (_OPERAND_RE.findall(
+                    rest[1].split(")")[0]) if len(rest) == 2 else [])
+                fused_params = {}
+                if fused:
+                    for o in fused.ops:
+                        if o.opcode == "parameter":
+                            pm = re.search(r"parameter\((\d+)\)", o.line)
+                            if pm:
+                                fused_params[int(pm.group(1))] = o.name
+                b = 2 * dus_updates if dus_updates else 0
+                if not dus_updates:
+                    b += out_b
+                for i, nm in enumerate(operand_names):
+                    ob = _shape_list_bytes(comp.defs.get(nm, ""))
+                    pname = fused_params.get(i)
+                    if dus_updates and ob == out_b:
+                        continue   # aliased in-place buffer
+                    if pname in sliced_params:
+                        b += sliced_params[pname]
+                    else:
+                        b += ob
+                cost.bytes += b
+                tag = "fusion-inplace" if depth < 2 else \
+                    "fusion-inplace-innerloop"
+                cost.bytes_by_op[tag] += b
+            else:
+                b = _op_hbm_bytes(op, comp)
+                cost.bytes += b
+                cost.bytes_by_op[
+                    "fusion" if depth < 2 else "fusion-innerloop"] += b
+        elif oc in ("call", "conditional", "async-start"):
+            call_m = _CALL_RE.search(op.line)
+            if call_m:
+                cost += _comp_cost(call_m.group(1), comps, {})
+        elif oc.startswith(tuple(_COLLECTIVES)):
+            base = oc.replace("-start", "").replace("-done", "")
+            if oc.endswith("-done"):
+                continue
+            b = _shape_list_bytes(op.out_text)
+            cost.coll_bytes += b
+            cost.coll_breakdown[base] += b
+            if not flops_only:
+                hb = _op_hbm_bytes(op, comp)
+                cost.bytes += hb
+                cost.bytes_by_op["collective"] += hb
+        elif oc in ("dot", "convolution"):
+            cost.flops += _dot_flops(op, comp)
+            if not flops_only:
+                b = _op_hbm_bytes(op, comp)
+                cost.bytes += b
+                cost.bytes_by_op["dot"] += b
+        elif oc in _ARITH_1FLOP:
+            cost.flops += _shape_list_elems(op.out_text)
+            if not flops_only:
+                b = _op_hbm_bytes(op, comp)
+                cost.bytes += b
+                cost.bytes_by_op[
+                    "arith" if depth < 2 else "arith-innerloop"] += b
+        elif oc in _ARITH_XFLOP:
+            cost.flops += _ARITH_XFLOP[oc] * _shape_list_elems(op.out_text)
+            if not flops_only:
+                b = _op_hbm_bytes(op, comp)
+                cost.bytes += b
+                cost.bytes_by_op["arith"] += b
+        elif oc in _DATA_MOVE:
+            if not flops_only and oc not in ("parameter", "constant",
+                                             "get-tuple-element", "tuple",
+                                             "bitcast", "after-all"):
+                b = _op_hbm_bytes(op, comp)
+                cost.bytes += b
+                cost.bytes_by_op[oc if oc in (
+                    "copy", "transpose", "gather", "scatter", "reduce",
+                    "dynamic-update-slice", "dynamic-slice", "convert",
+                    "broadcast", "concatenate") else "data-move"] += b
+        else:
+            if not flops_only:
+                b = _op_hbm_bytes(op, comp)
+                cost.bytes += b
+                cost.bytes_by_op["other"] += b
+    memo[comp_name] = cost
+    return cost
+
+
+def analyze(hlo: str) -> Cost:
+    """Per-device cost of the entry computation, loops unrolled."""
+    comps, entry = parse_computations(hlo)
+    if entry is None:
+        return Cost()
+    # top-level: only cost computations reachable from entry (fusion and
+    # while bodies are reached via recursion)
+    return _comp_cost(entry, comps, {})

@@ -1,0 +1,73 @@
+"""Re-run the HLO cost walker over cached dry-run HLO (no recompile).
+
+    PYTHONPATH=src python -m repro.roofline.reanalyze \
+        [--hlo-dir results/hlo] [--out results/dryrun_16x16.jsonl]
+
+Rewrites the roofline rows for every cached (arch, shape, mesh) whose
+memory_analysis fields are merged from the existing JSONL if present.
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import gzip
+import json
+import os
+
+from repro import configs
+from repro.configs.base import INPUT_SHAPES
+from repro.roofline import analysis, hlo_parse
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--hlo-dir", default="results/hlo")
+    ap.add_argument("--mesh", default="16x16")
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--merge-from", default=None,
+                    help="existing jsonl to take memory_analysis from")
+    args = ap.parse_args()
+
+    old = {}
+    if args.merge_from and os.path.exists(args.merge_from):
+        for line in open(args.merge_from):
+            row = json.loads(line)
+            old[(row["name"], row["mesh"])] = row
+
+    rows = []
+    for path in sorted(glob.glob(f"{args.hlo_dir}/*__{args.mesh}.txt.gz")):
+        base = os.path.basename(path)[: -len(".txt.gz")]
+        arch, shape_name, mesh_name = base.split("__")
+        cfg = configs.get(arch)
+        shape = INPUT_SHAPES[shape_name]
+        chips = 1
+        for part in mesh_name.split("x"):
+            chips *= int(part)
+        with gzip.open(path, "rt") as f:
+            hlo = f.read()
+        walked = hlo_parse.analyze(hlo)
+        prev = old.get((f"{arch}:{shape_name}", mesh_name), {})
+        rf = analysis.Roofline(
+            name=f"{arch}:{shape_name}", mesh=mesh_name, chips=chips,
+            hlo_flops=walked.flops * chips, hlo_bytes=walked.bytes * chips,
+            coll_bytes=walked.coll_bytes * chips,
+            model_flops=analysis.model_flops(cfg, shape),
+            bytes_per_chip=prev.get("hbm_per_chip_gb", 0) * 1e9)
+        row = rf.row()
+        row["coll_breakdown"] = {k: v * chips for k, v in
+                                 walked.coll_breakdown.items()}
+        for key in ("memory_analysis", "compile_s", "lower_s"):
+            if key in prev:
+                row[key] = prev[key]
+        rows.append(row)
+        print(f"{row['name']:45s} Tc={row['t_compute_s']:.3e} "
+              f"Tm={row['t_memory_s']:.3e} Tx={row['t_collective_s']:.3e} "
+              f"-> {row['bottleneck']}")
+    if args.out:
+        with open(args.out, "w") as f:
+            for row in rows:
+                f.write(json.dumps(row) + "\n")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,1 @@
+from repro.serve.engine import decode_step, init_cache, cache_width, ServeState

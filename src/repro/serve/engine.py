@@ -1,0 +1,222 @@
+"""Batched serving: KV-cache decode step for every arch family.
+
+Cache policy:
+  * attention layers: ring buffer of width ``W`` — full ``seq_len`` for
+    decode_32k, ``cfg.serve_window`` for the long_500k sliding-window
+    serving path of dense/vlm archs (the sub-quadratic variant DESIGN.md
+    §5 commits to).  Entries are roped at absolute positions on insert.
+  * mamba layers: O(1) recurrent state [B, d_inner, d_state] + conv tail.
+  * audio (enc-dec): precomputed cross-attention K/V over the encoder
+    memory (the decode_32k/long_500k "context" for enc-dec archs) plus a
+    small self-attention ring.
+
+``decode_step`` consumes ONE token per request and returns (logits,
+new_state) — the decode_32k / long_500k dry-run entry point.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention, mamba
+from repro.models import moe as moe_lib
+from repro.models import model as model_lib
+from repro.models.layers import rmsnorm
+
+PyTree = Any
+
+_SELF_RING_ENCDEC = 1024      # decoder self-attention ring for enc-dec
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class ServeState:
+    cache_k: PyTree      # [L, B, W, Hkv, dh] (or per-period dict; {} if ssm)
+    cache_v: PyTree
+    cache_len: jax.Array          # [B] absolute position counter
+    mamba_state: PyTree           # stacked mamba states ({} if none)
+    mem_k: PyTree                 # cross-attn K [L, B, T, Hkv, dh] ({} if not enc-dec)
+    mem_v: PyTree
+
+
+def _n_attn_layers(cfg: ModelConfig) -> int:
+    return sum(1 for i in range(cfg.n_layers) if cfg.is_attn_layer(i))
+
+
+def _n_mamba_layers(cfg: ModelConfig) -> int:
+    return cfg.n_layers - _n_attn_layers(cfg)
+
+
+def cache_width(cfg: ModelConfig, seq_len: int) -> int:
+    if cfg.arch_type == "audio":
+        return _SELF_RING_ENCDEC
+    if cfg.serve_window is not None and seq_len > 32_768:
+        return cfg.serve_window
+    return seq_len
+
+
+def init_cache(cfg: ModelConfig, batch: int, seq_len: int,
+               dtype=jnp.bfloat16) -> ServeState:
+    w = cache_width(cfg, seq_len)
+    la = _n_attn_layers(cfg)
+    kv = (cfg.n_kv_heads, cfg.dh)
+    ck = cv = {}
+    if la:
+        ck = jnp.zeros((la, batch, w) + kv, dtype)
+        cv = jnp.zeros((la, batch, w) + kv, dtype)
+    ms: PyTree = {}
+    lm = _n_mamba_layers(cfg)
+    if lm:
+        one = mamba.init_decode_state(cfg, batch)
+        ms = jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None], (lm,) + a.shape), one)
+    mk = mv = {}
+    if cfg.enc_dec:
+        mk = jnp.zeros((cfg.n_layers, batch, seq_len) + kv, dtype)
+        mv = jnp.zeros((cfg.n_layers, batch, seq_len) + kv, dtype)
+    # attention caches start "full" (seq_len context); enc-dec self
+    # ring starts empty (context lives in the cross-attention memory)
+    start = jnp.full((batch,), 0 if cfg.enc_dec else seq_len, jnp.int32)
+    return ServeState(ck, cv, start, ms, mk, mv)
+
+
+# ----------------------------------------------------------------------
+
+def _ring_insert(cache, new, slot):
+    """cache [B,W,H,dh]; new [B,1,H,dh]; slot [B]."""
+    b = cache.shape[0]
+    return cache.at[jnp.arange(b), slot].set(new[:, 0])
+
+
+def _decode_layer(lp, cfg, x, ck, cv, clen, w):
+    h = rmsnorm(x, lp["norm1"], cfg.norm_eps)
+    # insert-then-attend (cache update happens inside decode_attention)
+    out, ck, cv = attention.decode_attention(lp["mix"], cfg, h, ck, cv,
+                                             clen)
+    x = x + out
+    if "ffn" in lp:
+        h2 = rmsnorm(x, lp["norm2"], cfg.norm_eps)
+        if cfg.moe is not None and "router" in lp["ffn"]:
+            y, _ = moe_lib.apply(lp["ffn"], cfg, h2)
+        else:
+            y = model_lib._mlp_apply(lp["ffn"], cfg, h2)
+        x = x + y
+    return x, ck, cv
+
+
+def _decode_mamba_layer(lp, cfg, x, mstate):
+    h = rmsnorm(x, lp["norm1"], cfg.norm_eps)
+    y, mstate = mamba.apply_decode(lp["mix"], cfg, h, mstate)
+    x = x + y
+    if "ffn" in lp:
+        h2 = rmsnorm(x, lp["norm2"], cfg.norm_eps)
+        if cfg.moe is not None and "router" in lp["ffn"]:
+            y2, _ = moe_lib.apply(lp["ffn"], cfg, h2)
+        else:
+            y2 = model_lib._mlp_apply(lp["ffn"], cfg, h2)
+        x = x + y2
+    return x, mstate
+
+
+def decode_step(params, cfg: ModelConfig, token: jax.Array,
+                state: ServeState):
+    """token: [B, 1] int32 -> (logits [B, vocab_padded], new_state)."""
+    x = params["embed"][token]
+    clen = state.cache_len
+    w = state.cache_k.shape[2] if not isinstance(state.cache_k, dict) else 0
+
+    if cfg.arch_type in ("dense", "moe", "vlm"):
+        def body(carry, xs):
+            x, = carry
+            lp, ck, cv = xs
+            x, ck, cv = _decode_layer(lp, cfg, x, ck, cv, clen, w)
+            return (x,), (ck, cv)
+        (x,), (nck, ncv) = jax.lax.scan(
+            body, (x,), (params["layers"], state.cache_k, state.cache_v))
+        new_state = dataclasses.replace(
+            state, cache_k=nck, cache_v=ncv, cache_len=clen + 1)
+
+    elif cfg.arch_type == "ssm":
+        def body(carry, xs):
+            x, = carry
+            lp, ms = xs
+            x, ms = _decode_mamba_layer(lp, cfg, x, ms)
+            return (x,), ms
+        (x,), nms = jax.lax.scan(
+            body, (x,), (params["layers"], state.mamba_state))
+        new_state = dataclasses.replace(
+            state, mamba_state=nms, cache_len=clen + 1)
+
+    elif cfg.arch_type == "hybrid":
+        period = cfg.attn_every
+        n_periods = cfg.n_layers // period
+
+        def body(carry, xs):
+            x, = carry
+            pp, ck, cv, ms = xs          # ck/cv: [1,B,W,..]; ms leading 7
+            mi = 0
+            for j in range(period):
+                lp = pp[f"l{j}"]
+                if j % period == 0:
+                    x, ck_j, cv_j = _decode_layer(
+                        lp, cfg, x, ck[0], cv[0], clen, w)
+                    ck = ck.at[0].set(ck_j)
+                    cv = cv.at[0].set(cv_j)
+                else:
+                    ms_j = jax.tree.map(lambda a: a[mi], ms)
+                    x, ms_j = _decode_mamba_layer(lp, cfg, x, ms_j)
+                    ms = jax.tree.map(lambda a, b: a.at[mi].set(b), ms, ms_j)
+                    mi += 1
+            return (x,), (ck, cv, ms)
+
+        la = _n_attn_layers(cfg)
+        lm = _n_mamba_layers(cfg)
+        ck_p = state.cache_k.reshape((n_periods, la // n_periods)
+                                     + state.cache_k.shape[1:])
+        cv_p = state.cache_v.reshape((n_periods, la // n_periods)
+                                     + state.cache_v.shape[1:])
+        ms_p = jax.tree.map(
+            lambda a: a.reshape((n_periods, lm // n_periods) + a.shape[1:]),
+            state.mamba_state)
+        (x,), (nck, ncv, nms) = jax.lax.scan(
+            body, (x,), (params["layers"], ck_p, cv_p, ms_p))
+        new_state = dataclasses.replace(
+            state,
+            cache_k=nck.reshape(state.cache_k.shape),
+            cache_v=ncv.reshape(state.cache_v.shape),
+            mamba_state=jax.tree.map(
+                lambda a, ref: a.reshape(ref.shape), nms, state.mamba_state),
+            cache_len=clen + 1)
+
+    elif cfg.arch_type == "audio":
+        def body(carry, xs):
+            x, = carry
+            lp, ck, cv, mk, mv = xs
+            h = rmsnorm(x, lp["norm1"], cfg.norm_eps)
+            # self-attention ring counts generated tokens; the
+            # cross-attention memory holds the seq_len context.
+            out, ck, cv = attention.decode_attention(
+                lp["mix"], cfg, h, ck, cv, clen)
+            x = x + out
+            hx = rmsnorm(x, lp["norm_x"], cfg.norm_eps)
+            mmask = jnp.ones((mk.shape[0], mk.shape[1]), bool)   # [B, T]
+            x = x + attention.cross_attention(
+                lp["cross"], cfg, hx, mk, mv, mmask)
+            if "ffn" in lp:
+                h2 = rmsnorm(x, lp["norm2"], cfg.norm_eps)
+                x = x + model_lib._mlp_apply(lp["ffn"], cfg, h2)
+            return (x,), (ck, cv)
+        (x,), (nck, ncv) = jax.lax.scan(
+            body, (x,), (params["layers"], state.cache_k, state.cache_v,
+                         state.mem_k, state.mem_v))
+        new_state = dataclasses.replace(
+            state, cache_k=nck, cache_v=ncv, cache_len=clen + 1)
+    else:
+        raise ValueError(cfg.arch_type)
+
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)   # x: [B, 1, d]
+    return model_lib._logits(params, cfg, x)[:, 0], new_state

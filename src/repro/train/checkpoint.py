@@ -1,0 +1,65 @@
+"""Checkpointing: flat-path npz snapshots of arbitrary pytrees.
+
+Also provides the paper's §8 sketch — "a globally consistent snapshot
+mechanism can be easily performed using the Sync operation": the graph
+engines are superstep-synchronous, so snapshotting EngineState between
+supersteps IS the consistent snapshot; ``snapshot_engine_state`` does
+exactly that.
+"""
+from __future__ import annotations
+
+import os
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PyTree = Any
+_SEP = "::"
+
+
+def _flatten(tree: PyTree) -> dict:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = _SEP.join(str(getattr(k, "key", getattr(k, "idx", k)))
+                        for k in path)
+        arr = np.asarray(leaf)
+        if arr.dtype.name in ("bfloat16", "float8_e4m3fn", "float8_e5m2"):
+            arr = arr.astype(np.float32)   # npz-safe; restore() recasts
+        flat[key] = arr
+    return flat
+
+
+def save(path: str, tree: PyTree, step: int | None = None) -> None:
+    flat = _flatten(tree)
+    if step is not None:
+        flat["__step__"] = np.asarray(step)
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    np.savez(path, **flat)
+
+
+def restore(path: str, like: PyTree) -> tuple[PyTree, int | None]:
+    """Restore into the structure of ``like`` (dtypes preserved)."""
+    data = np.load(path if path.endswith(".npz") else path + ".npz")
+    leaves_like, treedef = jax.tree_util.tree_flatten_with_path(like)
+    out = []
+    for path_elems, leaf in leaves_like:
+        key = _SEP.join(str(getattr(k, "key", getattr(k, "idx", k)))
+                        for k in path_elems)
+        arr = jnp.asarray(data[key]).astype(leaf.dtype)
+        out.append(arr)
+    step = int(data["__step__"]) if "__step__" in data else None
+    return jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(like), out), step
+
+
+def snapshot_engine_state(path: str, state) -> None:
+    """Consistent snapshot of a graph-engine EngineState (between
+    supersteps — the paper's §8 Sync-based snapshot)."""
+    save(path, {
+        "vertex_data": state.vertex_data,
+        "edge_data": state.edge_data,
+        "active": state.active,
+        "priority": state.priority,
+    }, step=int(state.superstep))

@@ -1,0 +1,38 @@
+"""Training / serving step functions — the units the launcher lowers."""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import model as model_lib
+from repro.optim import adamw
+from repro.serve import engine as serve_engine
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: adamw.AdamWConfig):
+    def train_step(params, opt_state, batch):
+        def loss_fn(p):
+            loss, mets = model_lib.forward(p, cfg, batch, remat=True)
+            return loss, mets
+        (loss, mets), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params)
+        params, opt_state, opt_mets = adamw.update(
+            opt_cfg, grads, opt_state, params)
+        return params, opt_state, {"loss": loss, **mets, **opt_mets}
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig):
+    def prefill_step(params, batch):
+        return model_lib.prefill(params, cfg, batch)
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig):
+    def serve_step(params, token, state):
+        return serve_engine.decode_step(params, cfg, token, state)
+    return serve_step

@@ -1,0 +1,55 @@
+"""Trainer: config-driven loop with checkpointing + eval (CPU-runnable)."""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any
+
+import jax
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.data import pipeline
+from repro.models import model as model_lib
+from repro.optim import adamw
+from repro.train import checkpoint as ckpt_lib
+from repro.train.steps import make_train_step
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    steps: int = 100
+    batch: int = 8
+    seq_len: int = 128
+    log_every: int = 10
+    ckpt_every: int = 0            # 0 = only final
+    ckpt_path: str = ""
+    seed: int = 0
+    opt: adamw.AdamWConfig = dataclasses.field(
+        default_factory=adamw.AdamWConfig)
+
+
+def train(cfg: ModelConfig, tcfg: TrainerConfig):
+    key = jax.random.PRNGKey(tcfg.seed)
+    params = model_lib.init_params(key, cfg)
+    opt_state = adamw.init(params)
+    step_fn = jax.jit(make_train_step(cfg, tcfg.opt))
+    history = []
+    t0 = time.time()
+    for step in range(tcfg.steps):
+        batch = pipeline.make_batch(cfg, tcfg.batch, tcfg.seq_len,
+                                    seed=tcfg.seed * 100003 + step)
+        params, opt_state, mets = step_fn(params, opt_state, batch)
+        if step % tcfg.log_every == 0 or step == tcfg.steps - 1:
+            loss = float(mets["loss"])
+            history.append((step, loss))
+            print(f"step {step:5d} loss {loss:8.4f} "
+                  f"lr {float(mets['lr']):.2e} "
+                  f"gnorm {float(mets['grad_norm']):.3f} "
+                  f"({time.time() - t0:.1f}s)")
+        if tcfg.ckpt_every and step and step % tcfg.ckpt_every == 0 \
+                and tcfg.ckpt_path:
+            ckpt_lib.save(tcfg.ckpt_path, params, step=step)
+    if tcfg.ckpt_path:
+        ckpt_lib.save(tcfg.ckpt_path, params, step=tcfg.steps)
+    return params, opt_state, history

@@ -1,0 +1,19 @@
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)
+
+
+def random_graph(n_vertices: int, n_edges: int, seed: int = 0) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    edges = set()
+    attempts = 0
+    while len(edges) < n_edges and attempts < n_edges * 20:
+        u, v = rng.integers(0, n_vertices, 2)
+        attempts += 1
+        if u != v:
+            edges.add((min(int(u), int(v)), max(int(u), int(v))))
+    return np.asarray(sorted(edges), dtype=np.int64)

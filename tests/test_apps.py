@@ -1,0 +1,129 @@
+"""Application-level correctness (paper §5): each app converges to the
+right answer on planted synthetic data."""
+import numpy as np
+import pytest
+
+from repro.apps import als, coem, gibbs, lbp, pagerank
+from repro.core import ChromaticEngine, PriorityEngine
+from conftest import random_graph
+
+
+def test_pagerank_matches_power_iteration_oracle():
+    edges = random_graph(60, 150, seed=0)
+    g = pagerank.make_graph(edges, 60)
+    eng = ChromaticEngine(g, pagerank.make_update(1e-6),
+                          max_supersteps=300)
+    st = eng.run()
+    assert not bool(st.active.any()), "should converge"
+    ref = pagerank.reference_pagerank(edges, 60)
+    np.testing.assert_allclose(np.asarray(st.vertex_data["rank"]), ref,
+                               atol=5e-5)
+
+
+def test_pagerank_adaptive_scheduling_saves_updates():
+    """Adaptive rescheduling (Alg. 1) does less work than fixed sweeps."""
+    edges = random_graph(60, 150, seed=0)
+    g = pagerank.make_graph(edges, 60)
+    eng = ChromaticEngine(g, pagerank.make_update(1e-4),
+                          max_supersteps=300)
+    st = eng.run()
+    sweeps_equiv = int(st.superstep) * 60
+    assert int(st.n_updates) < sweeps_equiv
+
+
+def test_als_converges_to_noise_floor():
+    prob = als.synthetic_netflix(40, 30, d=4, density=0.4, noise=0.05)
+    eng = ChromaticEngine(prob.graph, als.make_update(4, lam=0.01,
+                                                      eps=1e-4),
+                          syncs=[als.rmse_sync()], max_supersteps=60)
+    st = eng.run(num_supersteps=60)
+    rmse = als.dataset_rmse(prob, st.vertex_data)
+    assert rmse < 0.09, f"ALS should reach noise floor, got {rmse}"
+    # the sync-op RMSE equals the exact dataset RMSE (paper §5.1 sync)
+    np.testing.assert_allclose(float(st.globals["rmse"]), rmse, rtol=1e-3)
+
+
+def test_als_rank_sweep_improves_fit():
+    """Fig 5(a): larger d fits better (down to the noise floor)."""
+    errs = []
+    for d in (1, 4):
+        prob = als.synthetic_netflix(40, 30, d=4, density=0.4,
+                                     noise=0.05, d_model=d)
+        eng = ChromaticEngine(prob.graph, als.make_update(d, lam=0.02),
+                              max_supersteps=25)
+        st = eng.run(num_supersteps=25)
+        errs.append(als.dataset_rmse(prob, st.vertex_data))
+    assert errs[1] < errs[0]
+
+
+def test_coem_recovers_planted_types():
+    prob = coem.synthetic_ner(120, 80, 3, mean_deg=8, seed_frac=0.15,
+                              seed=1)
+    eng = ChromaticEngine(prob.graph, coem.make_update(1e-4),
+                          max_supersteps=50)
+    st = eng.run()
+    acc = coem.label_accuracy(prob, st.vertex_data)
+    assert acc > 0.8, f"CoEM should recover planted types, got {acc}"
+
+
+def test_lbp_on_tree_matches_exact_marginals():
+    """Sum-product BP is exact on trees: chain of 4 vertices."""
+    import jax
+    import jax.numpy as jnp
+    from repro.core.graph import DataGraph
+    from repro.core.coloring import greedy_coloring
+    k = 3
+    edges = np.asarray([[0, 1], [1, 2], [2, 3]])
+    rng = np.random.default_rng(0)
+    unary = rng.normal(size=(4, k)).astype(np.float32)
+    g = DataGraph.from_edges(
+        4, edges,
+        vertex_data={"feat": np.zeros((4, 1), np.float32),
+                     "unary": unary, "belief": unary.copy()},
+        edge_data={"msg01": np.zeros((3, k), np.float32),
+                   "msg10": np.zeros((3, k), np.float32)})
+    g = g.with_colors(greedy_coloring(4, edges))
+    beta = 0.7
+    upd = lbp.make_update(k, beta=beta, eps=1e-7, use_gmm_sync=False)
+    eng = ChromaticEngine(g, upd, max_supersteps=50)
+    st = eng.run()
+    beliefs = jax.nn.softmax(jnp.asarray(st.vertex_data["belief"]), -1)
+    # exact marginals by enumeration
+    psi = np.exp(-beta * (1 - np.eye(k)))
+    pot = np.exp(unary)
+    joint = np.zeros((k,) * 4)
+    for a in range(k):
+        for b in range(k):
+            for c in range(k):
+                for d in range(k):
+                    joint[a, b, c, d] = (pot[0, a] * pot[1, b] * pot[2, c]
+                                         * pot[3, d] * psi[a, b] * psi[b, c]
+                                         * psi[c, d])
+    joint /= joint.sum()
+    for v, axes in enumerate([(1, 2, 3), (0, 2, 3), (0, 1, 3), (0, 1, 2)]):
+        np.testing.assert_allclose(np.asarray(beliefs[v]),
+                                   joint.sum(axis=axes), atol=1e-3)
+
+
+def test_coseg_priority_engine_improves_over_unary():
+    prob = lbp.synthetic_coseg(3, 4, 8, n_labels=3, noise=0.6)
+    base = float((np.asarray(prob.graph.vertex_data["unary"]).argmax(1)
+                  == prob.true_labels).mean())
+    eng = PriorityEngine(prob.graph, lbp.make_update(3, beta=0.5, eps=1e-3),
+                         k_select=32, max_supersteps=3000)
+    st = eng.run()
+    acc = lbp.label_accuracy(prob, st.vertex_data)
+    assert acc >= base, f"LBP smoothing should not hurt: {acc} vs {base}"
+
+
+def test_gibbs_matches_exact_ising_marginals():
+    """Chromatic Gibbs (the [22] sampler) is statistically correct."""
+    edges = np.asarray([[0, 1], [1, 2], [2, 3], [3, 0]])
+    prob = gibbs.ising_problem(edges, 4, beta=0.35, field=0.2, seed=1)
+    eng = ChromaticEngine(prob.graph, gibbs.make_update(0.35, field=0.2,
+                                                        burn_in=100),
+                          max_supersteps=4000)
+    st = eng.run()
+    emp = gibbs.marginals(st.vertex_data)
+    exact = gibbs.exact_marginals(edges, 4, 0.35, field=0.2)
+    np.testing.assert_allclose(emp, exact, atol=0.05)

@@ -1,0 +1,56 @@
+"""Property tests: colorings satisfy the consistency-model contracts."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.coloring import (bipartite_coloring, distance2_coloring,
+                                 greedy_coloring, single_color,
+                                 verify_coloring)
+from conftest import random_graph
+
+
+@st.composite
+def graphs(draw):
+    nv = draw(st.integers(2, 40))
+    ne = draw(st.integers(0, min(nv * (nv - 1) // 2, 80)))
+    seed = draw(st.integers(0, 2**16))
+    return nv, random_graph(nv, ne, seed)
+
+
+@given(graphs())
+@settings(max_examples=60, deadline=None)
+def test_greedy_coloring_is_proper(g):
+    nv, edges = g
+    colors = greedy_coloring(nv, edges)
+    assert verify_coloring(nv, edges, colors, distance=1)
+    assert colors.min() >= 0
+
+
+@given(graphs())
+@settings(max_examples=30, deadline=None)
+def test_distance2_coloring_is_proper(g):
+    nv, edges = g
+    colors = distance2_coloring(nv, edges)
+    assert verify_coloring(nv, edges, colors, distance=2)
+
+
+@given(graphs())
+@settings(max_examples=30, deadline=None)
+def test_greedy_color_count_bounded_by_max_degree(g):
+    """Greedy uses at most max_degree + 1 colors (classic bound)."""
+    nv, edges = g
+    colors = greedy_coloring(nv, edges)
+    deg = np.zeros(nv)
+    for u, v in edges:
+        deg[u] += 1
+        deg[v] += 1
+    assert colors.max() <= (deg.max() if len(edges) else 0) + 1
+
+
+def test_bipartite_two_coloring():
+    colors = bipartite_coloring(3, 8)
+    assert list(colors) == [0, 0, 0, 1, 1, 1, 1, 1]
+
+
+def test_single_color_vertex_consistency():
+    assert single_color(5).max() == 0

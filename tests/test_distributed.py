@@ -1,0 +1,106 @@
+"""Distributed engine: multi-device (subprocess, 8 host devices) equality
+with the single-shard engine — the sharded runtime is semantics-preserving.
+
+Run in a subprocess because XLA_FLAGS device-count must be set before jax
+initializes (and the main test process must keep 1 device)."""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import json
+    import numpy as np
+    import jax
+    from repro.apps import als, coem, lbp, pagerank
+    from repro.core import (ChromaticEngine, ShardPlan,
+                            DistributedChromaticEngine,
+                            two_phase_partition, random_partition)
+
+    out = {}
+
+    # --- PageRank on 8 shards, two-phase partition ---
+    rng = np.random.default_rng(1)
+    nv = 80
+    edges = set()
+    while len(edges) < 200:
+        u, v = rng.integers(0, nv, 2)
+        if u != v:
+            edges.add((min(u, v), max(u, v)))
+    edges = np.array(sorted(edges))
+    g = pagerank.make_graph(edges, nv)
+    upd = pagerank.make_update(1e-5)
+    syncs = [pagerank.total_rank_sync()]
+    st = ChromaticEngine(g, upd, syncs=syncs, max_supersteps=80).run()
+    asg = two_phase_partition(nv, edges, 8, seed=0)
+    plan = ShardPlan.build(g, asg, 8)
+    res = DistributedChromaticEngine(g, plan, upd, syncs=syncs,
+                                     max_supersteps=80).run()
+    out["pr_equal"] = bool(np.array_equal(
+        np.asarray(st.vertex_data["rank"]),
+        np.asarray(res["vertex_data"]["rank"])))
+    out["pr_updates"] = [int(st.n_updates), res["n_updates"]]
+    out["pr_supersteps"] = [int(st.superstep), res["supersteps"]]
+
+    # --- CoEM (bipartite, random partition like the paper's NER) ---
+    prob = coem.synthetic_ner(60, 40, 3, seed=2)
+    updc = coem.make_update(1e-4)
+    stc = ChromaticEngine(prob.graph, updc, max_supersteps=40).run()
+    asgc = random_partition(prob.graph.n_vertices, 8, seed=3)
+    planc = ShardPlan.build(prob.graph, asgc, 8)
+    resc = DistributedChromaticEngine(prob.graph, planc, updc,
+                                      max_supersteps=40).run()
+    diff = np.abs(np.asarray(stc.vertex_data["p"])
+                  - np.asarray(resc["vertex_data"]["p"])).max()
+    out["coem_maxdiff"] = float(diff)
+
+    # --- LBP with edge-data writes across cut edges (CoSeg-style) ---
+    pl = lbp.synthetic_coseg(4, 3, 4, n_labels=3, noise=0.5)
+    updl = lbp.make_update(3, eps=1e-3, use_gmm_sync=False)
+    stl = ChromaticEngine(pl.graph, updl, max_supersteps=25).run()
+    asgl = lbp.frame_partition(pl, 8)
+    planl = ShardPlan.build(pl.graph, asgl, 8)
+    resl = DistributedChromaticEngine(pl.graph, planl, updl,
+                                      max_supersteps=25,
+                                      exchange_edges=True).run()
+    diffl = np.abs(np.asarray(stl.vertex_data["belief"])
+                   - np.asarray(resl["vertex_data"]["belief"])).max()
+    out["lbp_maxdiff"] = float(diffl)
+    out["lbp_updates"] = [int(stl.n_updates), resl["n_updates"]]
+
+    print("RESULT:" + json.dumps(out))
+""")
+
+
+@pytest.fixture(scope="module")
+def dist_results():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    proc = subprocess.run([sys.executable, "-c", _SCRIPT], env=env,
+                          capture_output=True, text=True, timeout=900)
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    line = [l for l in proc.stdout.splitlines()
+            if l.startswith("RESULT:")][0]
+    return json.loads(line[len("RESULT:"):])
+
+
+def test_distributed_pagerank_bitwise_equal(dist_results):
+    assert dist_results["pr_equal"]
+    assert dist_results["pr_updates"][0] == dist_results["pr_updates"][1]
+    assert (dist_results["pr_supersteps"][0]
+            == dist_results["pr_supersteps"][1])
+
+
+def test_distributed_coem_equal(dist_results):
+    assert dist_results["coem_maxdiff"] < 1e-6
+
+
+def test_distributed_lbp_with_edge_exchange(dist_results):
+    assert dist_results["lbp_maxdiff"] < 1e-4
+    assert dist_results["lbp_updates"][0] == dist_results["lbp_updates"][1]

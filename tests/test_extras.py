@@ -1,0 +1,96 @@
+"""BPTF app, FIFO scheduling, and HLO-walker unit tests."""
+import numpy as np
+import pytest
+
+from repro.core import ChromaticEngine, PriorityEngine
+
+
+def test_bptf_tripartite_converges():
+    """Paper §5.4: BPTF as a (tri-partite) data graph with a time-factor
+    sync; converges to the noise floor."""
+    from repro.apps import bptf
+    prob = bptf.synthetic_bptf(30, 25, 5, d=4, density=0.3, noise=0.05)
+    eng = ChromaticEngine(prob.graph, bptf.make_update(4, lam=0.02),
+                          syncs=[bptf.time_table_sync(5, 4)],
+                          max_supersteps=30)
+    st = eng.run(num_supersteps=30)
+    rmse = bptf.dataset_rmse(prob, st.vertex_data, st.globals)
+    base = float(np.sqrt(np.mean(prob.ratings ** 2)))
+    assert rmse < 0.25 * base, (rmse, base)
+
+
+def test_fifo_scheduling_drains_and_converges():
+    """Paper §3.4/§4.2.2: FIFO ordering is a legal RemoveNext — the
+    engine still converges to the same fixed point."""
+    from repro.apps import pagerank
+    from conftest import random_graph
+    edges = random_graph(40, 90, seed=11)
+    g = pagerank.make_graph(edges, 40)
+    upd = pagerank.make_update(1e-6)
+    chrom = ChromaticEngine(g, upd, max_supersteps=300).run()
+    fifo = PriorityEngine(g, upd, k_select=16, fifo=True,
+                          max_supersteps=8000).run()
+    assert not bool(fifo.active.any())
+    np.testing.assert_allclose(np.asarray(fifo.vertex_data["rank"]),
+                               np.asarray(chrom.vertex_data["rank"]),
+                               atol=3e-5)
+
+
+_HLO = """\
+HloModule test
+
+%cond (p: (s32[], f32[8,4])) -> pred[] {
+  %p = (s32[], f32[8,4]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %c = s32[] constant(7)
+  ROOT %lt = pred[] compare(%i, %c), direction=LT
+}
+
+%body (p2: (s32[], f32[8,4])) -> (s32[], f32[8,4]) {
+  %p2 = (s32[], f32[8,4]) parameter(0)
+  %i2 = s32[] get-tuple-element(%p2), index=0
+  %x = f32[8,4] get-tuple-element(%p2), index=1
+  %one = s32[] constant(1)
+  %ip = s32[] add(%i2, %one)
+  %w = f32[4,4] constant({...})
+  %y = f32[8,4] dot(%x, %w), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %ag = f32[8,8] all-gather(%y), replica_groups={}, dimensions={1}
+  %z = f32[8,4] slice(%ag), slice={[0:8], [0:4]}
+  ROOT %t = (s32[], f32[8,4]) tuple(%ip, %z)
+}
+
+ENTRY %main (a: f32[8,4]) -> f32[8,4] {
+  %a = f32[8,4] parameter(0)
+  %zero = s32[] constant(0)
+  %tup = (s32[], f32[8,4]) tuple(%zero, %a)
+  %wh = (s32[], f32[8,4]) while(%tup), condition=%cond, body=%body
+  ROOT %out = f32[8,4] get-tuple-element(%wh), index=1
+}
+"""
+
+
+def test_hlo_walker_multiplies_loop_trips():
+    from repro.roofline import hlo_parse as HP
+    cost = HP.analyze(_HLO)
+    # dot: 2 * 8*4 out * 4 contract = 256 flops, x7 trips
+    assert cost.flops == pytest.approx(256 * 7 + 7, rel=0.2)  # +adds
+    # all-gather: f32[8,8] = 256 B x 7 trips
+    assert cost.coll_bytes == pytest.approx(256 * 7)
+    assert cost.coll_breakdown["all-gather"] == pytest.approx(256 * 7)
+
+
+def test_hlo_walker_inplace_accounting():
+    from repro.roofline import hlo_parse as HP
+    hlo = """\
+HloModule t2
+
+ENTRY %main (a: f32[100,4], u: f32[1,4]) -> f32[100,4] {
+  %a = f32[100,4] parameter(0)
+  %u = f32[1,4] parameter(1)
+  %z = s32[] constant(3)
+  ROOT %d = f32[100,4] dynamic-update-slice(%a, %u, %z, %z)
+}
+"""
+    cost = HP.analyze(hlo)
+    # charged 2 x update (16 B) + indices, NOT the 1600 B buffer
+    assert cost.bytes < 200

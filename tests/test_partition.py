@@ -1,0 +1,79 @@
+"""Two-phase partitioning (paper §4.1) properties."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (build_meta_graph, balance_meta_graph, cut_edges,
+                        over_partition, two_phase_partition)
+from conftest import random_graph
+
+
+@st.composite
+def part_cases(draw):
+    nv = draw(st.integers(8, 60))
+    ne = draw(st.integers(nv // 2, min(nv * 3, 120)))
+    m = draw(st.sampled_from([2, 3, 4, 8]))
+    seed = draw(st.integers(0, 2**16))
+    return nv, random_graph(nv, ne, seed), m
+
+
+@given(part_cases())
+@settings(max_examples=40, deadline=None)
+def test_two_phase_assigns_every_vertex(case):
+    nv, edges, m = case
+    asg = two_phase_partition(nv, edges, m)
+    assert asg.shape == (nv,)
+    assert asg.min() >= 0 and asg.max() < m
+
+
+@given(part_cases())
+@settings(max_examples=40, deadline=None)
+def test_two_phase_balance(case):
+    """LPT on the meta-graph: no machine holds more than ~2x fair share
+    (holds because atoms are ~Nv/k sized with k >= 4m)."""
+    nv, edges, m = case
+    asg = two_phase_partition(nv, edges, m)
+    counts = np.bincount(asg, minlength=m)
+    fair = nv / m
+    assert counts.max() <= max(2.5 * fair, fair + nv / 4 + 2)
+
+
+@given(part_cases())
+@settings(max_examples=20, deadline=None)
+def test_over_partition_covers(case):
+    nv, edges, m = case
+    k = min(4 * m, nv)
+    atom_of = over_partition(nv, edges, k)
+    assert (atom_of >= 0).all() and atom_of.max() < k
+
+
+def test_meta_graph_weights_count_cut_edges():
+    edges = np.asarray([[0, 1], [1, 2], [2, 3], [3, 0]])
+    atom_of = np.asarray([0, 0, 1, 1])
+    meta = build_meta_graph(atom_of, edges, 2)
+    assert meta.vertex_weight.tolist() == [2.0, 2.0]
+    assert meta.edge_weight == {(0, 1): 2}   # edges 1-2 and 3-0 cross
+
+
+def test_partition_reuse_across_cluster_sizes():
+    """The paper's motivating property: one over-partitioning serves
+    multiple machine counts."""
+    edges = random_graph(60, 150, seed=7)
+    k = 16
+    atom_of = over_partition(60, edges, k)
+    for m in (2, 4, 8):
+        meta = build_meta_graph(atom_of, edges, k)
+        machine_of = balance_meta_graph(meta, m)
+        asg = machine_of[atom_of]
+        counts = np.bincount(asg, minlength=m)
+        assert counts.max() > 0
+        assert asg.max() < m
+
+
+def test_locality_partition_beats_random_on_grid():
+    """BFS atoms respect locality: fewer cut edges than random cut."""
+    from repro.core.graph import grid_edges_3d
+    from repro.core import random_partition
+    nv, edges = grid_edges_3d(4, 6, 6)
+    two = cut_edges(two_phase_partition(nv, edges, 4), edges)
+    rnd = cut_edges(random_partition(nv, 4), edges)
+    assert two < rnd
