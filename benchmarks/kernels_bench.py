@@ -1,12 +1,57 @@
 """Pallas kernels vs pure-jnp oracle timings (interpret mode on CPU —
-relative numbers are indicative only; the kernels target TPU Mosaic)."""
+relative numbers are indicative only; the kernels target TPU Mosaic).
+
+Also times the engine-level aggregator fast path (lite scopes +
+``ell_spmv``) against the dense-scope path on a PageRank sweep, and
+appends the result to ``results/BENCH_engines.json``.
+"""
 from __future__ import annotations
+
+import json
+import pathlib
+import time
 
 import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import emit, time_fn
 from repro.kernels import ops, ref
+
+_RESULTS = pathlib.Path(__file__).resolve().parent.parent / "results"
+
+
+def _bench_engine_paths() -> None:
+    """Dense-scope vs Pallas-aggregator dispatch through the executor."""
+    from repro.apps import pagerank
+    from repro.core import ChromaticEngine
+
+    rng = np.random.default_rng(0)
+    nv, ne = 2000, 8000
+    edges = set()
+    while len(edges) < ne:
+        u, v = rng.integers(0, nv, 2)
+        if u != v:
+            edges.add((min(int(u), int(v)), max(int(u), int(v))))
+    edges = np.asarray(sorted(edges), dtype=np.int64)
+    g = pagerank.make_graph(edges, nv)
+    upd = pagerank.make_update(-1.0)      # full sweeps: no early drain
+    entry = {"bench": "engine_dense_vs_aggregator", "app": "pagerank",
+             "nv": nv, "n_edges": int(len(edges)),
+             "max_deg": int(g.max_deg), "supersteps": 3,
+             "recorded_at": time.strftime("%Y-%m-%dT%H:%M:%S")}
+    for label, use_kernel in (("dense_scope", False), ("aggregator", True)):
+        eng = ChromaticEngine(g, upd, max_supersteps=3, use_kernel=use_kernel)
+        us = time_fn(lambda e=eng: e.run(num_supersteps=3), iters=2)
+        emit(f"engine_pagerank_{label}", us,
+             f"nv={nv};use_kernel={use_kernel}")
+        entry[f"{label}_us"] = round(us, 1)
+    entry["aggregator_speedup_over_dense"] = round(
+        entry["dense_scope_us"] / entry["aggregator_us"], 3)
+    _RESULTS.mkdir(exist_ok=True)
+    path = _RESULTS / "BENCH_engines.json"
+    history = json.loads(path.read_text()) if path.exists() else []
+    history.append(entry)
+    path.write_text(json.dumps(history, indent=2) + "\n")
 
 
 def run() -> None:
@@ -38,3 +83,5 @@ def run() -> None:
     emit("kernel_window_attn_ref", us, f"w={wlen}")
     us = time_fn(lambda: ops.decode_window_attention(q, k, v, kvl))
     emit("kernel_window_attn_pallas_interp", us, "interpret=True")
+
+    _bench_engine_paths()

@@ -19,17 +19,26 @@ import numpy as np
 from repro.core.coloring import bipartite_coloring
 from repro.core.graph import DataGraph, bipartite_edges
 from repro.core.sync import SyncOp
-from repro.core.update import Consistency, ScopeBatch, UpdateFn, UpdateResult
+from repro.core.update import (Consistency, ScopeBatch, UpdateFn,
+                               UpdateResult, aggregator_update,
+                               slot_fold_sum)
 
 
 def make_update(eps: float = 1e-3) -> UpdateFn:
-    def update(scope: ScopeBatch) -> UpdateResult:
-        probs = scope.nbr_data["p"]                  # [B, D, T]
-        w = scope.edge_data["count"]                 # [B, D]
-        m = scope.nbr_mask.astype(probs.dtype)
-        wm = (w * m)[..., None]
-        mix = (probs * wm).sum(axis=1)
-        denom = jnp.maximum(wm.sum(axis=1), 1e-9)
+    """CoEM update as a NeighborAggregator: the weighted probability-table
+    mix runs through the ``ell_spmv`` Pallas kernel (DESIGN.md §4); the
+    normalization / seed clamping happens in ``combine``."""
+
+    def feature(vertex_data):
+        return vertex_data["p"]                      # [..., T]
+
+    def weight(scope: ScopeBatch):
+        return scope.edge_data["count"]              # [B, D]
+
+    def combine(scope: ScopeBatch, mix) -> UpdateResult:
+        w = jnp.where(scope.nbr_mask, scope.edge_data["count"],
+                      0.0).astype(jnp.float32)
+        denom = jnp.maximum(slot_fold_sum(w), 1e-9)[:, None]
         new_p = mix / denom
         new_p = new_p / jnp.maximum(new_p.sum(-1, keepdims=True), 1e-9)
         # seeds are clamped to their prior label
@@ -42,7 +51,9 @@ def make_update(eps: float = 1e-3) -> UpdateFn:
             resched_nbrs=jnp.broadcast_to(changed[:, None], scope.nbr_mask.shape),
             priority=delta,
         )
-    return UpdateFn(update, Consistency.EDGE, name="coem")
+
+    return aggregator_update(feature, weight, combine, Consistency.EDGE,
+                             name="coem")
 
 
 def entropy_sync(tau: int = 1) -> SyncOp:

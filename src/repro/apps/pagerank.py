@@ -7,6 +7,12 @@ weight per undirected edge and normalize by out-degree on the fly).
 The update function is the paper's Alg. 1: recompute the weighted sum of
 neighbor ranks; if |old - new| > eps, reschedule the neighbors — the
 adaptive dynamic scheduling the paper highlights.
+
+The neighborhood reduction is declared as a ``NeighborAggregator``
+(feature = rank, weight = edge weight), so the engines dispatch it
+through the ``ell_spmv`` Pallas kernel instead of materializing dense
+[B, D, F] scopes; the dense fallback is derived from the same triple and
+is bit-identical (DESIGN.md §4).
 """
 from __future__ import annotations
 
@@ -16,17 +22,21 @@ import numpy as np
 from repro.core.coloring import greedy_coloring
 from repro.core.graph import DataGraph
 from repro.core.sync import top_two_sync, sum_sync
-from repro.core.update import Consistency, ScopeBatch, UpdateFn, UpdateResult
+from repro.core.update import (Consistency, ScopeBatch, UpdateFn,
+                               UpdateResult, aggregator_update)
 
 ALPHA = 0.15
 
 
 def make_update(eps: float = 1e-4) -> UpdateFn:
-    def update(scope: ScopeBatch) -> UpdateResult:
-        w = scope.edge_data["w"]                       # [B, D]
-        nbr_rank = scope.nbr_data["rank"]              # [B, D]
-        contrib = jnp.where(scope.nbr_mask, w * nbr_rank, 0.0)
-        new_rank = ALPHA + (1.0 - ALPHA) * contrib.sum(axis=1)
+    def feature(vertex_data):
+        return vertex_data["rank"][..., None]          # [..., 1]
+
+    def weight(scope: ScopeBatch):
+        return scope.edge_data["w"]                    # [B, D]
+
+    def combine(scope: ScopeBatch, y) -> UpdateResult:
+        new_rank = ALPHA + (1.0 - ALPHA) * y[..., 0]   # Alg. 1
         delta = jnp.abs(new_rank - scope.v_data["rank"])
         changed = delta > eps
         return UpdateResult(
@@ -34,7 +44,9 @@ def make_update(eps: float = 1e-4) -> UpdateFn:
             resched_nbrs=jnp.broadcast_to(changed[:, None], scope.nbr_mask.shape),
             priority=delta,
         )
-    return UpdateFn(update, Consistency.EDGE, name="pagerank")
+
+    return aggregator_update(feature, weight, combine, Consistency.EDGE,
+                             name="pagerank")
 
 
 def make_graph(edges: np.ndarray, n_vertices: int, seed: int = 0,

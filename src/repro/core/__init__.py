@@ -3,20 +3,27 @@
 Public API:
     DataGraph, bipartite_edges, grid_edges_3d
     Consistency, UpdateFn, ScopeBatch, UpdateResult
+    NeighborAggregator, aggregator_update, masked_neighbor_sum
     SyncOp, sum_sync, top_two_sync
     greedy_coloring, distance2_coloring, single_color, bipartite_coloring
-    ChromaticEngine, PriorityEngine, bsp_engine, run_sequential
+    ExecutorCore, ChromaticEngine, PriorityEngine, bsp_engine,
+    run_sequential
     two_phase_partition, random_partition
     ShardPlan, DistributedChromaticEngine
 """
 from repro.core.graph import DataGraph, bipartite_edges, grid_edges_3d
-from repro.core.update import (Consistency, ScopeBatch, UpdateFn,
-                               UpdateResult, gather_scopes, scatter_result)
+from repro.core.update import (Consistency, NeighborAggregator, ScopeBatch,
+                               UpdateFn, UpdateResult, aggregator_update,
+                               gather_scopes, masked_neighbor_sum,
+                               scatter_result)
 from repro.core.sync import SyncOp, sum_sync, top_two_sync
 from repro.core.coloring import (greedy_coloring, distance2_coloring,
                                  single_color, bipartite_coloring,
                                  verify_coloring)
-from repro.core.engine_chromatic import ChromaticEngine, EngineState
+from repro.core.exec import (EngineState, ExecutorCore, apply_batch,
+                             consume_and_reschedule, init_engine_state,
+                             refresh_syncs)
+from repro.core.engine_chromatic import ChromaticEngine
 from repro.core.engine_priority import PriorityEngine
 from repro.core.engine_bsp import bsp_engine
 from repro.core.engine_sequential import run_sequential

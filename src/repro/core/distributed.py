@@ -38,9 +38,10 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.core.exec import apply_batch, default_interpret, refresh_syncs
 from repro.core.graph import DataGraph
 from repro.core.sync import SyncOp
-from repro.core.update import UpdateFn, gather_scopes, scatter_result
+from repro.core.update import UpdateFn
 
 PyTree = Any
 
@@ -292,6 +293,8 @@ class DistributedChromaticEngine:
     max_supersteps: int = 100
     exchange_edges: bool = False   # app writes edge data on cut edges?
     axis: str = "shard"
+    use_kernel: bool = True                 # aggregator fast path on?
+    kernel_interpret: bool | None = None    # None -> auto (off-TPU: True)
 
     def __post_init__(self):
         devs = jax.devices()
@@ -306,36 +309,19 @@ class DistributedChromaticEngine:
     def _build_step(self):
         plan, upd, axis = self.plan, self.update_fn, self.axis
         M = plan.M
+        interpret = (self.kernel_interpret if self.kernel_interpret
+                     is not None else default_interpret())
+        use_kernel = self.use_kernel
 
         def color_phase(c, carry, struct, plan_b, globals_):
-            vdata, edata, active, priority, n_upd = carry
             ids = plan_b["color_ids"][c]
             valid = plan_b["color_valid"][c]
-            sel = valid & active[ids]
-            scope = gather_scopes(struct, vdata, edata, ids, globals_)
-            res = upd(scope)
-            vdata, edata = scatter_result(struct, vdata, edata, ids, sel,
-                                          scope, res)
-            safe_ids = jnp.where(sel, ids, plan.R)
-            active = active.at[safe_ids].set(False, mode="drop")
-            priority = priority.at[safe_ids].set(0.0, mode="drop")
-            if res.resched_self is not None:
-                re_self = sel & res.resched_self
-                active = active.at[jnp.where(re_self, ids, plan.R)].set(
-                    True, mode="drop")
-                if res.priority is not None:
-                    priority = priority.at[ids].max(
-                        jnp.where(re_self, res.priority, -jnp.inf))
-            if res.resched_nbrs is not None:
-                nmask = scope.nbr_mask & sel[:, None] & res.resched_nbrs
-                safe = jnp.where(nmask, scope.nbr_ids, plan.R)
-                active = active.at[safe.reshape(-1)].max(
-                    nmask.reshape(-1), mode="drop")
-                if res.priority is not None:
-                    pr = jnp.where(nmask, res.priority[:, None], -jnp.inf)
-                    priority = priority.at[safe.reshape(-1)].max(
-                        pr.reshape(-1), mode="drop")
-            n_upd = n_upd + sel.sum(dtype=jnp.int32)
+            # shared executor core: gather/kernel -> update -> scatter ->
+            # task-set consume/reschedule (OOB sentinel = local row R)
+            carry = apply_batch(
+                struct, upd, carry, ids, valid, globals_,
+                sentinel=plan.R, use_kernel=use_kernel, interpret=interpret)
+            vdata, edata, active, priority, n_upd = carry
 
             # ---- ghost data push (owner -> ghost) ----
             sidx, smask = plan_b["send_idx"][c], plan_b["send_mask"][c]
@@ -385,19 +371,20 @@ class DistributedChromaticEngine:
                 lambda c, s: color_phase(c, s, struct, plan_b, globals_),
                 carry)
             vdata, edata, active, priority, n_upd = carry
-            new_globals = dict(globals_)
-            for s_op in self.syncs:
-                due = (step + 1) % max(s_op.tau, 1) == 0
-                part = s_op.local_reduce(vdata, valid=plan_b["owned_mask"])
+
+            def dist_sync_run(s_op, vd):
+                # distributed evaluation of one sync: local Fold/Merge
+                # over owned rows, then all_gather + Merge across shards
+                part = s_op.local_reduce(vd, valid=plan_b["owned_mask"])
                 parts = jax.tree.map(
                     lambda x: jax.lax.all_gather(x, axis), part)
                 acc = jax.tree.map(lambda x: x[0], parts)
                 for m in range(1, M):
                     acc = s_op.merge(acc, jax.tree.map(lambda x: x[m], parts))
-                fresh = s_op.finalize(acc)
-                new_globals[s_op.key] = jax.tree.map(
-                    lambda new, old: jnp.where(due, new, old),
-                    fresh, globals_[s_op.key])
+                return s_op.finalize(acc)
+
+            new_globals = refresh_syncs(self.syncs, globals_, vdata, step,
+                                        run_fn=dist_sync_run)
             return (vdata, edata, active, priority, new_globals,
                     step + 1, n_upd)
 

@@ -28,7 +28,9 @@ from repro.core.update import UpdateFn
 
 
 def bsp_engine(graph: DataGraph, update_fn: UpdateFn,
-               syncs: Sequence[SyncOp] = (), max_supersteps: int = 100
-               ) -> ChromaticEngine:
+               syncs: Sequence[SyncOp] = (), max_supersteps: int = 100,
+               use_kernel: bool = True) -> ChromaticEngine:
+    """Strategy: one phase containing every active vertex (trivial color)."""
     g = graph.with_colors(single_color(graph.n_vertices))
-    return ChromaticEngine(g, update_fn, syncs, max_supersteps)
+    return ChromaticEngine(g, update_fn, syncs, max_supersteps,
+                           use_kernel=use_kernel)

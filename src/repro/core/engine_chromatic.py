@@ -1,4 +1,4 @@
-"""The Chromatic Engine (paper §4.2.1) as a jitted SPMD superstep program.
+"""The Chromatic Engine (paper §4.2.1) as a scheduling strategy.
 
 Execution model (paper Alg. 2): while the task set T is non-empty, remove
 and execute tasks.  The chromatic engine fixes RemoveNext to canonical
@@ -11,10 +11,13 @@ conflict-free and the whole execution is sequentially consistent
 order, which ``tests/test_consistency.py`` asserts bit-for-bit against a
 pure-Python sequential executor.
 
-The task set T is an ``active`` boolean mask (static shape); "add task"
-is a masked scatter-OR, "remove task" clears the bit.  Termination =
-``active.sum() == 0`` — a psum in the distributed engine, replacing the
-paper's Misra-marker consensus (see DESIGN.md §2).
+All engine machinery — the ``active`` task-set mask, OOB-sentinel
+scatter bookkeeping, sync refresh, the jitted while-loop, termination
+(``active.sum() == 0``; a psum in the distributed engine, replacing the
+paper's Misra-marker consensus, see DESIGN.md §2), and the Pallas
+aggregator fast path — lives in ``repro.core.exec``.  This class only
+answers "which conflict-free batch runs in phase c?": the static
+per-color vertex batches.
 
 Sync operations run every ``tau`` supersteps between color phases, as the
 paper prescribes ("the sync operation can be run safely between colors").
@@ -22,54 +25,19 @@ paper prescribes ("the sync operation can be run safely between colors").
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Any, Sequence
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.graph import DataGraph
-from repro.core.sync import SyncOp
-from repro.core.update import UpdateFn, gather_scopes, scatter_result
-
-PyTree = Any
-
-
-def build_color_batches(colors: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
-    """Stack per-color vertex-id lists into [n_colors, Cmax] (+valid mask)."""
-    colors = np.asarray(colors)
-    n_colors = int(colors.max()) + 1 if colors.size else 1
-    groups = [np.nonzero(colors == c)[0] for c in range(n_colors)]
-    cmax = max(1, max(len(g) for g in groups))
-    ids = np.zeros((n_colors, cmax), dtype=np.int32)
-    valid = np.zeros((n_colors, cmax), dtype=bool)
-    for c, g in enumerate(groups):
-        ids[c, : len(g)] = g
-        valid[c, : len(g)] = True
-    return ids, valid
-
-
-@jax.tree_util.register_dataclass
-@dataclasses.dataclass
-class EngineState:
-    vertex_data: PyTree
-    edge_data: PyTree
-    active: jax.Array        # [Nv] bool — the task set T
-    priority: jax.Array      # [Nv] f32  — task priorities (used by priority engine)
-    globals: dict            # sync results, keyed by SyncOp.key
-    superstep: jax.Array     # i32
-    n_updates: jax.Array     # i64-ish i32 total update-function applications
+# Re-exported for backward compatibility: EngineState and the batch
+# builder were born here and are imported from here by older call sites.
+from repro.core.exec import (EngineState, ExecutorCore,  # noqa: F401
+                             build_color_batches)
 
 
 @dataclasses.dataclass
-class ChromaticEngine:
-    """Compiles (graph structure, update_fn, syncs) into a jitted runner."""
-
-    graph: DataGraph
-    update_fn: UpdateFn
-    syncs: Sequence[SyncOp] = ()
-    max_supersteps: int = 100
+class ChromaticEngine(ExecutorCore):
+    """Strategy: phase c = all active vertices of color c (static batches)."""
 
     def __post_init__(self):
         if self.graph.colors is None:
@@ -78,91 +46,7 @@ class ChromaticEngine:
         self._color_ids = jnp.asarray(ids)
         self._color_valid = jnp.asarray(valid)
         self.n_colors = ids.shape[0]
+        self.n_phases = self.n_colors
 
-    # ------------------------------------------------------------------
-    def init_state(self, active: jax.Array | None = None,
-                   priority: jax.Array | None = None) -> EngineState:
-        nv = self.graph.n_vertices
-        if active is None:
-            active = jnp.ones((nv,), bool)
-        if priority is None:
-            priority = active.astype(jnp.float32)
-        globals_ = {s.key: s.run(self.graph.vertex_data) for s in self.syncs}
-        return EngineState(
-            vertex_data=self.graph.vertex_data,
-            edge_data=self.graph.edge_data,
-            active=active, priority=priority, globals=globals_,
-            superstep=jnp.int32(0), n_updates=jnp.int32(0),
-        )
-
-    # ------------------------------------------------------------------
-    def _color_phase(self, state: EngineState, c: jax.Array) -> EngineState:
-        g = self.graph
-        ids = self._color_ids[c]          # [Cmax]
-        valid = self._color_valid[c]
-        sel = valid & state.active[ids]
-        scope = gather_scopes(g, state.vertex_data, state.edge_data, ids,
-                              state.globals)
-        res = self.update_fn(scope)
-        vdata, edata = scatter_result(
-            g, state.vertex_data, state.edge_data, ids, sel, scope, res)
-        # -- task bookkeeping: consume executed tasks, add returned tasks.
-        # Padded batch slots alias vertex 0; route them to an OOB sentinel
-        # so duplicate-index scatters cannot clobber real writes.
-        safe_ids = jnp.where(sel, ids, g.n_vertices)
-        active = state.active.at[safe_ids].set(False, mode="drop")
-        priority = state.priority.at[safe_ids].set(0.0, mode="drop")
-        if res.resched_self is not None:
-            re_self = sel & res.resched_self
-            active = active.at[jnp.where(re_self, ids, g.n_vertices)].set(
-                True, mode="drop")
-        if res.resched_nbrs is not None:
-            nmask = scope.nbr_mask & sel[:, None] & res.resched_nbrs
-            safe = jnp.where(nmask, scope.nbr_ids, g.n_vertices)
-            active = active.at[safe.reshape(-1)].max(
-                nmask.reshape(-1), mode="drop")
-            if res.priority is not None:
-                # neighbors inherit the scheduling priority of the rescheduler
-                pr = jnp.where(nmask, res.priority[:, None], -jnp.inf)
-                priority = priority.at[safe.reshape(-1)].max(
-                    pr.reshape(-1), mode="drop")
-        if res.priority is not None and res.resched_self is not None:
-            pr_self = jnp.where(sel & res.resched_self, res.priority, -jnp.inf)
-            priority = priority.at[ids].max(pr_self)
-        return dataclasses.replace(
-            state, vertex_data=vdata, edge_data=edata, active=active,
-            priority=priority, n_updates=state.n_updates + sel.sum(dtype=jnp.int32))
-
-    def _superstep(self, state: EngineState) -> EngineState:
-        state = jax.lax.fori_loop(
-            0, self.n_colors, lambda c, s: self._color_phase(s, c), state)
-        # sync ops between supersteps (== "between colors" safety, §4.2.1)
-        new_globals = dict(state.globals)
-        for s in self.syncs:
-            due = (state.superstep + 1) % max(s.tau, 1) == 0
-            fresh = s.run(state.vertex_data)
-            new_globals[s.key] = jax.tree.map(
-                lambda new, old: jnp.where(due, new, old),
-                fresh, state.globals[s.key])
-        return dataclasses.replace(
-            state, globals=new_globals, superstep=state.superstep + 1)
-
-    # ------------------------------------------------------------------
-    @functools.cached_property
-    def _run_jit(self):
-        def cond(state):
-            return (state.active.any()) & (state.superstep < self.max_supersteps)
-        def run(state):
-            return jax.lax.while_loop(cond, self._superstep, state)
-        return jax.jit(run)
-
-    def run(self, active: jax.Array | None = None,
-            num_supersteps: int | None = None) -> EngineState:
-        """Run to convergence of the task set (or max_supersteps)."""
-        state = self.init_state(active)
-        if num_supersteps is not None:
-            step = jax.jit(self._superstep)
-            for _ in range(num_supersteps):
-                state = step(state)
-            return state
-        return self._run_jit(state)
+    def select(self, c, ctx):
+        return self._color_ids[c], self._color_valid[c]

@@ -23,32 +23,28 @@ special case priority := insertion counter (negated).
 The ``maxpending`` knob of the paper's lock pipeline reappears here as
 ``k_select``: how much work is in flight per superstep.  Benchmarks sweep
 it like the paper's Fig. 8(b) sweeps maxpending.
+
+As a scheduling strategy over ``repro.core.exec.ExecutorCore``, the
+whole engine is the top-k selection below: bookkeeping, sync refresh,
+the runner and the kernel fast path are shared with the other engines.
 """
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Any, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.graph import DataGraph
-from repro.core.sync import SyncOp
-from repro.core.update import UpdateFn, gather_scopes, scatter_result
-from repro.core.engine_chromatic import EngineState
-
-PyTree = Any
+from repro.core.exec import EngineState, ExecutorCore
 
 
 @dataclasses.dataclass
-class PriorityEngine:
-    graph: DataGraph
-    update_fn: UpdateFn
-    syncs: Sequence[SyncOp] = ()
-    k_select: int = 64          # "maxpending": tasks in flight per superstep
+class PriorityEngine(ExecutorCore):
+    """Strategy: top-k priority selection, executed color-by-color."""
+
     max_supersteps: int = 1000
+    k_select: int = 64          # "maxpending": tasks in flight per superstep
     fifo: bool = False          # FIFO ordering (paper: "efficient FIFO and
                                 # priority-based scheduling"): priority is
                                 # ignored; tasks keep insertion order via a
@@ -58,24 +54,10 @@ class PriorityEngine:
         if self.graph.colors is None:
             raise ValueError("graph needs colors; call graph.with_colors(...)")
         self.n_colors = int(np.asarray(self.graph.colors).max()) + 1
+        self.n_phases = self.n_colors
 
-    def init_state(self, active=None, priority=None) -> EngineState:
-        nv = self.graph.n_vertices
-        if active is None:
-            active = jnp.ones((nv,), bool)
-        if priority is None:
-            priority = active.astype(jnp.float32)
-        globals_ = {s.key: s.run(self.graph.vertex_data) for s in self.syncs}
-        return EngineState(
-            vertex_data=self.graph.vertex_data,
-            edge_data=self.graph.edge_data,
-            active=active, priority=priority, globals=globals_,
-            superstep=jnp.int32(0), n_updates=jnp.int32(0))
-
-    # ------------------------------------------------------------------
-    def _superstep(self, state: EngineState) -> EngineState:
-        g = self.graph
-        k = min(self.k_select, g.n_vertices)
+    def prepare(self, state: EngineState):
+        k = min(self.k_select, self.graph.n_vertices)
         if self.fifo:
             # FIFO: earlier-inserted first == larger (superstep-stamped)
             # negative timestamp; ties by vertex id via top_k stability.
@@ -84,69 +66,13 @@ class PriorityEngine:
             score = jnp.where(state.active, state.priority, -jnp.inf)
         _, top_ids = jax.lax.top_k(score, k)            # [K]
         top_sel = state.active[top_ids]                 # mask -inf rows out
-        # execute the selected set color phase by color phase
-        vcolors = g.colors[top_ids]
+        return top_ids, top_sel, self.graph.colors[top_ids]
 
-        def phase(c, st):
-            vdata, edata, active, priority, n_upd = st
-            sel = top_sel & (vcolors == c) & active[top_ids]
-            scope = gather_scopes(g, vdata, edata, top_ids, state.globals)
-            res = self.update_fn(scope)
-            vdata, edata = scatter_result(
-                g, vdata, edata, top_ids, sel, scope, res)
-            active = active.at[top_ids].set(active[top_ids] & ~sel)
-            priority = priority.at[top_ids].set(
-                jnp.where(sel, 0.0, priority[top_ids]))
-            if res.resched_self is not None:
-                active = active.at[top_ids].max(sel & res.resched_self)
-                if res.priority is not None:
-                    priority = priority.at[top_ids].max(
-                        jnp.where(sel & res.resched_self, res.priority, -jnp.inf))
-            if res.resched_nbrs is not None:
-                nmask = scope.nbr_mask & sel[:, None] & res.resched_nbrs
-                safe = jnp.where(nmask, scope.nbr_ids, g.n_vertices)
-                active = active.at[safe.reshape(-1)].max(
-                    nmask.reshape(-1), mode="drop")
-                if self.fifo:
-                    stamp = (state.superstep + 1).astype(jnp.float32)
-                    pr = jnp.where(nmask, stamp, -jnp.inf)
-                    priority = priority.at[safe.reshape(-1)].max(
-                        pr.reshape(-1), mode="drop")
-                elif res.priority is not None:
-                    pr = jnp.where(nmask, res.priority[:, None], -jnp.inf)
-                    priority = priority.at[safe.reshape(-1)].max(
-                        pr.reshape(-1), mode="drop")
-            return (vdata, edata, active, priority,
-                    n_upd + sel.sum(dtype=jnp.int32))
+    def select(self, c, ctx):
+        top_ids, top_sel, vcolors = ctx
+        return top_ids, top_sel & (vcolors == c)
 
-        st = (state.vertex_data, state.edge_data, state.active,
-              state.priority, state.n_updates)
-        vdata, edata, active, priority, n_upd = jax.lax.fori_loop(
-            0, self.n_colors, phase, st)
-        new_globals = dict(state.globals)
-        for s in self.syncs:
-            due = (state.superstep + 1) % max(s.tau, 1) == 0
-            fresh = s.run(vdata)
-            new_globals[s.key] = jax.tree.map(
-                lambda new, old: jnp.where(due, new, old),
-                fresh, state.globals[s.key])
-        return EngineState(
-            vertex_data=vdata, edge_data=edata, active=active,
-            priority=priority, globals=new_globals,
-            superstep=state.superstep + 1, n_updates=n_upd)
-
-    @functools.cached_property
-    def _run_jit(self):
-        def cond(state):
-            return state.active.any() & (state.superstep < self.max_supersteps)
-        return jax.jit(lambda s: jax.lax.while_loop(cond, self._superstep, s))
-
-    def run(self, active=None, priority=None,
-            num_supersteps: int | None = None) -> EngineState:
-        state = self.init_state(active, priority)
-        if num_supersteps is not None:
-            step = jax.jit(self._superstep)
-            for _ in range(num_supersteps):
-                state = step(state)
-            return state
-        return self._run_jit(state)
+    def nbr_stamp(self, state: EngineState):
+        if not self.fifo:
+            return None
+        return (state.superstep + 1).astype(jnp.float32)

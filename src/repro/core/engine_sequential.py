@@ -1,11 +1,27 @@
 """Sequential reference executor — the oracle for Def. 3.1.
 
-Executes update tasks strictly one at a time in the chromatic engine's
-canonical (color, vertex-id) order, calling the *same* vectorized update
-function with batch size 1.  A parallel engine is sequentially consistent
-iff its resulting data graph equals this executor's bit-for-bit (for a
-deterministic update function).  Used only in tests; intentionally
-unjitted and simple.
+Executes update tasks strictly one at a time, calling the *same*
+vectorized update function with batch size 1.  A parallel engine is
+sequentially consistent iff its resulting data graph equals this
+executor's bit-for-bit (for a deterministic update function).  Used only
+in tests; intentionally unjitted and simple.
+
+The oracle replays each engine's RemoveNext policy (§3.4), so every
+scheduling strategy of the shared executor core can be checked against
+it:
+
+* default            — the chromatic engine's canonical (superstep,
+  color, vertex-id) order;
+* ``k_select=K``     — the priority engine's order: each superstep
+  selects the K highest-priority active vertices (stable ties by id,
+  matching ``jax.lax.top_k``), then sweeps them color by color, with
+  the same consume/reschedule priority bookkeeping as the engines;
+* ``snapshot_phases``— gathers every phase's scopes from a snapshot
+  taken at phase start.  For a proper coloring this changes nothing
+  (same-phase vertices are non-adjacent); with the trivial single
+  coloring it models the BSP engine's Jacobi semantics, which is how
+  the BSP engine is validated (it is *not* sequentially consistent —
+  the snapshot oracle is its ground truth instead).
 """
 from __future__ import annotations
 
@@ -26,6 +42,8 @@ def run_sequential(
     syncs: Sequence[SyncOp] = (),
     active: np.ndarray | None = None,
     max_supersteps: int = 100,
+    k_select: int | None = None,
+    snapshot_phases: bool = False,
 ):
     """Returns (vertex_data, edge_data, globals, n_updates)."""
     nv = graph.n_vertices
@@ -34,32 +52,64 @@ def run_sequential(
     per_color = [np.nonzero(colors == c)[0] for c in range(n_colors)]
     vdata, edata = graph.vertex_data, graph.edge_data
     act = np.ones(nv, bool) if active is None else np.asarray(active).copy()
+    prio = act.astype(np.float32).copy()
     globals_ = {s.key: s.run(vdata) for s in syncs}
     n_updates = 0
 
     for step in range(max_supersteps):
         if not act.any():
             break
+        if k_select is None:
+            chosen = None
+        else:
+            # the priority engine's RemoveNext: top-k by priority with
+            # stable ties by vertex id (jax.lax.top_k semantics)
+            k = min(k_select, nv)
+            score = np.where(act, prio, -np.inf)
+            chosen = np.argsort(-score, kind="stable")[:k]
+            chosen = chosen[act[chosen]]          # mask -inf rows out
         for c in range(n_colors):
             # snapshot the phase's task selection exactly like the engine:
             # tasks added *during* phase c run no earlier than phase c+1.
-            sel = [v for v in per_color[c] if act[v]]
+            if chosen is None:
+                sel = [v for v in per_color[c] if act[v]]
+            else:
+                sel = [int(v) for v in chosen if colors[v] == c and act[v]]
+            gather_src = (vdata, edata) if snapshot_phases else None
+            # the engines apply task bookkeeping at *batch* granularity:
+            # every executed task is consumed, then all returned tasks
+            # are OR/max-merged — so a reschedule raised by a same-phase
+            # vertex survives the target's own consumption.  Collect the
+            # phase's effects and apply them at phase end.
+            consumed: list[int] = []
+            resched: dict[int, float] = {}
             for v in sel:
                 ids = jnp.asarray([v], jnp.int32)
-                scope = gather_scopes(graph, vdata, edata, ids, globals_)
+                src_v, src_e = gather_src if snapshot_phases else (vdata, edata)
+                scope = gather_scopes(graph, src_v, src_e, ids, globals_)
                 res = update_fn(scope)
                 valid = jnp.ones((1,), bool)
                 vdata, edata = scatter_result(
                     graph, vdata, edata, ids, valid, scope, res)
-                act[v] = False
+                consumed.append(v)
+                pr = (float(res.priority[0]) if res.priority is not None
+                      else -np.inf)
                 if res.resched_self is not None and bool(res.resched_self[0]):
-                    act[v] = True
+                    resched[v] = max(resched.get(v, -np.inf), pr)
                 if res.resched_nbrs is not None:
                     nmask = np.asarray(scope.nbr_mask[0] & res.resched_nbrs[0])
                     for j, nb in enumerate(np.asarray(scope.nbr_ids[0])):
                         if nmask[j]:
-                            act[int(nb)] = True
+                            resched[int(nb)] = max(
+                                resched.get(int(nb), -np.inf), pr)
                 n_updates += 1
+            for v in consumed:
+                act[v] = False
+                prio[v] = 0.0
+            for u, pr in resched.items():
+                act[u] = True
+                if np.isfinite(pr):
+                    prio[u] = max(prio[u], pr)
         for s in syncs:
             if (step + 1) % max(s.tau, 1) == 0:
                 globals_[s.key] = s.run(vdata)

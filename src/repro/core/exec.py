@@ -1,0 +1,313 @@
+"""Shared executor core: one engine skeleton, many scheduling strategies.
+
+The paper's central claim (§3-4) is that a single abstraction — data
+graph + update function + scheduler — serves chromatic, locking/priority
+and BSP execution without rewriting user code.  This module is that
+claim in code (DESIGN.md §1): everything the concrete engines used to
+triplicate lives here exactly once:
+
+* ``EngineState``           — the jittable engine state pytree.
+* ``init_engine_state``     — task-set / priority / sync-result init.
+* ``consume_and_reschedule``— the task-set algebra: consume executed
+  tasks, OR/max-merge returned tasks, all via the OOB-sentinel scatter
+  trick (padded batch slots alias vertex 0; routing them to an
+  out-of-bounds index makes ``mode="drop"`` scatters exact).
+* ``dispatch_update``       — scope materialization + update dispatch,
+  including the Pallas aggregator fast path (DESIGN.md §4): an update
+  function that declares itself a linear neighbor aggregation skips the
+  dense ``[B, D, F]`` scope gather and runs through the ``ell_spmv``
+  kernel instead.
+* ``apply_batch``           — one conflict-free batch end to end:
+  select -> gather/kernel -> update -> scatter -> bookkeeping.
+* ``refresh_syncs``         — periodic sync-op refresh ("between
+  colors", §4.2.1), parameterized over how a single sync is evaluated so
+  the distributed engine can plug in its all_gather+merge reduction.
+* ``ExecutorCore``          — the jitted while-loop runner.  A concrete
+  engine subclasses it and implements only the *scheduling strategy*:
+  how to pick the next conflict-free batch (``prepare``/``select``).
+
+The distributed engine reuses ``apply_batch``/``refresh_syncs`` inside
+``shard_map`` rather than subclassing (its superstep interleaves ghost
+exchanges with color phases), so the bookkeeping still exists once.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.graph import DataGraph
+from repro.core.sync import SyncOp
+from repro.core.update import UpdateFn, gather_scopes, scatter_result
+from repro.kernels.ell_spmv import ell_fold, ell_spmv
+from repro.kernels.ops import default_interpret
+
+PyTree = Any
+
+
+# ----------------------------------------------------------------------
+# Engine state
+# ----------------------------------------------------------------------
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class EngineState:
+    vertex_data: PyTree
+    edge_data: PyTree
+    active: jax.Array        # [Nv] bool — the task set T
+    priority: jax.Array      # [Nv] f32  — task priorities (priority engine)
+    globals: dict            # sync results, keyed by SyncOp.key
+    superstep: jax.Array     # i32
+    n_updates: jax.Array     # i32 total update-function applications
+
+
+def init_engine_state(vertex_data: PyTree, edge_data: PyTree,
+                      n_vertices: int, syncs: Sequence[SyncOp],
+                      active: jax.Array | None = None,
+                      priority: jax.Array | None = None) -> EngineState:
+    if active is None:
+        active = jnp.ones((n_vertices,), bool)
+    if priority is None:
+        priority = active.astype(jnp.float32)
+    globals_ = {s.key: s.run(vertex_data) for s in syncs}
+    return EngineState(
+        vertex_data=vertex_data, edge_data=edge_data,
+        active=active, priority=priority, globals=globals_,
+        superstep=jnp.int32(0), n_updates=jnp.int32(0))
+
+
+def build_color_batches(colors: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+    """Stack per-color vertex-id lists into [n_colors, Cmax] (+valid mask)."""
+    colors = np.asarray(colors)
+    n_colors = int(colors.max()) + 1 if colors.size else 1
+    groups = [np.nonzero(colors == c)[0] for c in range(n_colors)]
+    cmax = max(1, max(len(g) for g in groups))
+    ids = np.zeros((n_colors, cmax), dtype=np.int32)
+    valid = np.zeros((n_colors, cmax), dtype=bool)
+    for c, g in enumerate(groups):
+        ids[c, : len(g)] = g
+        valid[c, : len(g)] = True
+    return ids, valid
+
+
+# ----------------------------------------------------------------------
+# Task-set algebra
+# ----------------------------------------------------------------------
+
+def consume_and_reschedule(active, priority, ids, sel, nbr_ids, nbr_mask,
+                           res, sentinel: int, nbr_stamp=None):
+    """Consume executed tasks and merge the returned task set.
+
+    ``sentinel`` is the OOB row index (n_vertices locally, R per shard):
+    padded/unselected batch slots are routed there so duplicate-index
+    scatters cannot clobber real writes.  ``nbr_stamp`` overrides the
+    priority given to rescheduled neighbors (FIFO insertion stamping).
+    """
+    safe_ids = jnp.where(sel, ids, sentinel)
+    active = active.at[safe_ids].set(False, mode="drop")
+    priority = priority.at[safe_ids].set(0.0, mode="drop")
+    if res.resched_self is not None:
+        re_self = sel & res.resched_self
+        active = active.at[jnp.where(re_self, ids, sentinel)].set(
+            True, mode="drop")
+    if res.resched_nbrs is not None:
+        nmask = nbr_mask & sel[:, None] & res.resched_nbrs
+        safe = jnp.where(nmask, nbr_ids, sentinel)
+        active = active.at[safe.reshape(-1)].max(
+            nmask.reshape(-1), mode="drop")
+        if nbr_stamp is not None:
+            # FIFO: neighbors enter the queue stamped with insertion time
+            pr = jnp.where(nmask, nbr_stamp, -jnp.inf)
+            priority = priority.at[safe.reshape(-1)].max(
+                pr.reshape(-1), mode="drop")
+        elif res.priority is not None:
+            # neighbors inherit the scheduling priority of the rescheduler
+            pr = jnp.where(nmask, res.priority[:, None], -jnp.inf)
+            priority = priority.at[safe.reshape(-1)].max(
+                pr.reshape(-1), mode="drop")
+    if res.priority is not None and res.resched_self is not None:
+        pr_self = jnp.where(sel & res.resched_self, res.priority, -jnp.inf)
+        priority = priority.at[safe_ids].max(pr_self, mode="drop")
+    return active, priority
+
+
+# ----------------------------------------------------------------------
+# Update dispatch (dense scopes or the Pallas aggregator fast path)
+# ----------------------------------------------------------------------
+
+def dispatch_update(struct, update_fn: UpdateFn, vertex_data, edge_data,
+                    ids, sel, globals_, *, use_kernel: bool,
+                    interpret: bool):
+    """Materialize scopes for ``ids`` and run the update function.
+
+    If the update declares a ``NeighborAggregator`` and the kernel path
+    is enabled, the dense ``[B, D, F]`` neighbor-data gather is skipped:
+    a lite scope (no ``nbr_data``) is materialized and the gather+combine
+    runs through the ``ell_spmv`` Pallas kernel with per-slot edge
+    weights and the active-row mask ``sel``.  With the kernel path
+    disabled, the dense scope is reduced through ``ell_fold`` — the same
+    kernel arithmetic with the *same* ``interpret`` setting — which is
+    what makes the two paths bit-identical (DESIGN.md §4).
+    """
+    agg = update_fn.aggregator
+    if agg is None:
+        scope = gather_scopes(struct, vertex_data, edge_data, ids, globals_)
+        return scope, update_fn(scope)
+    if not use_kernel:
+        scope = gather_scopes(struct, vertex_data, edge_data, ids, globals_)
+        w = jnp.where(scope.nbr_mask, agg.weight(scope),
+                      0.0).astype(jnp.float32)
+        vals = agg.feature(scope.nbr_data).astype(jnp.float32)
+        y = ell_fold(w, vals, interpret=interpret)
+        return scope, agg.combine(scope, y)
+    scope = gather_scopes(struct, vertex_data, edge_data, ids, globals_,
+                          with_nbr_data=False)
+    w = jnp.where(scope.nbr_mask, agg.weight(scope), 0.0).astype(jnp.float32)
+    x = agg.feature(vertex_data).astype(jnp.float32)
+    y = ell_spmv(scope.nbr_ids, w, x, row_mask=sel, interpret=interpret)
+    return scope, agg.combine(scope, y)
+
+
+def apply_batch(struct, update_fn: UpdateFn, carry, ids, valid, globals_,
+                *, sentinel: int, nbr_stamp=None, use_kernel: bool = True,
+                interpret: bool = False):
+    """Execute one conflict-free batch: the body every engine shares.
+
+    ``carry`` is ``(vertex_data, edge_data, active, priority, n_updates)``;
+    ``valid`` masks padded/foreign batch slots; tasks actually executed
+    are ``valid & active[ids]``.
+    """
+    vdata, edata, active, priority, n_upd = carry
+    sel = valid & active[ids]
+    scope, res = dispatch_update(
+        struct, update_fn, vdata, edata, ids, sel, globals_,
+        use_kernel=use_kernel, interpret=interpret)
+    vdata, edata = scatter_result(struct, vdata, edata, ids, sel, scope, res)
+    active, priority = consume_and_reschedule(
+        active, priority, ids, sel, scope.nbr_ids, scope.nbr_mask, res,
+        sentinel, nbr_stamp=nbr_stamp)
+    return (vdata, edata, active, priority,
+            n_upd + sel.sum(dtype=jnp.int32))
+
+
+# ----------------------------------------------------------------------
+# Sync-op refresh
+# ----------------------------------------------------------------------
+
+def refresh_syncs(syncs: Sequence[SyncOp], globals_: dict, vertex_data,
+                  superstep, run_fn=None) -> dict:
+    """Refresh every sync op whose tau divides the finished superstep.
+
+    ``run_fn(sync, vertex_data)`` evaluates one sync; the default is the
+    local tree-reduction, the distributed engine passes its
+    all_gather+merge reduction.
+    """
+    if run_fn is None:
+        run_fn = lambda s, vd: s.run(vd)
+    new_globals = dict(globals_)
+    for s in syncs:
+        due = (superstep + 1) % max(s.tau, 1) == 0
+        fresh = run_fn(s, vertex_data)
+        new_globals[s.key] = jax.tree.map(
+            lambda new, old: jnp.where(due, new, old),
+            fresh, globals_[s.key])
+    return new_globals
+
+
+# ----------------------------------------------------------------------
+# The executor: jitted while-loop over strategy-selected batches
+# ----------------------------------------------------------------------
+
+@dataclasses.dataclass
+class ExecutorCore:
+    """Engine skeleton; subclasses supply the scheduling strategy.
+
+    A strategy answers one question — which conflict-free batch runs in
+    phase ``c``? — via ``prepare`` (once per superstep, e.g. a top-k
+    selection) and ``select`` (per phase, returning ``(ids, valid)``).
+    Everything else (task bookkeeping, sync refresh, termination,
+    kernel dispatch) is shared.
+    """
+
+    graph: DataGraph
+    update_fn: UpdateFn
+    syncs: Sequence[SyncOp] = ()
+    max_supersteps: int = 100
+    use_kernel: bool = True                 # aggregator fast path on?
+    kernel_interpret: bool | None = None    # None -> auto (off-TPU: True)
+
+    # -- strategy interface -------------------------------------------
+    n_phases: int = dataclasses.field(init=False, default=1)
+
+    def prepare(self, state: EngineState):
+        """Once-per-superstep selection context (e.g. top-k ids)."""
+        return None
+
+    def select(self, c, ctx):
+        """Phase ``c``'s conflict-free batch: (ids [B], valid [B])."""
+        raise NotImplementedError
+
+    def nbr_stamp(self, state: EngineState):
+        """Priority override for rescheduled neighbors (FIFO stamps)."""
+        return None
+
+    # -- shared machinery ---------------------------------------------
+    def _interpret(self) -> bool:
+        if self.kernel_interpret is not None:
+            return self.kernel_interpret
+        return default_interpret()
+
+    def init_state(self, active: jax.Array | None = None,
+                   priority: jax.Array | None = None) -> EngineState:
+        return init_engine_state(
+            self.graph.vertex_data, self.graph.edge_data,
+            self.graph.n_vertices, self.syncs, active, priority)
+
+    def _superstep(self, state: EngineState) -> EngineState:
+        ctx = self.prepare(state)
+        stamp = self.nbr_stamp(state)
+        interpret = self._interpret()
+
+        def phase(c, carry):
+            ids, valid = self.select(c, ctx)
+            return apply_batch(
+                self.graph, self.update_fn, carry, ids, valid,
+                state.globals, sentinel=self.graph.n_vertices,
+                nbr_stamp=stamp, use_kernel=self.use_kernel,
+                interpret=interpret)
+
+        carry = (state.vertex_data, state.edge_data, state.active,
+                 state.priority, state.n_updates)
+        vdata, edata, active, priority, n_upd = jax.lax.fori_loop(
+            0, self.n_phases, phase, carry)
+        new_globals = refresh_syncs(
+            self.syncs, state.globals, vdata, state.superstep)
+        return EngineState(
+            vertex_data=vdata, edge_data=edata, active=active,
+            priority=priority, globals=new_globals,
+            superstep=state.superstep + 1, n_updates=n_upd)
+
+    @functools.cached_property
+    def _step_jit(self):
+        return jax.jit(self._superstep)
+
+    @functools.cached_property
+    def _run_jit(self):
+        def cond(state):
+            return state.active.any() & (state.superstep < self.max_supersteps)
+        return jax.jit(lambda s: jax.lax.while_loop(cond, self._superstep, s))
+
+    def run(self, active: jax.Array | None = None,
+            priority: jax.Array | None = None,
+            num_supersteps: int | None = None) -> EngineState:
+        """Run to convergence of the task set (or max/num supersteps)."""
+        state = self.init_state(active, priority)
+        if num_supersteps is not None:
+            for _ in range(num_supersteps):
+                state = self._step_jit(state)
+            return state
+        return self._run_jit(state)

@@ -66,25 +66,126 @@ class UpdateResult:
 
 
 @dataclasses.dataclass(frozen=True)
+class NeighborAggregator:
+    """Declares an update as a *linear neighbor aggregation* (sweep form).
+
+    Most of the paper's sweep workloads (PageRank Alg. 1, CoEM, the BSP
+    baselines) reduce their neighborhood with one weighted sum
+
+        y[v] = sum_j  w[v, j] * feature(D_{nbr(v, j)})
+
+    followed by per-vertex post-processing.  Declaring that structure
+    lets the executor skip the dense ``[B, D, F]`` scope gather and
+    dispatch the sum through the ``kernels/ell_spmv`` Pallas kernel
+    (DESIGN.md §4).
+
+    * ``feature(vertex_data) -> [..., F]`` — the aggregated quantity.
+      Must be a rowwise map (leading axes preserved): the executor
+      applies it to ``[Nv, ...]`` vertex data for the kernel path and to
+      ``[B, D, ...]`` gathered neighbor data for the dense fallback.
+    * ``weight(scope) -> [B, D]`` — per-slot edge weights, computed from
+      a lite scope (``nbr_data`` is None there — use edge data / masks).
+    * ``combine(scope, y) -> UpdateResult`` — post-processing of the
+      aggregate ``y [B, F]``; must not touch ``scope.nbr_data``.
+    """
+    feature: Callable[[PyTree], jax.Array]
+    weight: Callable[["ScopeBatch"], jax.Array]
+    combine: Callable[["ScopeBatch", jax.Array], "UpdateResult"]
+
+
+@dataclasses.dataclass(frozen=True)
 class UpdateFn:
     """An update function plus the consistency model it requires."""
     fn: Callable[[ScopeBatch], UpdateResult]
     consistency: Consistency = Consistency.EDGE
     name: str = "update"
+    aggregator: NeighborAggregator | None = None
 
     def __call__(self, scope: ScopeBatch) -> UpdateResult:
         return self.fn(scope)
 
 
 # ----------------------------------------------------------------------
+# Slot-axis reductions shared by the dense and kernel update paths.
+#
+# Floating multiply-add chains are contraction-sensitive: whether the
+# compiler fuses ``a*b + c`` into an FMA depends on the surrounding
+# program, so writing "the same" fold twice (once in jnp, once in the
+# kernel) does NOT give bitwise-equal results.  The dense fallback of an
+# aggregator update therefore reduces its materialized scopes through
+# ``kernels.ell_fold`` — the *same* kernel as the fast path, applied
+# with trivial indices — which is the only robust way to make the two
+# paths bit-identical (DESIGN.md §4).  Pure additions (``slot_fold_sum``)
+# are contraction-safe and stay in plain jnp.
+# ----------------------------------------------------------------------
+
+def weighted_slot_fold(w: jax.Array, vals: jax.Array,
+                       interpret: bool | None = None) -> jax.Array:
+    """sum_j w[:, j] * vals[:, j] — w [B, D] (pre-masked), vals [B, D, F].
+
+    Runs through the ``ell_spmv`` kernel's accumulation (interpret mode
+    off-TPU) so the result is bit-identical to the aggregator fast path.
+    """
+    from repro.kernels.ell_spmv import ell_fold
+    from repro.kernels.ops import default_interpret
+    if interpret is None:
+        interpret = default_interpret()
+    return ell_fold(w, vals, interpret=interpret)
+
+
+def slot_fold_sum(vals: jax.Array) -> jax.Array:
+    """acc_j += vals[:, j] — left-fold sum over the slot axis (add-only,
+    hence contraction-safe in any compilation context)."""
+    acc = jnp.zeros(vals.shape[:1] + vals.shape[2:], jnp.float32)
+    for j in range(vals.shape[1]):
+        acc = acc + vals[:, j]
+    return acc
+
+
+def masked_neighbor_sum(weights: jax.Array, values: jax.Array,
+                        mask: jax.Array) -> jax.Array:
+    """sum_j mask*weights[:, j] * values[:, j] with kernel-grade
+    (bit-stable) accumulation; values may be [B, D] or [B, D, F]."""
+    w = jnp.where(mask, weights, 0.0).astype(jnp.float32)
+    squeeze = values.ndim == 2
+    vals = (values[..., None] if squeeze else values).astype(jnp.float32)
+    y = weighted_slot_fold(w, vals)
+    return y[..., 0] if squeeze else y
+
+
+def aggregator_update(feature, weight, combine,
+                      consistency: Consistency = Consistency.EDGE,
+                      name: str = "aggregate") -> UpdateFn:
+    """Build an UpdateFn from a NeighborAggregator declaration.
+
+    The returned dense ``fn`` (used with fully materialized scopes, by
+    the sequential oracle, and when the kernel path is disabled) derives
+    from the *same* (feature, weight, combine) triple and reduces the
+    dense scope through the same kernel arithmetic, so both paths agree
+    bit-for-bit.
+    """
+    agg = NeighborAggregator(feature=feature, weight=weight, combine=combine)
+
+    def dense_fn(scope: ScopeBatch) -> UpdateResult:
+        w = jnp.where(scope.nbr_mask, weight(scope), 0.0).astype(jnp.float32)
+        vals = feature(scope.nbr_data).astype(jnp.float32)
+        return combine(scope, weighted_slot_fold(w, vals))
+
+    return UpdateFn(dense_fn, consistency, name=name, aggregator=agg)
+
+
+# ----------------------------------------------------------------------
 # Scope materialization: the gather (pull) half of the engine.
 # ----------------------------------------------------------------------
 
-def gather_scopes(graph_struct, vertex_data, edge_data, v_ids, globals_) -> ScopeBatch:
+def gather_scopes(graph_struct, vertex_data, edge_data, v_ids, globals_,
+                  with_nbr_data: bool = True) -> ScopeBatch:
     """Materialize ScopeBatch for the vertex ids ``v_ids`` ([B] int32).
 
     ``graph_struct`` is anything exposing nbrs / nbr_mask / edge_ids /
     is_src / degree arrays (a DataGraph or a ShardedGraph local block).
+    ``with_nbr_data=False`` produces a *lite* scope (``nbr_data=None``)
+    for the aggregator fast path, skipping the [B, D, F] gather.
     """
     nbrs = graph_struct.nbrs[v_ids]            # [B, D]
     mask = graph_struct.nbr_mask[v_ids]
@@ -97,7 +198,8 @@ def gather_scopes(graph_struct, vertex_data, edge_data, v_ids, globals_) -> Scop
         v_data=jax.tree.map(take_v, vertex_data),
         nbr_ids=nbrs,
         nbr_mask=mask,
-        nbr_data=jax.tree.map(take_n, vertex_data),
+        nbr_data=(jax.tree.map(take_n, vertex_data)
+                  if with_nbr_data else None),
         edge_data=jax.tree.map(take_e, edge_data),
         is_src=graph_struct.is_src[v_ids],
         degree=graph_struct.degree[v_ids],

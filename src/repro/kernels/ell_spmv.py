@@ -7,13 +7,27 @@ CoEM, the BSP baselines) is
 
 i.e. an SpMV with the matrix in ELLPACK layout and a feature axis.  On
 GPU the classic implementation is one warp per row with texture-cache
-gathers.  The TPU adaptation (see DESIGN.md): tile *vertices* into
+gathers.  The TPU adaptation (see DESIGN.md §3): tile *vertices* into
 VPU-aligned row blocks (grid dim 0), keep the *full* source feature
 block resident in VMEM (graphs are partitioned per shard, so x is the
 shard-local [R, F] block — the partitioner bounds R), and unroll the
 neighbor-slot axis statically so each slot becomes a dense [TV, F]
 gather + multiply-accumulate on the VPU.  Feature tiling (grid dim 1)
 keeps the x block under the VMEM budget for wide features.
+
+Generalized for the executor core's aggregator fast path (DESIGN.md §4):
+an optional **active-row mask** gates rows of the task batch in-kernel
+(the engines' ``sel`` mask — inactive / padded batch slots produce
+zeros, and masked rows never contribute garbage weights).  Active rows
+are multiplied by exactly 1.0, so the mask never perturbs results.
+
+``ell_fold`` reduces *pre-gathered* ``[B, D, F]`` scope values with the
+exact same compiled accumulation, by calling this kernel with trivial
+indices over the flattened values.  That is what makes the engines'
+dense-scope fallback bit-identical to the kernel fast path: floating
+multiply-add chains are contraction-sensitive (FMA fusion differs
+between compilation contexts), so the only robust route to bitwise
+parity is to run both reductions through the same kernel (DESIGN.md §4).
 
 Validated against ``ref.ell_spmv_ref`` in interpret mode (this container
 is CPU-only; TPU is the target).
@@ -31,9 +45,10 @@ _TV = 128        # vertex rows per block
 _TF = 128        # feature columns per tile
 
 
-def _spmv_kernel(nbrs_ref, w_ref, x_ref, y_ref, *, max_deg: int):
+def _spmv_kernel(nbrs_ref, w_ref, rmask_ref, x_ref, y_ref, *, max_deg: int):
     nb = nbrs_ref[...]          # [TV, D] int32
-    w = w_ref[...]              # [TV, D] (0 on padded slots)
+    m = rmask_ref[...]          # [TV, 1] f32 row gate (1 active, 0 masked)
+    w = w_ref[...] * m          # zero every slot of masked rows
     x = x_ref[...]              # [R, TF] full shard-local feature tile
     acc = jnp.zeros(y_ref.shape, jnp.float32)   # f32 accumulation
     for j in range(max_deg):    # static unroll over neighbor slots
@@ -44,12 +59,15 @@ def _spmv_kernel(nbrs_ref, w_ref, x_ref, y_ref, *, max_deg: int):
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def ell_spmv(nbrs: jax.Array, w: jax.Array, x: jax.Array,
+             row_mask: jax.Array | None = None,
              interpret: bool = False) -> jax.Array:
-    """y[v] = sum_j w[v, j] * x[nbrs[v, j]].
+    """y[v] = row_mask[v] * sum_j w[v, j] * x[nbrs[v, j]].
 
-    nbrs: [Nv, D] int32 (padded slots may point anywhere; w must be 0)
-    w:    [Nv, D] float
-    x:    [R, F]  float (gather source; R >= max(nbrs)+1)
+    nbrs:     [Nv, D] int32 (padded slots may point anywhere; w must be 0)
+    w:        [Nv, D] float
+    x:        [R, F]  float (gather source; R >= max(nbrs)+1)
+    row_mask: [Nv] bool/float or None — rows with a falsy mask yield 0
+              (the engines' active-task mask; None means all rows on)
     returns y: [Nv, F]
     """
     nv, d = nbrs.shape
@@ -61,6 +79,11 @@ def ell_spmv(nbrs: jax.Array, w: jax.Array, x: jax.Array,
     nbrs_p = jnp.zeros((nv_pad, d), nbrs.dtype).at[:nv].set(nbrs)
     w_p = jnp.zeros((nv_pad, d), w.dtype).at[:nv].set(w)
     x_p = jnp.zeros((r, f_pad), x.dtype).at[:, :f].set(x)
+    if row_mask is None:
+        rm_p = jnp.ones((nv_pad, 1), w.dtype)
+    else:
+        rm_p = jnp.zeros((nv_pad, 1), w.dtype).at[:nv, 0].set(
+            row_mask.astype(w.dtype))
 
     grid = (nv_pad // tv, f_pad // tf)
     y = pl.pallas_call(
@@ -69,10 +92,30 @@ def ell_spmv(nbrs: jax.Array, w: jax.Array, x: jax.Array,
         in_specs=[
             pl.BlockSpec((tv, d), lambda i, k: (i, 0)),
             pl.BlockSpec((tv, d), lambda i, k: (i, 0)),
+            pl.BlockSpec((tv, 1), lambda i, k: (i, 0)),
             pl.BlockSpec((r, tf), lambda i, k: (0, k)),
         ],
         out_specs=pl.BlockSpec((tv, tf), lambda i, k: (i, k)),
         out_shape=jax.ShapeDtypeStruct((nv_pad, f_pad), x.dtype),
         interpret=interpret,
-    )(nbrs_p, w_p, x_p)
+    )(nbrs_p, w_p, rm_p, x_p)
     return y[:nv, :f]
+
+
+def ell_fold(w: jax.Array, vals: jax.Array,
+             row_mask: jax.Array | None = None,
+             interpret: bool = False) -> jax.Array:
+    """y[b] = sum_j w[b, j] * vals[b, j]: the kernel's reduction applied
+    to already-materialized scope values ``vals [B, D, F]``.
+
+    Used by the dense-scope fallback of aggregator updates: reusing the
+    kernel (with the identity gather ``idx[b, j] = b*D + j`` over the
+    flattened values) guarantees the fallback's accumulation arithmetic
+    is bit-identical to the fast path's, whatever the compiler does with
+    multiply-add contraction.
+    """
+    b, d, f = vals.shape
+    idx = (jnp.arange(b, dtype=jnp.int32)[:, None] * d
+           + jnp.arange(d, dtype=jnp.int32)[None, :])
+    return ell_spmv(idx, w, vals.reshape(b * d, f), row_mask=row_mask,
+                    interpret=interpret)

@@ -17,14 +17,18 @@ from repro.kernels.window_attention import (
     decode_window_attention as _window_kernel)
 
 
-def _interpret() -> bool:
+def default_interpret() -> bool:
+    """Interpret-mode off-TPU; Mosaic on a real TPU backend."""
     return jax.default_backend() != "tpu"
 
 
-def ell_spmv(nbrs, w, x, use_pallas: bool = True):
+_interpret = default_interpret
+
+
+def ell_spmv(nbrs, w, x, row_mask=None, use_pallas: bool = True):
     if not use_pallas:
-        return ref.ell_spmv_ref(nbrs, w, x)
-    return _ell_spmv_kernel(nbrs, w, x, interpret=_interpret())
+        return ref.ell_spmv_ref(nbrs, w, x, row_mask)
+    return _ell_spmv_kernel(nbrs, w, x, row_mask, interpret=_interpret())
 
 
 def als_normal_eq(nbrs, mask, ratings, x, use_pallas: bool = True):

@@ -5,10 +5,14 @@ import jax
 import jax.numpy as jnp
 
 
-def ell_spmv_ref(nbrs: jax.Array, w: jax.Array, x: jax.Array) -> jax.Array:
-    """y[v] = sum_j w[v,j] * x[nbrs[v,j]]."""
+def ell_spmv_ref(nbrs: jax.Array, w: jax.Array, x: jax.Array,
+                 row_mask: jax.Array | None = None) -> jax.Array:
+    """y[v] = row_mask[v] * sum_j w[v,j] * x[nbrs[v,j]]."""
     gathered = x[nbrs]                        # [Nv, D, F]
-    return (w[..., None] * gathered).sum(axis=1)
+    y = (w[..., None] * gathered).sum(axis=1)
+    if row_mask is not None:
+        y = y * row_mask.astype(y.dtype)[:, None]
+    return y
 
 
 def als_normal_eq_ref(nbrs, mask, ratings, x):

@@ -1,6 +1,7 @@
 """Property tests: colorings satisfy the consistency-model contracts."""
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")  # optional test dep; skip, don't error
 from hypothesis import given, settings, strategies as st
 
 from repro.core.coloring import (bipartite_coloring, distance2_coloring,

@@ -1,34 +1,67 @@
 """Sequential consistency (paper Def. 3.1): the parallel engines equal a
 sequential execution of the same update tasks.
 
-The chromatic engine's canonical order is (superstep, color, vertex id);
-``run_sequential`` executes exactly that order one task at a time.  Under
-a proper coloring the results must agree (up to float associativity of
-batched vs single-row arithmetic — asserted at 1e-5 rtol; counts match
-exactly)."""
+All engines are thin scheduling strategies over the shared executor core
+(``repro.core.exec``); the oracle replays each strategy's RemoveNext —
+(superstep, color, vertex id) for chromatic, top-k priority order for
+the priority engine, phase-snapshot (Jacobi) semantics for BSP.  Results
+must agree up to float associativity of batched vs single-row arithmetic
+(asserted at 1e-5 rtol; update counts match exactly)."""
 import numpy as np
 import jax.numpy as jnp
 import pytest
 
 from repro.apps import coem, pagerank
-from repro.core import (ChromaticEngine, Consistency, UpdateFn,
-                        UpdateResult, bsp_engine, run_sequential)
+from repro.core import (ChromaticEngine, Consistency, PriorityEngine,
+                        UpdateFn, UpdateResult, bsp_engine, run_sequential)
 from repro.core.coloring import distance2_coloring, greedy_coloring
 from repro.core.graph import DataGraph
 from conftest import random_graph
 
 
-def test_pagerank_engine_matches_sequential():
+@pytest.mark.parametrize("mode", ["chromatic", "priority", "bsp"])
+def test_engines_match_sequential_oracle(mode):
+    """One oracle, three strategies over the shared executor core."""
     edges = random_graph(50, 120, seed=3)
     g = pagerank.make_graph(edges, 50)
-    upd = pagerank.make_update(1e-5)
     syncs = [pagerank.total_rank_sync()]
-    eng = ChromaticEngine(g, upd, syncs=syncs, max_supersteps=60)
-    st = eng.run()
-    vd, _, gl, n_seq = run_sequential(g, upd, syncs=syncs, max_supersteps=60)
+    if mode == "chromatic":
+        upd = pagerank.make_update(1e-5)
+        eng = ChromaticEngine(g, upd, syncs=syncs, max_supersteps=60)
+        st = eng.run()
+        assert not bool(st.active.any()), "engine must drain tasks"
+        vd, _, gl, n_seq = run_sequential(g, upd, syncs=syncs,
+                                          max_supersteps=60)
+        assert int(st.n_updates) == n_seq
+    elif mode == "priority":
+        upd = pagerank.make_update(1e-5)
+        eng = PriorityEngine(g, upd, syncs=syncs, k_select=8,
+                             max_supersteps=3000)
+        st = eng.run()
+        assert not bool(st.active.any()), "engine must drain tasks"
+        vd, _, gl, n_seq = run_sequential(g, upd, syncs=syncs,
+                                          max_supersteps=3000, k_select=8)
+        # the adaptive priority schedule is order-sensitive to batched-vs-
+        # single-row float noise in the residuals, so the replayed
+        # schedule may diverge by a handful of tasks near ties; the data
+        # graph still converges to the same trajectory.
+        assert abs(int(st.n_updates) - n_seq) <= max(5, n_seq // 100)
+    else:
+        # BSP is *not* sequentially consistent: its ground truth is the
+        # phase-snapshot (Jacobi) oracle.  A negative threshold (always
+        # reschedule) + fixed sweeps keeps the schedule deterministic
+        # (every vertex, every superstep).
+        upd = pagerank.make_update(-1.0)
+        eng = bsp_engine(g, upd, syncs=syncs, max_supersteps=30)
+        st = eng.run(num_supersteps=30)
+        vd, _, gl, n_seq = run_sequential(
+            eng.graph, upd, syncs=syncs, max_supersteps=30,
+            snapshot_phases=True)
+        # exact count parity (isolated vertices execute once and are
+        # never rescheduled, so this is < 50 * 30)
+        assert int(st.n_updates) == n_seq
     np.testing.assert_allclose(np.asarray(st.vertex_data["rank"]),
                                np.asarray(vd["rank"]), rtol=1e-5)
-    assert int(st.n_updates) == n_seq
     np.testing.assert_allclose(float(st.globals["total_rank"]),
                                float(gl["total_rank"]), rtol=1e-5)
 

@@ -3,6 +3,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")  # optional test dep; skip, don't error
 from hypothesis import given, settings, strategies as st
 
 from repro.core.graph import DataGraph, bipartite_edges, grid_edges_3d

@@ -1,5 +1,8 @@
 """Two-phase partitioning (paper §4.1) properties."""
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")  # optional test dep; skip, don't error
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (build_meta_graph, balance_meta_graph, cut_edges,

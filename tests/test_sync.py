@@ -1,6 +1,9 @@
 """Sync operation (paper §3.3): Fold/Merge/Finalize semantics."""
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")  # optional test dep; skip, don't error
 from hypothesis import given, settings, strategies as st
 
 from repro.core import SyncOp, sum_sync, top_two_sync
