@@ -9,6 +9,11 @@ import time
 
 import jax
 
+# Set by ``python -m benchmarks.run --smoke``: tiny problem sizes and
+# short sweeps so CI can exercise every benchmark path and upload the
+# BENCH_*.json artifacts in a few minutes.
+SMOKE = False
+
 
 def time_fn(fn, *args, warmup: int = 1, iters: int = 3) -> float:
     """Median wall time per call in microseconds (blocks on device)."""

@@ -7,24 +7,48 @@ time per superstep per vertex — flat means weak-scalable compute — plus
 the plan's cut growth (the paper attributes its 11%-to-64-procs overhead
 to linear cut growth; we report cut edges per shard directly).
 
-8(b): ``k_select`` in the PriorityEngine is the in-flight-work knob that
-replaces lock pipelining (DESIGN.md §2).  We sweep it on the paper's two
-partitions of a small CoSeg problem — "optimal" (8-frame blocks) vs
-"worst case" (frames striped) — and report supersteps-to-convergence and
-the ghost traffic each partition implies.
+8(b): two sweeps side by side, so the BENCH trajectory stays comparable
+across PRs:
+
+* ``max_pending`` — the *real* lock-pipeline knob of the
+  ``LockingEngine`` (DESIGN.md §6): how many scope acquisitions are in
+  flight per shard.  P=1 is strictly sequential; larger P admits bigger
+  claim-winner batches per round but executes with staler neighbor
+  data, so total work can grow — the paper's maxpending trade-off.
+* ``k_select`` — the PriorityEngine's in-flight-work knob, the proxy
+  this benchmark swept before the locking engine existed (kept for
+  comparability; see DESIGN.md §6 for why it is *not* lock pipelining).
+
+When >= 4 devices are available (CI runs this under
+``xla_force_host_platform_device_count``), the sweep also runs the
+``DistributedLockingEngine`` on 4 shards and records the versioned
+ghost sync's filtered vs full traffic per partition.
+
+Appends one entry (both sweeps + per-partition ghost traffic) to
+``results/BENCH_locking.json``.
 """
 from __future__ import annotations
 
+import json
+import pathlib
+import time
+
 import numpy as np
 
+import benchmarks.common as common
 from benchmarks.common import emit, time_fn
 from repro.apps import lbp
-from repro.core import ChromaticEngine, PriorityEngine, ShardPlan
+from repro.core import (ChromaticEngine, DistributedLockingEngine,
+                        LockingEngine, PriorityEngine, ShardPlan)
+
+_RESULTS = pathlib.Path(__file__).resolve().parent.parent / "results"
 
 
 def run() -> None:
+    import jax
+
     # ---- 8(a) weak scaling ----
-    for m in (1, 2, 4, 8):
+    for m in (1, 2) if common.SMOKE else (1, 2, 4, 8):
         prob = lbp.synthetic_coseg(2 * m, 4, 8, n_labels=3, noise=0.5,
                                    seed=m)
         g = prob.graph
@@ -37,19 +61,67 @@ def run() -> None:
         emit(f"fig8a_coseg_m{m}", us / 3 / g.n_vertices * m,
              f"verts={g.n_vertices};ghost_rows_per_shard={cut / m:.0f}")
 
-    # ---- 8(b) maxpending (k_select) sweep ----
-    prob = lbp.synthetic_coseg(8, 4, 6, n_labels=3, noise=0.5, seed=0)
+    # ---- 8(b) lock-pipeline sweep: max_pending (real) + k_select ----
+    if common.SMOKE:
+        prob = lbp.synthetic_coseg(4, 3, 4, n_labels=3, noise=0.5, seed=0)
+        ks, ps, max_ss = (8, 32), (1, 8, 32), 5000
+    else:
+        prob = lbp.synthetic_coseg(8, 4, 6, n_labels=3, noise=0.5, seed=0)
+        ks, ps, max_ss = (8, 32, 128), (1, 8, 32, 128), 20000
+    n_shards = 4
+    entry = {"bench": "fig8b_lock_pipeline",
+             "nv": prob.graph.n_vertices, "n_shards": n_shards,
+             "recorded_at": time.strftime("%Y-%m-%dT%H:%M:%S"),
+             "max_pending": {}, "k_select": {}, "partitions": {}}
+
+    # single-device sweeps depend only on the schedule knob, not on the
+    # partition — run each point once
+    for p in ps:
+        eng = LockingEngine(prob.graph, lbp.make_update(3, eps=1e-2),
+                            max_pending=p, max_supersteps=max_ss)
+        st = eng.run()
+        us = time_fn(lambda e=eng: e.run(), iters=1)
+        emit(f"fig8b_maxpending{p}", us,
+             f"supersteps={int(st.superstep)};updates={int(st.n_updates)}")
+        entry["max_pending"][str(p)] = {
+            "us": round(us, 1), "supersteps": int(st.superstep),
+            "updates": int(st.n_updates)}
+
+    for k in ks:
+        eng = PriorityEngine(prob.graph, lbp.make_update(3, eps=1e-2),
+                             k_select=k, max_supersteps=4000)
+        st = eng.run()
+        us = time_fn(lambda e=eng: e.run(), iters=1)
+        emit(f"fig8b_k{k}", us,
+             f"supersteps={int(st.superstep)};updates={int(st.n_updates)}")
+        entry["k_select"][str(k)] = {
+            "us": round(us, 1), "supersteps": int(st.superstep),
+            "updates": int(st.n_updates)}
+
+    # ghost traffic is what the partition decides: static schedule
+    # width, and (given a mesh) the versioned sync's filtered traffic
     for part_name, asg_fn in (("optimal", lbp.frame_partition),
                               ("worst", lbp.striped_partition)):
-        asg = asg_fn(prob, 4)
-        plan = ShardPlan.build(prob.graph, asg, 4)
+        asg = asg_fn(prob, n_shards)
+        plan = ShardPlan.build(prob.graph, asg, n_shards)
         ghost = int(np.asarray(plan.send_mask).sum())
-        for k in (8, 32, 128):
-            eng = PriorityEngine(prob.graph,
-                                 lbp.make_update(3, eps=1e-2),
-                                 k_select=k, max_supersteps=4000)
-            st = eng.run()
-            us = time_fn(lambda e=eng: e.run(), iters=1)
-            emit(f"fig8b_{part_name}_k{k}", us,
-                 f"supersteps={int(st.superstep)};"
-                 f"updates={int(st.n_updates)};ghost_rows={ghost}")
+        part = {"ghost_rows_static": ghost}
+        if jax.device_count() >= n_shards:
+            res = DistributedLockingEngine(
+                prob.graph, plan, lbp.make_update(3, eps=1e-2),
+                max_pending=ps[-1], max_supersteps=max_ss,
+                exchange_edges=True).run()
+            emit(f"fig8b_{part_name}_ghost_filtered", 0.0,
+                 f"static={ghost};sent={res['ghost_rows_sent']};"
+                 f"full={res['ghost_rows_full']}")
+            part["ghost_rows_sent"] = res["ghost_rows_sent"]
+            part["ghost_rows_full"] = res["ghost_rows_full"]
+        else:
+            emit(f"fig8b_{part_name}_ghost_static", 0.0, f"static={ghost}")
+        entry["partitions"][part_name] = part
+
+    _RESULTS.mkdir(exist_ok=True)
+    path = _RESULTS / "BENCH_locking.json"
+    history = json.loads(path.read_text()) if path.exists() else []
+    history.append(entry)
+    path.write_text(json.dumps(history, indent=2) + "\n")

@@ -4,28 +4,38 @@ Prints ``name,us_per_call,derived`` CSV rows.
   fig1   consistent vs inconsistent ALS (paper Fig. 1)
   fig6ab scaling + per-node communication (Fig. 6a/6b)
   fig6cd IPB sweep + GraphLab/Hadoop/MPI comparison (Fig. 6c/6d, 7a)
-  fig8   weak scaling + maxpending/k_select sweep (Fig. 8a/8b)
-  kernels Pallas kernels vs jnp oracle
+  fig8   weak scaling + lock-pipeline sweep: real max_pending
+         (LockingEngine) side by side with the old k_select proxy
+         (Fig. 8a/8b); appends results/BENCH_locking.json
+  kernels Pallas kernels vs jnp oracle; appends results/BENCH_engines.json
   roofline dry-run roofline table (per arch x shape x mesh)
+
+``--smoke`` runs tiny sizes (CI artifact job); without an explicit
+module it restricts to the BENCH_*.json producers (fig8, kernels).
 """
 import sys
 
 
 def main() -> None:
-    from benchmarks import (fig1_consistency, fig6_scaling,
+    from benchmarks import (common, fig1_consistency, fig6_scaling,
                             fig6cd_comparison, fig8_locking, kernels_bench,
                             roofline_table)
-    only = sys.argv[1] if len(sys.argv) > 1 else None
+    args = sys.argv[1:]
+    common.SMOKE = "--smoke" in args
+    args = [a for a in args if a != "--smoke"]
+    only = args[0] if args else None
     mods = {
         "fig1": fig1_consistency, "fig6ab": fig6_scaling,
         "fig6cd": fig6cd_comparison, "fig8": fig8_locking,
         "kernels": kernels_bench, "roofline": roofline_table,
     }
+    if only is None and common.SMOKE:
+        selected = ["fig8", "kernels"]      # the BENCH_*.json producers
+    else:
+        selected = [only] if only else list(mods)
     print("name,us_per_call,derived")
-    for name, mod in mods.items():
-        if only and name != only:
-            continue
-        mod.run()
+    for name in selected:
+        mods[name].run()
 
 
 if __name__ == "__main__":

@@ -7,9 +7,9 @@ Public API:
     SyncOp, sum_sync, top_two_sync
     greedy_coloring, distance2_coloring, single_color, bipartite_coloring
     ExecutorCore, ChromaticEngine, PriorityEngine, bsp_engine,
-    run_sequential
+    LockingEngine, run_sequential
     two_phase_partition, random_partition
-    ShardPlan, DistributedChromaticEngine
+    ShardPlan, DistributedChromaticEngine, DistributedLockingEngine
 """
 from repro.core.graph import DataGraph, bipartite_edges, grid_edges_3d
 from repro.core.update import (Consistency, NeighborAggregator, ScopeBatch,
@@ -21,8 +21,9 @@ from repro.core.coloring import (greedy_coloring, distance2_coloring,
                                  single_color, bipartite_coloring,
                                  verify_coloring)
 from repro.core.exec import (EngineState, ExecutorCore, apply_batch,
-                             consume_and_reschedule, init_engine_state,
-                             refresh_syncs)
+                             claim_winners, consume_and_reschedule,
+                             init_engine_state, refresh_syncs,
+                             scope_claims)
 from repro.core.engine_chromatic import ChromaticEngine
 from repro.core.engine_priority import PriorityEngine
 from repro.core.engine_bsp import bsp_engine
@@ -31,3 +32,5 @@ from repro.core.partition import (two_phase_partition, random_partition,
                                   over_partition, build_meta_graph,
                                   balance_meta_graph, cut_edges)
 from repro.core.distributed import ShardPlan, DistributedChromaticEngine
+from repro.core.engine_locking import (DistributedLockingEngine,
+                                       LockingEngine)

@@ -18,6 +18,13 @@ static communication schedule:
   This replaces the paper's cross-machine task scheduling messages; and
   termination detection is a ``psum`` of owned active counts, replacing
   the Misra consensus algorithm (§4.2.2, see DESIGN.md).
+* color-independent schedules for the **locking engine** (DESIGN.md §6):
+  ``global_ids`` (the partition-independent total order its min-id
+  claims compare in) and ``cesend/cerecv`` (cut-edge replica pushes
+  without a color schedule).  The ``tsend/trecv`` pattern doubles as the
+  claim-combine and versioned ghost-data channel — its slot layout is
+  symmetric under ``all_to_all``, so the same indices serve both
+  directions (ghost -> owner and owner -> ghost).
 
 Device-side, ``DistributedChromaticEngine`` runs the same color-phase
 program as the single-shard engine inside ``shard_map`` over a 1-D
@@ -38,7 +45,8 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
-from repro.core.exec import apply_batch, default_interpret, refresh_syncs
+from repro.core.exec import (NO_CLAIM, apply_batch, default_interpret,
+                             refresh_syncs)
 from repro.core.graph import DataGraph
 from repro.core.sync import SyncOp
 from repro.core.update import UpdateFn
@@ -85,6 +93,12 @@ class ShardPlan:
     tsend_idx: jax.Array   # [M, M, Hg] local ghost slot whose flags go home
     tsend_mask: jax.Array  # [M, M, Hg]
     trecv_idx: jax.Array   # [M, M, Hg] owner's owned slot
+    # ---- color-independent schedules (locking engine) ----
+    Hc: int                # cut-edge exchange width per (owner, peer)
+    global_ids: jax.Array  # [M, R] global vertex id (NO_CLAIM on pad rows)
+    cesend_idx: jax.Array  # [M, M, Hc] local edge slot pushed to the peer
+    cesend_mask: jax.Array # [M, M, Hc]
+    cerecv_idx: jax.Array  # [M, M, Hc] peer's replica slot for that edge
     # ---- host-side maps ----
     local_to_global: np.ndarray  # [M, R] global vertex id or -1
     ledge_to_global: np.ndarray  # [M, E_loc] global edge id or -1
@@ -93,10 +107,12 @@ class ShardPlan:
     # ------------------------------------------------------------------
     @staticmethod
     def build(graph: DataGraph, assignment: np.ndarray, M: int) -> "ShardPlan":
-        if graph.colors is None:
-            raise ValueError("graph needs colors")
         nv, ne, D = graph.n_vertices, graph.n_edges, graph.max_deg
-        colors = np.asarray(graph.colors)
+        # Colorless graphs get the trivial single-color schedule: enough
+        # for the locking engine (which ignores colors); the chromatic
+        # engine still requires a real coloring for correctness.
+        colors = (np.asarray(graph.colors) if graph.colors is not None
+                  else np.zeros(nv, dtype=np.int64))
         n_colors = int(colors.max()) + 1 if nv else 1
         assignment = np.asarray(assignment, dtype=np.int64)
         edges = graph.edges_np
@@ -228,9 +244,41 @@ class ShardPlan:
                 tsend_mask[i, j, t] = True
                 trecv_idx[j, i, t] = g2l[j][v]
 
+        # ---- color-independent cut-edge replica exchange (locking) ----
+        # Shard iu writes edge e = (u, v) only through u's update (ghosts
+        # never execute), so each replica pair needs one directed push
+        # per endpoint owner.  Entries are appended pairwise, so slot t
+        # of (iu -> iv) and of (iv -> iu) name the same edge — the
+        # symmetry all_to_all relies on.
+        cesends: dict = {}
+        for e, (u, v) in enumerate(edges):
+            iu, iv = int(assignment[u]), int(assignment[v])
+            if iu == iv:
+                continue
+            cesends.setdefault((iu, iv), []).append(e)
+            cesends.setdefault((iv, iu), []).append(e)
+        Hc = max(1, max((len(v) for v in cesends.values()), default=1))
+        cesend_idx = np.zeros((M, M, Hc), dtype=np.int32)
+        cesend_mask = np.zeros((M, M, Hc), dtype=bool)
+        cerecv_idx = np.full((M, M, Hc), E_loc, dtype=np.int32)
+        for (ow, peer), es in cesends.items():
+            for t, e in enumerate(es):
+                cesend_idx[ow, peer, t] = e2l[ow][e]
+                cesend_mask[ow, peer, t] = True
+                cerecv_idx[peer, ow, t] = e2l[peer][e]
+
+        # global vertex ids per local row — the partition-independent
+        # total order the locking engine's min-id claims compare in
+        global_ids = np.where(local_to_global >= 0, local_to_global,
+                              NO_CLAIM).astype(np.int32)
+
         return ShardPlan(
             M=M, R=R, E_loc=E_loc, n_colors=n_colors, Cmax=Cmax,
-            Hv=Hv, He=He, Hg=Hg,
+            Hv=Hv, He=He, Hg=Hg, Hc=Hc,
+            global_ids=jnp.asarray(global_ids),
+            cesend_idx=jnp.asarray(cesend_idx),
+            cesend_mask=jnp.asarray(cesend_mask),
+            cerecv_idx=jnp.asarray(cerecv_idx),
             nbrs=jnp.asarray(nbrs_l), nbr_mask=jnp.asarray(mask_l),
             edge_ids=jnp.asarray(eids_l), is_src=jnp.asarray(issrc_l),
             degree=jnp.asarray(deg_l), owned_mask=jnp.asarray(owned_mask),
@@ -281,6 +329,43 @@ class ShardPlan:
         return jax.tree.map(unshard, local)
 
 
+def task_backflow(active, priority, plan_b: dict, axis: str, R: int):
+    """Ghost-row task flags/priorities -> owner, then clear the ghost
+    copies (they now live at the owner).  Shared by the chromatic and
+    locking engines; flags travel as a float32 stack with the priority
+    so one ``all_to_all`` carries both."""
+    tsidx, tsmask = plan_b["tsend_idx"], plan_b["tsend_mask"]
+    tridx = plan_b["trecv_idx"]
+    flags = active[tsidx] & tsmask                        # [M, Hg]
+    prios = jnp.where(flags, priority[tsidx], -jnp.inf)
+    fb = jax.lax.all_to_all(
+        jnp.stack([flags.astype(jnp.float32), prios], -1),
+        axis, 0, 0, tiled=True)                           # [M, Hg, 2]
+    inflag = fb[..., 0] > 0.5
+    active = active.at[tridx.reshape(-1)].max(
+        inflag.reshape(-1), mode="drop")
+    priority = priority.at[tridx.reshape(-1)].max(
+        jnp.where(inflag, fb[..., 1], -jnp.inf).reshape(-1),
+        mode="drop")
+    active = active.at[jnp.where(tsmask, tsidx, R).reshape(-1)
+                       ].set(False, mode="drop")
+    return active, priority
+
+
+def make_dist_sync_run(axis: str, M: int, owned_mask):
+    """Distributed evaluation of one SyncOp: local Fold/Merge over the
+    shard's owned rows, then all_gather + Merge across shards.  Shared
+    by the chromatic and locking engines (passed to ``refresh_syncs``)."""
+    def dist_sync_run(s_op, vd):
+        part = s_op.local_reduce(vd, valid=owned_mask)
+        parts = jax.tree.map(lambda x: jax.lax.all_gather(x, axis), part)
+        acc = jax.tree.map(lambda x: x[0], parts)
+        for m in range(1, M):
+            acc = s_op.merge(acc, jax.tree.map(lambda x: x[m], parts))
+        return s_op.finalize(acc)
+    return dist_sync_run
+
+
 # ======================================================================
 @dataclasses.dataclass
 class DistributedChromaticEngine:
@@ -297,6 +382,10 @@ class DistributedChromaticEngine:
     kernel_interpret: bool | None = None    # None -> auto (off-TPU: True)
 
     def __post_init__(self):
+        if self.graph.colors is None:
+            raise ValueError("chromatic engine needs colors; call "
+                             "graph.with_colors(...) (the locking engine "
+                             "handles colorless graphs)")
         devs = jax.devices()
         if len(devs) < self.plan.M:
             raise ValueError(f"need {self.plan.M} devices, have {len(devs)}")
@@ -344,23 +433,8 @@ class DistributedChromaticEngine:
                 edata = jax.tree.map(push_e, edata)
 
             # ---- task backflow (ghost flags/priority -> owner) ----
-            tsidx, tsmask = plan_b["tsend_idx"], plan_b["tsend_mask"]
-            tridx = plan_b["trecv_idx"]
-            flags = active[tsidx] & tsmask                        # [M, Hg]
-            prios = jnp.where(flags, priority[tsidx], -jnp.inf)
-            fb = jax.lax.all_to_all(
-                jnp.stack([flags.astype(jnp.float32), prios], -1),
-                axis, 0, 0, tiled=True)                           # [M, Hg, 2]
-            inflag = fb[..., 0] > 0.5
-            active = active.at[tridx.reshape(-1)].max(
-                inflag.reshape(-1), mode="drop")
-            priority = priority.at[tridx.reshape(-1)].max(
-                jnp.where(inflag, fb[..., 1], -jnp.inf).reshape(-1),
-                mode="drop")
-            # consume ghost-side flags (they now live at the owner)
-            cleared = active.at[jnp.where(tsmask, tsidx, plan.R).reshape(-1)
-                                ].set(False, mode="drop")
-            active = cleared
+            active, priority = task_backflow(active, priority, plan_b,
+                                             axis, plan.R)
             return (vdata, edata, active, priority, n_upd)
 
         def superstep(state, struct, plan_b, n_colors):
@@ -372,19 +446,9 @@ class DistributedChromaticEngine:
                 carry)
             vdata, edata, active, priority, n_upd = carry
 
-            def dist_sync_run(s_op, vd):
-                # distributed evaluation of one sync: local Fold/Merge
-                # over owned rows, then all_gather + Merge across shards
-                part = s_op.local_reduce(vd, valid=plan_b["owned_mask"])
-                parts = jax.tree.map(
-                    lambda x: jax.lax.all_gather(x, axis), part)
-                acc = jax.tree.map(lambda x: x[0], parts)
-                for m in range(1, M):
-                    acc = s_op.merge(acc, jax.tree.map(lambda x: x[m], parts))
-                return s_op.finalize(acc)
-
-            new_globals = refresh_syncs(self.syncs, globals_, vdata, step,
-                                        run_fn=dist_sync_run)
+            new_globals = refresh_syncs(
+                self.syncs, globals_, vdata, step,
+                run_fn=make_dist_sync_run(axis, M, plan_b["owned_mask"]))
             return (vdata, edata, active, priority, new_globals,
                     step + 1, n_upd)
 

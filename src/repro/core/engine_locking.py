@@ -1,0 +1,379 @@
+"""The Distributed Locking Engine (paper §4.2.2) — and its single-device
+strategy form — realized as data-parallel conflict resolution.
+
+The paper's second distributed engine generalizes to graphs where a
+coloring is unavailable: every vertex update acquires reader/writer
+locks over its scope in canonical (vertex-id) order, and *pipelines* up
+to ``maxpending`` lock acquisitions per machine to hide wire latency.
+Distributed GraphLab (arXiv:1204.6078) later made this the default
+engine.  On an SPMD mesh there are no remote mutexes; the equivalent
+deterministic structure (DESIGN.md §6) is:
+
+1. **Pending window** ("lock pipeline"): each shard keeps up to
+   ``max_pending`` highest-priority active owned vertices in flight —
+   the paper's ``maxpending`` scope acquisitions per machine.
+2. **Claim pass**: every in-flight vertex min-scatters its *global* id
+   onto the rows it would lock — the whole scope under FULL consistency
+   (``scope_claims``: write locks everywhere), only its own row under
+   EDGE (``self_claims``: read locks are compatible, so only adjacency
+   conflicts).  Shards min-combine claims on replicated rows over the
+   symmetric ``tsend/trecv`` channel (ghost -> owner -> ghost).
+3. **Winner batch** (``claim_winners`` / ``adjacent_claim_winners``): a
+   vertex executes only if it holds the min-id claim over its lock set.
+   FULL winners have pairwise-disjoint scopes; EDGE winners form an
+   independent set (the chromatic engine's per-phase guarantee) — either
+   way the batch is serializable (sequential consistency, Def. 3.1),
+   and the globally minimal in-flight vertex always wins: min-id
+   ordering is the deadlock-free canonical lock order, with
+   livelock-freedom by the same argument.
+4. **Versioned ghost sync**: per-vertex version counters bump on every
+   execution; the ``all_to_all`` ghost push carries a freshness bit per
+   scheduled row and the receiver applies only rows modified since its
+   last refresh — the paper's "only transmit modified data", replacing
+   the chromatic engine's static per-color schedule.  (SPMD buffers are
+   static-width, so the saving is counted, not shrunk: the engine
+   reports ``ghost_rows_sent`` vs the unfiltered ``ghost_rows_full``.)
+
+Losers stay active and retry next round; their locks are "released"
+simply by the claim array being rebuilt from scratch each superstep.
+
+``LockingEngine`` is the single-device degenerate case expressed as an
+``ExecutorCore`` scheduling strategy (so it shares every line of
+bookkeeping with chromatic/priority/BSP and is checked by the same
+sequential-consistency oracle).  ``DistributedLockingEngine`` runs the
+identical program per shard under ``shard_map`` — with a saturating
+window (``max_pending >= rows``) the two are bit-identical on any mesh
+size, which ``tests/test_locking.py`` asserts on 8 virtual devices.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.core.distributed import (LocalStruct, ShardPlan,
+                                    make_dist_sync_run, task_backflow)
+from repro.core.exec import (NO_CLAIM, ExecutorCore,
+                             adjacent_claim_winners, apply_batch,
+                             claim_winners, default_interpret,
+                             refresh_syncs, scope_claims, self_claims)
+from repro.core.graph import DataGraph
+from repro.core.sync import SyncOp
+from repro.core.update import Consistency, UpdateFn
+
+PyTree = Any
+
+
+def conflict_winners(struct, ids, sel, consistency: Consistency,
+                     claim_ids=None, combine=None):
+    """Reader/writer lock grant as one claim scatter + one check.
+
+    The claim pattern mirrors the paper's lock table per consistency
+    model: FULL write-locks the whole scope (``scope_claims`` -> scope-
+    disjoint winners), EDGE write-locks only the vertex while read locks
+    are compatible (``self_claims`` -> independent-set winners), and
+    VERTEX/UNSAFE scopes never conflict (every candidate wins).
+    ``combine`` is the distributed engine's cross-shard min-combine of
+    the claim array (identity when None / single shard).
+    """
+    if consistency == Consistency.FULL:
+        claim = scope_claims(struct, ids, sel, claim_ids)
+        if combine is not None:
+            claim = combine(claim)
+        return claim_winners(struct, ids, sel, claim, claim_ids)
+    if consistency == Consistency.EDGE:
+        claim = self_claims(struct, ids, sel, claim_ids)
+        if combine is not None:
+            claim = combine(claim)
+        return adjacent_claim_winners(struct, ids, sel, claim, claim_ids)
+    return sel      # VERTEX / UNSAFE: no inter-vertex conflicts
+
+
+@dataclasses.dataclass
+class LockingEngine(ExecutorCore):
+    """Strategy: top-``max_pending`` pending window, min-id claim winners.
+
+    Needs no coloring — conflict resolution is dynamic.  ``max_pending``
+    is the real lock-pipeline knob of the paper's Fig. 8(b) sweep: with
+    P = 1 execution is strictly sequential (one scope in flight), larger
+    P admits more concurrent winners per round.
+    """
+
+    max_supersteps: int = 2000
+    max_pending: int = 64       # P: in-flight scope acquisitions
+
+    def __post_init__(self):
+        self.n_phases = 1
+
+    def prepare(self, state):
+        p = min(self.max_pending, self.graph.n_vertices)
+        score = jnp.where(state.active, state.priority, -jnp.inf)
+        _, cand = jax.lax.top_k(score, p)           # [P] pending window
+        cand_sel = state.active[cand]
+        win = conflict_winners(self.graph, cand, cand_sel,
+                               self.update_fn.consistency)
+        return cand, win
+
+    def select(self, c, ctx):
+        return ctx
+
+
+# ======================================================================
+@dataclasses.dataclass
+class DistributedLockingEngine:
+    """Locking engine over a 1-D device mesh via shard_map.
+
+    Per superstep and shard: pending window -> claim pass (+ cross-shard
+    min-combine) -> winner batch through the shared ``apply_batch`` ->
+    version bump -> versioned ghost/edge sync -> task backflow.  The
+    single-shard plan (M=1) is the degenerate case: every exchange is an
+    identity collective and the program equals ``LockingEngine``
+    bit-for-bit.
+    """
+
+    graph: DataGraph
+    plan: ShardPlan
+    update_fn: UpdateFn
+    syncs: Sequence[SyncOp] = ()
+    max_supersteps: int = 2000
+    max_pending: int = 64
+    exchange_edges: bool = False   # app writes edge data on cut edges?
+    axis: str = "shard"
+    use_kernel: bool = True                 # aggregator fast path on?
+    kernel_interpret: bool | None = None    # None -> auto (off-TPU: True)
+
+    def __post_init__(self):
+        if (self.update_fn.consistency == Consistency.FULL
+                and self.plan.M > 1):
+            # FULL neighbor writes land on ghost rows; there is no
+            # ghost->owner data backflow (same limitation as the
+            # distributed chromatic engine) — fail loudly rather than
+            # silently dropping writes at shard boundaries.
+            raise ValueError(
+                "FULL-consistency neighbor writes are not supported "
+                "across shards (ghost-row writes cannot flow back to "
+                "the owner); use the single-shard LockingEngine")
+        devs = jax.devices()
+        if len(devs) < self.plan.M:
+            raise ValueError(f"need {self.plan.M} devices, have {len(devs)}")
+        self.mesh = Mesh(np.array(devs[: self.plan.M]), (self.axis,))
+
+    # -- per-shard program (runs under shard_map; leading dim 1) --------
+    def _build_superstep(self):
+        plan, upd, axis = self.plan, self.update_fn, self.axis
+        M, R, E_loc = plan.M, plan.R, plan.E_loc
+        interpret = (self.kernel_interpret if self.kernel_interpret
+                     is not None else default_interpret())
+        use_kernel = self.use_kernel
+        P_win = min(self.max_pending, R)
+        exchange_edges = self.exchange_edges
+        syncs = self.syncs
+        consistency = self.update_fn.consistency
+
+        def a2a(x):
+            return jax.lax.all_to_all(x, axis, 0, 0, tiled=True)
+
+        def combine_claims(claim, plan_b):
+            """Min-combine claims across replicas: ghost -> owner, then
+            the combined value back owner -> ghost (same Hg channel)."""
+            tsidx, tsmask = plan_b["tsend_idx"], plan_b["tsend_mask"]
+            tridx = plan_b["trecv_idx"]
+            up = jnp.where(tsmask, claim[jnp.where(tsmask, tsidx, 0)],
+                           NO_CLAIM)
+            claim = claim.at[tridx.reshape(-1)].min(
+                a2a(up).reshape(-1), mode="drop")
+            tr_ok = tridx < R
+            down = jnp.where(tr_ok, claim[jnp.where(tr_ok, tridx, 0)],
+                             NO_CLAIM)
+            return claim.at[jnp.where(tsmask, tsidx, R).reshape(-1)].min(
+                a2a(down).reshape(-1), mode="drop")
+
+        def push_ghost_versioned(vdata, version, sent_ver, plan_b):
+            """Owner -> ghost data push carrying only modified rows.
+
+            ``sent_ver[j, t]`` is the owner-side version last shipped to
+            peer j for schedule slot t; a row travels (and is applied)
+            only when its version advanced — the paper's "only transmit
+            modified data" with the static schedule as the transport."""
+            tsidx, tsmask = plan_b["tsend_idx"], plan_b["tsend_mask"]
+            tridx = plan_b["trecv_idx"]
+            tr_ok = tridx < R
+            tr_safe = jnp.where(tr_ok, tridx, 0)
+            ver = jnp.where(tr_ok, version[tr_safe], 0)
+            fresh = tr_ok & (ver > sent_ver)                  # [M, Hg]
+            fresh_r = a2a(fresh.astype(jnp.int32)) > 0
+            tgt = jnp.where(tsmask & fresh_r, tsidx, R)
+            def push(arr):
+                buf = a2a(arr[tr_safe])                       # [M, Hg, ...]
+                return arr.at[tgt.reshape(-1)].set(
+                    buf.reshape((-1,) + buf.shape[2:]), mode="drop")
+            vdata = jax.tree.map(push, vdata)
+            sent_ver = jnp.where(fresh, ver, sent_ver)
+            return (vdata, sent_ver, fresh.sum(dtype=jnp.int32),
+                    tr_ok.sum(dtype=jnp.int32))
+
+        def push_edges_versioned(edata, eversion, esent_ver, plan_b):
+            """Cut-edge replica push, version-filtered like the vertex
+            path (an edge's version bumps when its owned endpoint ran)."""
+            ceidx, cemask = plan_b["cesend_idx"], plan_b["cesend_mask"]
+            cridx = plan_b["cerecv_idx"]
+            ever = jnp.where(cemask, eversion[ceidx], 0)
+            fresh = cemask & (ever > esent_ver)               # [M, Hc]
+            fresh_r = a2a(fresh.astype(jnp.int32)) > 0
+            tgt = jnp.where(fresh_r, cridx, E_loc + 1)        # OOB drop
+            def push(arr):
+                buf = a2a(arr[ceidx])
+                return arr.at[tgt.reshape(-1)].set(
+                    buf.reshape((-1,) + buf.shape[2:]), mode="drop")
+            edata = jax.tree.map(push, edata)
+            esent_ver = jnp.where(fresh, ever, esent_ver)
+            return edata, esent_ver
+
+        def superstep(state, struct, plan_b):
+            (vdata, edata, active, priority, globals_, step, n_upd,
+             version, eversion, sent_ver, esent_ver, sent, full) = state
+            owned = plan_b["owned_mask"]
+            gids = plan_b["global_ids"]
+
+            # 1. pending window: the shard's lock pipeline
+            score = jnp.where(active & owned, priority, -jnp.inf)
+            _, cand = jax.lax.top_k(score, P_win)
+            cand_sel = (active & owned)[cand]
+
+            # 2-3. claim pass + cross-shard combine -> winner batch
+            win = conflict_winners(
+                struct, cand, cand_sel, consistency,
+                claim_ids=gids[cand],
+                combine=lambda c: combine_claims(c, plan_b))
+
+            # 4. execute winners through the shared executor core
+            carry = (vdata, edata, active, priority, n_upd)
+            carry = apply_batch(
+                struct, upd, carry, cand, win, globals_, sentinel=R,
+                use_kernel=use_kernel, interpret=interpret)
+            vdata, edata, active, priority, n_upd = carry
+
+            # 5. version bumps for executed rows (and their edges)
+            version = version.at[jnp.where(win, cand, R)].add(
+                1, mode="drop")
+            if exchange_edges:
+                eids = struct.edge_ids[cand]
+                emask = struct.nbr_mask[cand] & win[:, None]
+                eversion = eversion.at[
+                    jnp.where(emask, eids, E_loc + 1).reshape(-1)].add(
+                        1, mode="drop")
+
+            # 6. versioned ghost/edge sync
+            vdata, sent_ver, n_fresh, n_full = push_ghost_versioned(
+                vdata, version, sent_ver, plan_b)
+            sent, full = sent + n_fresh, full + n_full
+            if exchange_edges:
+                edata, esent_ver = push_edges_versioned(
+                    edata, eversion, esent_ver, plan_b)
+
+            # 7. task backflow (ghost flags/priority -> owner)
+            active, priority = task_backflow(active, priority, plan_b,
+                                             axis, R)
+
+            new_globals = refresh_syncs(
+                syncs, globals_, vdata, step,
+                run_fn=make_dist_sync_run(axis, M, owned))
+            return (vdata, edata, active, priority, new_globals,
+                    step + 1, n_upd, version, eversion, sent_ver,
+                    esent_ver, sent, full)
+
+        return superstep
+
+    # ------------------------------------------------------------------
+    def run(self, active: np.ndarray | None = None,
+            num_supersteps: int | None = None):
+        plan = self.plan
+        nv = self.graph.n_vertices
+        vdata0 = plan.shard_vertex_data(self.graph.vertex_data)
+        edata_global = jax.tree.map(lambda a: a[:-1], self.graph.edge_data)
+        edata0 = plan.shard_edge_data(edata_global)
+        if active is None:
+            active = np.ones(nv, bool)
+        act0 = plan.shard_vertex_data({"a": jnp.asarray(active)})["a"] \
+            & plan.owned_mask
+        prio0 = act0.astype(jnp.float32)
+        globals0 = {s.key: s.run(self.graph.vertex_data) for s in self.syncs}
+
+        plan_arrays = dict(
+            nbrs=plan.nbrs, nbr_mask=plan.nbr_mask, edge_ids=plan.edge_ids,
+            is_src=plan.is_src, degree=plan.degree,
+            owned_mask=plan.owned_mask, global_ids=plan.global_ids,
+            tsend_idx=plan.tsend_idx, tsend_mask=plan.tsend_mask,
+            trecv_idx=plan.trecv_idx, cesend_idx=plan.cesend_idx,
+            cesend_mask=plan.cesend_mask, cerecv_idx=plan.cerecv_idx,
+        )
+        superstep = self._build_superstep()
+        axis = self.axis
+        max_ss = self.max_supersteps
+        fixed = num_supersteps
+        M, R, E_loc, Hg, Hc = plan.M, plan.R, plan.E_loc, plan.Hg, plan.Hc
+
+        def shard_fn(plan_blk, vdata, edata, act, prio, globals_):
+            plan_b = jax.tree.map(lambda a: a[0], plan_blk)
+            vdata = jax.tree.map(lambda a: a[0], vdata)
+            edata = jax.tree.map(lambda a: a[0], edata)
+            act, prio = act[0], prio[0]
+            struct = LocalStruct(plan_b["nbrs"], plan_b["nbr_mask"],
+                                 plan_b["edge_ids"], plan_b["is_src"],
+                                 plan_b["degree"], R)
+            state = (vdata, edata, act, prio, globals_, jnp.int32(0),
+                     jnp.int32(0),
+                     jnp.zeros((R,), jnp.int32),           # vertex versions
+                     jnp.zeros((E_loc + 1,), jnp.int32),   # edge versions
+                     jnp.zeros((M, Hg), jnp.int32),        # sent versions
+                     jnp.zeros((M, Hc), jnp.int32),
+                     jnp.int32(0), jnp.int32(0))           # sent/full rows
+
+            def body(state):
+                return superstep(state, struct, plan_b)
+
+            if fixed is not None:
+                for _ in range(fixed):
+                    state = body(state)
+            else:
+                def cond(state):
+                    act_l = state[2] & plan_b["owned_mask"]
+                    total = jax.lax.psum(act_l.sum(dtype=jnp.int32), axis)
+                    return (total > 0) & (state[5] < max_ss)
+                state = jax.lax.while_loop(cond, body, state)
+            (vdata, edata, act, prio, globals_, step, n_upd,
+             *_rest, sent, full) = state
+            n_upd = jax.lax.psum(n_upd, axis)
+            sent = jax.lax.psum(sent, axis)
+            full = jax.lax.psum(full, axis)
+            expand = lambda t: jax.tree.map(lambda a: a[None], t)
+            return (expand(vdata), expand(edata), act[None], prio[None],
+                    globals_, step, n_upd, sent, full)
+
+        from jax.experimental.shard_map import shard_map
+        spec_s = P(self.axis)
+        fn = shard_map(
+            shard_fn, mesh=self.mesh,
+            in_specs=(spec_s, spec_s, spec_s, spec_s, spec_s, P()),
+            out_specs=(spec_s, spec_s, spec_s, spec_s, P(), P(), P(),
+                       P(), P()),
+            check_rep=False)
+        with jax.transfer_guard("allow"):
+            out = jax.jit(fn)(plan_arrays, vdata0, edata0, act0, prio0,
+                              globals0)
+        vdata, edata, act, prio, globals_, step, n_upd, sent, full = out
+        return dict(
+            vertex_data=plan.unshard_vertex_data(vdata, nv),
+            local_vertex_data=vdata,
+            local_edge_data=edata,
+            globals=globals_,
+            supersteps=int(step),
+            n_updates=int(n_upd),
+            active_any=bool((act & plan.owned_mask).any()),
+            ghost_rows_sent=int(sent),    # version-filtered traffic
+            ghost_rows_full=int(full),    # what a static push would send
+        )

@@ -12,17 +12,21 @@ there are no remote mutexes; the equivalent structure is:
     2. execute them color phase by color phase — vertices of the selected
        set that share a color are non-adjacent, so each sub-phase is
        conflict-free exactly as in the chromatic engine.  This replaces
-       "acquire scope locks"; the static schedule replaces lock
-       *pipelining* (XLA overlaps the gathers/collectives it can see).
+       "acquire scope locks" *for colorable graphs*; the real lock
+       pipeline (claim-pass conflict resolution with a ``max_pending``
+       in-flight window, no coloring required) lives in
+       ``repro.core.engine_locking`` (DESIGN.md §6).
 
 Semantically this executes tasks in priority order with ties broken by
 (color, id) — a legal RemoveNext under the abstraction (§3.4), which only
 requires that RemoveNext return *some* task.  FIFO scheduling is the
 special case priority := insertion counter (negated).
 
-The ``maxpending`` knob of the paper's lock pipeline reappears here as
-``k_select``: how much work is in flight per superstep.  Benchmarks sweep
-it like the paper's Fig. 8(b) sweeps maxpending.
+``k_select`` bounds how much work is in flight per superstep — an
+*analogue* of the paper's ``maxpending``, not a replacement for lock
+pipelining: it presumes a coloring and never arbitrates conflicts.  The
+locking engine's ``max_pending`` is the real knob; ``benchmarks/
+fig8_locking.py`` sweeps both side by side.
 
 As a scheduling strategy over ``repro.core.exec.ExecutorCore``, the
 whole engine is the top-k selection below: bookkeeping, sync refresh,

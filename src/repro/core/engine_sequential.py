@@ -16,6 +16,11 @@ it:
   selects the K highest-priority active vertices (stable ties by id,
   matching ``jax.lax.top_k``), then sweeps them color by color, with
   the same consume/reschedule priority bookkeeping as the engines;
+* ``locking_pending=P`` — the locking engine's order: each superstep
+  puts the P highest-priority active vertices in flight and executes
+  the min-id claim winners under the update's consistency model
+  (scope-disjoint for FULL, independent-set for EDGE, everybody for
+  VERTEX/UNSAFE) — the replay of ``engine_locking``'s conflict pass;
 * ``snapshot_phases``— gathers every phase's scopes from a snapshot
   taken at phase start.  For a proper coloring this changes nothing
   (same-phase vertices are non-adjacent); with the trivial single
@@ -33,7 +38,26 @@ import numpy as np
 
 from repro.core.graph import DataGraph
 from repro.core.sync import SyncOp
-from repro.core.update import UpdateFn, gather_scopes, scatter_result
+from repro.core.update import (Consistency, UpdateFn, gather_scopes,
+                               scatter_result)
+
+
+def _locking_winners(cand: list[int], adj, consistency: Consistency,
+                     nv: int) -> list[int]:
+    """Replay of the engines' claim pass: min-id claim winners among the
+    pending window ``cand`` under the update's consistency model."""
+    if consistency == Consistency.FULL:
+        claim = {}
+        for v in cand:
+            for x in [v] + adj[v]:
+                claim[x] = min(claim.get(x, nv + 1), v)
+        return [v for v in cand
+                if claim[v] == v and all(claim[u] == v for u in adj[v])]
+    if consistency == Consistency.EDGE:
+        cset = set(cand)
+        return [v for v in cand
+                if all(u not in cset or u > v for u in adj[v])]
+    return list(cand)       # VERTEX / UNSAFE: no conflicts
 
 
 def run_sequential(
@@ -43,13 +67,20 @@ def run_sequential(
     active: np.ndarray | None = None,
     max_supersteps: int = 100,
     k_select: int | None = None,
+    locking_pending: int | None = None,
     snapshot_phases: bool = False,
 ):
     """Returns (vertex_data, edge_data, globals, n_updates)."""
     nv = graph.n_vertices
-    colors = np.asarray(graph.colors)
-    n_colors = int(colors.max()) + 1 if colors.size else 1
-    per_color = [np.nonzero(colors == c)[0] for c in range(n_colors)]
+    if locking_pending is None:
+        colors = np.asarray(graph.colors)
+        n_colors = int(colors.max()) + 1 if colors.size else 1
+        per_color = [np.nonzero(colors == c)[0] for c in range(n_colors)]
+    else:
+        # the locking engine ignores colors: one conflict-resolved
+        # phase per superstep
+        colors, n_colors, per_color = None, 1, None
+        adj = graph.adjacency_lists
     vdata, edata = graph.vertex_data, graph.edge_data
     act = np.ones(nv, bool) if active is None else np.asarray(active).copy()
     prio = act.astype(np.float32).copy()
@@ -59,7 +90,19 @@ def run_sequential(
     for step in range(max_supersteps):
         if not act.any():
             break
-        if k_select is None:
+        winners = None
+        if locking_pending is not None:
+            # the locking engine's RemoveNext: pending window = top-P
+            # active by priority (stable ties by id), then the min-id
+            # claim winners execute as one conflict-free batch
+            p = min(locking_pending, nv)
+            score = np.where(act, prio, -np.inf)
+            cand = [int(v) for v in np.argsort(-score, kind="stable")[:p]
+                    if act[v]]
+            winners = _locking_winners(cand, adj,
+                                       update_fn.consistency, nv)
+            chosen = None
+        elif k_select is None:
             chosen = None
         else:
             # the priority engine's RemoveNext: top-k by priority with
@@ -71,7 +114,9 @@ def run_sequential(
         for c in range(n_colors):
             # snapshot the phase's task selection exactly like the engine:
             # tasks added *during* phase c run no earlier than phase c+1.
-            if chosen is None:
+            if winners is not None:
+                sel = winners
+            elif chosen is None:
                 sel = [v for v in per_color[c] if act[v]]
             else:
                 sel = [int(v) for v in chosen if colors[v] == c and act[v]]

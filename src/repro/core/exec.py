@@ -12,6 +12,10 @@ triplicate lives here exactly once:
   tasks, OR/max-merge returned tasks, all via the OOB-sentinel scatter
   trick (padded batch slots alias vertex 0; routing them to an
   out-of-bounds index makes ``mode="drop"`` scatters exact).
+* ``scope_claims`` / ``self_claims`` / ``claim_winners`` /
+  ``adjacent_claim_winners`` — the locking engine's conflict-resolution
+  pass (DESIGN.md §6): reader/writer lock acquisition in canonical
+  min-id order, expressed in the same sentinel scatter algebra.
 * ``dispatch_update``       — scope materialization + update dispatch,
   including the Pallas aggregator fast path (DESIGN.md §4): an update
   function that declares itself a linear neighbor aggregation skips the
@@ -133,6 +137,93 @@ def consume_and_reschedule(active, priority, ids, sel, nbr_ids, nbr_mask,
         pr_self = jnp.where(sel & res.resched_self, res.priority, -jnp.inf)
         priority = priority.at[safe_ids].max(pr_self, mode="drop")
     return active, priority
+
+
+# ----------------------------------------------------------------------
+# Min-id scope claims: the locking engine's conflict-resolution pass
+# ----------------------------------------------------------------------
+
+NO_CLAIM = jnp.iinfo(jnp.int32).max   # "nobody claims this row"
+
+
+def scope_claims(struct, ids, sel, claim_ids=None):
+    """Deterministic Chandy–Misra-style lock acquisition as one scatter.
+
+    Every candidate vertex ``ids[p]`` (masked by ``sel``) *claims* its
+    whole scope — itself plus its neighbor slots — by min-scattering its
+    claim id into a per-row claim array.  The claim id defaults to the
+    row id itself; the distributed engine passes *global* vertex ids so
+    the total order (and therefore the winner set) is partition
+    independent.  Padded/unselected slots are routed to the OOB row
+    (``n_rows``) exactly like the task-set algebra, so ``mode="drop"``
+    scatters are exact.
+
+    Returns ``claim [n_rows] int32``: the minimum claim id over all
+    candidates whose scope contains the row, ``NO_CLAIM`` where
+    unclaimed.
+    """
+    n_rows = struct.nbrs.shape[0]
+    cid = ids.astype(jnp.int32) if claim_ids is None else claim_ids
+    claim = jnp.full((n_rows,), NO_CLAIM, jnp.int32)
+    safe_self = jnp.where(sel, ids, n_rows)
+    claim = claim.at[safe_self].min(cid, mode="drop")
+    nbrs = struct.nbrs[ids]                              # [P, D]
+    nmask = struct.nbr_mask[ids] & sel[:, None]
+    safe_n = jnp.where(nmask, nbrs, n_rows)
+    cvals = jnp.where(nmask, cid[:, None], NO_CLAIM)
+    return claim.at[safe_n.reshape(-1)].min(cvals.reshape(-1), mode="drop")
+
+
+def self_claims(struct, ids, sel, claim_ids=None):
+    """Candidacy marks: each candidate min-scatters its claim id onto
+    its *own* row only.  ``claim[x] == NO_CLAIM`` therefore reads "x is
+    not in any pending window" — the read-lock-compatible claim array
+    for the edge-consistency winner rule (``adjacent_claim_winners``).
+    """
+    n_rows = struct.nbrs.shape[0]
+    cid = ids.astype(jnp.int32) if claim_ids is None else claim_ids
+    claim = jnp.full((n_rows,), NO_CLAIM, jnp.int32)
+    return claim.at[jnp.where(sel, ids, n_rows)].min(cid, mode="drop")
+
+
+def claim_winners(struct, ids, sel, claim, claim_ids=None):
+    """Full-consistency grant: a candidate enters the executing batch
+    iff it holds the min-id claim over *every* row of its scope (self +
+    real neighbor slots) in a ``scope_claims`` array.
+
+    This is the write-lock-everything discipline of the paper's FULL
+    model: winners have pairwise-disjoint scopes, so executing them in
+    parallel is trivially serializable (sequential consistency, Def.
+    3.1).  The globally minimal candidate always wins, so each
+    conflict-resolution round makes progress (no livelock) without any
+    lock-ordering handshake: min-id ordering *is* the deadlock-free
+    canonical lock order of the paper's §4.2.2 pipelined locking engine.
+    """
+    cid = ids.astype(jnp.int32) if claim_ids is None else claim_ids
+    own = claim[ids] == cid
+    nbrs = struct.nbrs[ids]
+    nb_ok = jnp.where(struct.nbr_mask[ids],
+                      claim[nbrs] == cid[:, None], True).all(axis=-1)
+    return sel & own & nb_ok
+
+
+def adjacent_claim_winners(struct, ids, sel, claim, claim_ids=None):
+    """Edge/vertex-consistency grant over a ``self_claims`` array: a
+    candidate wins iff its id is strictly minimal among its *candidate
+    neighbors* (non-candidates read as ``NO_CLAIM`` = +inf).
+
+    Read locks are compatible, so two candidates sharing a neighbor may
+    both run — only adjacency (write-lock on self vs the neighbor's
+    read lock, plus the shared-edge write) conflicts.  Winners form an
+    independent set, exactly the chromatic engine's per-phase guarantee,
+    and the same min-id progress/deadlock-freedom argument applies.
+    """
+    cid = ids.astype(jnp.int32) if claim_ids is None else claim_ids
+    own = claim[ids] == cid
+    nbrs = struct.nbrs[ids]
+    nb_ok = jnp.where(struct.nbr_mask[ids],
+                      claim[nbrs] > cid[:, None], True).all(axis=-1)
+    return sel & own & nb_ok
 
 
 # ----------------------------------------------------------------------
@@ -306,6 +397,13 @@ class ExecutorCore:
             num_supersteps: int | None = None) -> EngineState:
         """Run to convergence of the task set (or max/num supersteps)."""
         state = self.init_state(active, priority)
+        return self.resume(state, num_supersteps)
+
+    def resume(self, state: EngineState,
+               num_supersteps: int | None = None) -> EngineState:
+        """Continue from an existing EngineState (e.g. a restored
+        snapshot, paper §8: superstep boundaries are globally consistent
+        cuts, so resuming from one is bit-identical to never stopping)."""
         if num_supersteps is not None:
             for _ in range(num_supersteps):
                 state = self._step_jit(state)

@@ -56,10 +56,46 @@ def restore(path: str, like: PyTree) -> tuple[PyTree, int | None]:
 
 def snapshot_engine_state(path: str, state) -> None:
     """Consistent snapshot of a graph-engine EngineState (between
-    supersteps — the paper's §8 Sync-based snapshot)."""
+    supersteps — the paper's §8 Sync-based snapshot).
+
+    Saves everything a bit-identical resume needs: data, the task set,
+    priorities, sync results, and the update counter; the superstep goes
+    into ``__step__``.  ``restore_engine_state`` is the inverse."""
     save(path, {
         "vertex_data": state.vertex_data,
         "edge_data": state.edge_data,
         "active": state.active,
         "priority": state.priority,
+        "globals": state.globals,
+        "n_updates": state.n_updates,
     }, step=int(state.superstep))
+
+
+def restore_engine_state(path: str, like):
+    """Restore a ``snapshot_engine_state`` snapshot into an EngineState
+    shaped like ``like`` (e.g. ``engine.init_state()``).
+
+    Superstep boundaries are globally consistent cuts, so
+    ``engine.resume(restore_engine_state(path, engine.init_state()))``
+    continues bit-identically to a run that never stopped
+    (``tests/test_optim_ckpt.py`` asserts this)."""
+    import dataclasses
+    tree = {
+        "vertex_data": like.vertex_data,
+        "edge_data": like.edge_data,
+        "active": like.active,
+        "priority": like.priority,
+        "globals": like.globals,
+        "n_updates": like.n_updates,
+    }
+    restored, step = restore(path, tree)
+    return dataclasses.replace(
+        like,
+        vertex_data=restored["vertex_data"],
+        edge_data=restored["edge_data"],
+        active=restored["active"],
+        priority=restored["priority"],
+        globals=restored["globals"],
+        n_updates=restored["n_updates"],
+        superstep=jnp.int32(step if step is not None else 0),
+    )

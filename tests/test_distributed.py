@@ -12,6 +12,8 @@ import textwrap
 import numpy as np
 import pytest
 
+pytestmark = pytest.mark.distributed
+
 _SCRIPT = textwrap.dedent("""
     import os
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"

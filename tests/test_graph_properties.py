@@ -6,6 +6,8 @@ import pytest
 pytest.importorskip("hypothesis")  # optional test dep; skip, don't error
 from hypothesis import given, settings, strategies as st
 
+pytestmark = pytest.mark.slow      # hypothesis sweeps: own CI job
+
 from repro.core.graph import DataGraph, bipartite_edges, grid_edges_3d
 from conftest import random_graph
 

@@ -1,0 +1,272 @@
+"""Locking engine (paper §4.2.2): claim-algebra conflict resolution,
+the max_pending lock pipeline, versioned ghost sync, and single-shard /
+multi-shard equivalence.
+
+The in-process tests run on one CPU device (the M=1 plan is the
+degenerate case: every collective is an identity).  The 8-virtual-device
+equivalence runs in a subprocess because XLA_FLAGS device-count must be
+set before jax initializes; it is marked ``distributed`` so the CI
+matrix can give it a real multi-device job.
+"""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.apps import pagerank
+from repro.core import (ChromaticEngine, Consistency, DistributedLockingEngine,
+                        LockingEngine, ShardPlan, UpdateFn, UpdateResult,
+                        run_sequential)
+from repro.core.graph import DataGraph
+from conftest import random_graph
+
+
+def _graph(nv=40, ne=90, seed=1):
+    return pagerank.make_graph(random_graph(nv, ne, seed=seed), nv)
+
+
+def test_locking_engine_needs_no_coloring():
+    """§4.2.2: the locking engine generalizes to graphs where coloring
+    is unavailable — same fixed point as the chromatic engine."""
+    edges = random_graph(40, 90, seed=5)
+    g_colored = pagerank.make_graph(edges, 40)
+    g_plain = DataGraph.from_edges(
+        40, edges, {"rank": np.asarray(g_colored.vertex_data["rank"])},
+        {"w": np.asarray(g_colored.edge_data["w"])[:-1]})
+    upd = pagerank.make_update(1e-6)
+    chrom = ChromaticEngine(g_colored, upd, max_supersteps=300).run()
+    lock = LockingEngine(g_plain, upd, max_pending=16,
+                         max_supersteps=20000).run()
+    assert not bool(lock.active.any()), "locking engine must drain"
+    np.testing.assert_allclose(np.asarray(lock.vertex_data["rank"]),
+                               np.asarray(chrom.vertex_data["rank"]),
+                               atol=2e-5)
+
+
+def test_max_pending_one_is_strictly_sequential():
+    """P=1: one scope in flight — exactly one update per superstep."""
+    g = _graph()
+    st = LockingEngine(g, pagerank.make_update(1e-4), max_pending=1,
+                       max_supersteps=20000).run()
+    assert not bool(st.active.any())
+    assert int(st.n_updates) == int(st.superstep)
+
+
+def test_winner_batches_are_conflict_free():
+    """EDGE winners are an independent set; FULL winners have disjoint
+    scopes — checked directly on the claim primitives."""
+    from repro.core import claim_winners, scope_claims
+    from repro.core.exec import adjacent_claim_winners, self_claims
+    g = _graph(30, 70, seed=2)
+    adj = g.adjacency_lists
+    ids = jnp.arange(30, dtype=jnp.int32)
+    sel = jnp.ones(30, bool)
+    win_edge = np.asarray(adjacent_claim_winners(
+        g, ids, sel, self_claims(g, ids, sel)))
+    winners = np.nonzero(win_edge)[0]
+    assert len(winners) > 1
+    wset = set(winners.tolist())
+    for v in winners:
+        assert not (set(adj[v]) & wset), "EDGE winners must be independent"
+    win_full = np.asarray(claim_winners(g, ids, sel,
+                                        scope_claims(g, ids, sel)))
+    scopes = [set(adj[v]) | {int(v)} for v in np.nonzero(win_full)[0]]
+    for i in range(len(scopes)):
+        for j in range(i + 1, len(scopes)):
+            assert not (scopes[i] & scopes[j]), "FULL scopes must be disjoint"
+    # FULL is strictly more exclusive than EDGE
+    assert win_full.sum() <= win_edge.sum()
+    assert win_full.sum() >= 1, "min-id candidate must always win"
+
+
+def _neighbor_writer():
+    """FULL-consistency update: pushes value onto neighbors."""
+    def update(scope):
+        push = scope.v_data["x"][:, None] * 0.5
+        new_nbr = jnp.where(scope.nbr_mask, scope.nbr_data["x"] + push,
+                            scope.nbr_data["x"])
+        return UpdateResult(v_data={"x": scope.v_data["x"] + 1.0},
+                            nbr_data={"x": new_nbr})
+    return UpdateFn(update, Consistency.FULL, name="pusher")
+
+
+def test_locking_full_consistency_matches_oracle():
+    """Scope-disjoint winners make neighbor-writing updates safe without
+    a distance-2 coloring (the chromatic engine needs one)."""
+    edges = random_graph(20, 40, seed=1)
+    x0 = np.arange(20, dtype=np.float32)
+    g = DataGraph.from_edges(20, edges, {"x": x0})
+    upd = _neighbor_writer()
+    eng = LockingEngine(g, upd, max_pending=20, max_supersteps=50)
+    st = eng.run(num_supersteps=8)
+    vd, *_rest, n_seq = run_sequential(g, upd, max_supersteps=8,
+                                       locking_pending=20)
+    np.testing.assert_allclose(np.asarray(st.vertex_data["x"]),
+                               np.asarray(vd["x"]), rtol=1e-6)
+    assert int(st.n_updates) == n_seq
+
+
+def test_lbp_residual_locking_wiring():
+    """CoSeg under the locking engine (the paper's §5.2 adaptive
+    schedule): residual priorities drive the window, GMM sync included."""
+    from repro.apps import lbp
+    prob = lbp.synthetic_coseg(2, 3, 4, n_labels=3, noise=0.3, seed=0)
+    eng = lbp.residual_locking_engine(prob, eps=1e-2, max_pending=8,
+                                      max_supersteps=5000)
+    st = eng.run()
+    assert not bool(st.active.any())
+    assert "gmm" in st.globals
+    assert lbp.label_accuracy(prob, st.vertex_data) > 0.8
+
+
+def test_distributed_full_consistency_rejected_across_shards():
+    """FULL neighbor writes land on ghost rows with no backflow channel;
+    the distributed engine must refuse rather than silently diverge."""
+    g = _graph(20, 40, seed=3)
+    plan2 = ShardPlan.build(g, np.arange(20, dtype=np.int64) % 2, 2)
+    with pytest.raises(ValueError, match="FULL"):
+        DistributedLockingEngine(g, plan2, _neighbor_writer())
+    # the single-shard degenerate case stays allowed
+    plan1 = ShardPlan.build(g, np.zeros(20, np.int64), 1)
+    DistributedLockingEngine(g, plan1, _neighbor_writer())
+
+
+def test_single_shard_plan_is_bitwise_degenerate():
+    """DistributedLockingEngine on an M=1 plan == LockingEngine
+    bit-for-bit (every collective is an identity), including with a
+    *binding* pipeline window."""
+    g = _graph(40, 90, seed=1)
+    upd = pagerank.make_update(1e-5)
+    single = LockingEngine(g, upd, max_pending=8, max_supersteps=5000).run()
+    plan = ShardPlan.build(g, np.zeros(40, np.int64), 1)
+    dist = DistributedLockingEngine(g, plan, upd, max_pending=8,
+                                    max_supersteps=5000).run()
+    assert dist["supersteps"] == int(single.superstep)
+    assert dist["n_updates"] == int(single.n_updates)
+    assert np.array_equal(np.asarray(single.vertex_data["rank"]),
+                          np.asarray(dist["vertex_data"]["rank"]))
+    # no ghosts on one shard: the versioned sync moves nothing
+    assert dist["ghost_rows_sent"] == 0
+    assert dist["ghost_rows_full"] == 0
+
+
+# ----------------------------------------------------------------------
+# 8-virtual-device equivalence (subprocess: XLA_FLAGS before jax import)
+# ----------------------------------------------------------------------
+
+_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import json
+    import numpy as np
+    from repro.apps import lbp, pagerank
+    from repro.core import (DistributedLockingEngine, LockingEngine,
+                            ShardPlan, two_phase_partition)
+
+    out = {}
+
+    # --- PageRank, 8 shards: saturating window -> bit-identical ---
+    rng = np.random.default_rng(1)
+    nv = 80
+    edges = set()
+    while len(edges) < 200:
+        u, v = rng.integers(0, nv, 2)
+        if u != v:
+            edges.add((min(u, v), max(u, v)))
+    edges = np.array(sorted(edges))
+    g = pagerank.make_graph(edges, nv)
+    upd = pagerank.make_update(1e-4)
+    syncs = [pagerank.total_rank_sync()]
+    single = LockingEngine(g, upd, syncs=syncs, max_pending=nv,
+                           max_supersteps=3000).run()
+    plan = ShardPlan.build(g, two_phase_partition(nv, edges, 8, seed=0), 8)
+    dist = DistributedLockingEngine(g, plan, upd, syncs=syncs,
+                                    max_pending=plan.R,
+                                    max_supersteps=3000).run()
+    out["pr_equal"] = bool(np.array_equal(
+        np.asarray(single.vertex_data["rank"]),
+        np.asarray(dist["vertex_data"]["rank"])))
+    out["pr_updates"] = [int(single.n_updates), dist["n_updates"]]
+    out["pr_supersteps"] = [int(single.superstep), dist["supersteps"]]
+    out["pr_ghost_sent"] = dist["ghost_rows_sent"]
+    out["pr_ghost_full"] = dist["ghost_rows_full"]
+
+    # --- LBP with cut-edge writes (CoSeg), versioned edge sync ---
+    pl = lbp.synthetic_coseg(4, 3, 4, n_labels=3, noise=0.5)
+    updl = lbp.make_update(3, eps=1e-2, use_gmm_sync=False)
+    stl = LockingEngine(pl.graph, updl, max_pending=pl.graph.n_vertices,
+                        max_supersteps=3000).run()
+    planl = ShardPlan.build(pl.graph, lbp.frame_partition(pl, 8), 8)
+    resl = DistributedLockingEngine(pl.graph, planl, updl,
+                                    max_pending=planl.R,
+                                    max_supersteps=3000,
+                                    exchange_edges=True).run()
+    out["lbp_maxdiff"] = float(np.abs(
+        np.asarray(stl.vertex_data["belief"])
+        - np.asarray(resl["vertex_data"]["belief"])).max())
+    out["lbp_updates"] = [int(stl.n_updates), resl["n_updates"]]
+    out["lbp_supersteps"] = [int(stl.superstep), resl["supersteps"]]
+
+    # --- binding per-shard window: still converges to the fixed point ---
+    from repro.core import ChromaticEngine
+    chrom = ChromaticEngine(g, pagerank.make_update(1e-6),
+                            max_supersteps=300).run()
+    dist_small = DistributedLockingEngine(
+        g, plan, pagerank.make_update(1e-6), max_pending=4,
+        max_supersteps=20000).run()
+    out["pipeline_drained"] = not dist_small["active_any"]
+    out["pipeline_maxdiff"] = float(np.abs(
+        np.asarray(chrom.vertex_data["rank"])
+        - np.asarray(dist_small["vertex_data"]["rank"])).max())
+
+    print("RESULT:" + json.dumps(out))
+""")
+
+
+@pytest.fixture(scope="module")
+def lock_dist_results():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    proc = subprocess.run([sys.executable, "-c", _SCRIPT], env=env,
+                          capture_output=True, text=True, timeout=900)
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    line = [l for l in proc.stdout.splitlines()
+            if l.startswith("RESULT:")][0]
+    return json.loads(line[len("RESULT:"):])
+
+
+@pytest.mark.distributed
+def test_distributed_locking_pagerank_bitwise_equal(lock_dist_results):
+    r = lock_dist_results
+    assert r["pr_equal"]
+    assert r["pr_updates"][0] == r["pr_updates"][1]
+    assert r["pr_supersteps"][0] == r["pr_supersteps"][1]
+
+
+@pytest.mark.distributed
+def test_versioned_ghost_sync_filters_traffic(lock_dist_results):
+    """The paper's "only transmit modified data": the version filter
+    must ship strictly less than the static every-round schedule."""
+    r = lock_dist_results
+    assert r["pr_ghost_full"] > 0
+    assert 0 < r["pr_ghost_sent"] < r["pr_ghost_full"]
+
+
+@pytest.mark.distributed
+def test_distributed_locking_lbp_edge_exchange(lock_dist_results):
+    r = lock_dist_results
+    assert r["lbp_maxdiff"] < 1e-4
+    assert r["lbp_updates"][0] == r["lbp_updates"][1]
+    assert r["lbp_supersteps"][0] == r["lbp_supersteps"][1]
+
+
+@pytest.mark.distributed
+def test_distributed_locking_pipelined_window_converges(lock_dist_results):
+    r = lock_dist_results
+    assert r["pipeline_drained"]
+    assert r["pipeline_maxdiff"] < 2e-5

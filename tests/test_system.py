@@ -14,6 +14,7 @@ from repro.core import (ChromaticEngine, DistributedChromaticEngine,
                         ShardPlan, two_phase_partition)
 
 
+@pytest.mark.slow
 def test_quickstart_example_runs():
     env = dict(os.environ)
     env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
@@ -81,6 +82,7 @@ def test_initial_task_subset():
     assert ranks[0] != 1.0 and ranks[1] != 1.0   # chain updated
 
 
+@pytest.mark.slow
 def test_dryrun_entry_on_production_mesh():
     """Integration: one real (arch x shape) lower+compile on the 16x16
     mesh, in a subprocess (needs 512 host devices)."""
