@@ -1,0 +1,155 @@
+"""Graph storage: monolithic padded ELL vs degree-bucketed sliced ELL.
+
+The tentpole claim of the sliced-ELL refactor (DESIGN.md §7), measured:
+
+* **slots** — stored (= kernel-computed) neighbor slots.  The monolithic
+  layout pays ``Nv * max_deg``; sliced ELL pays ``sum_b Nv_b * W_b``.
+  On a Zipf-degree graph the ratio is the whole point (paper §5: the
+  Netflix/NER graphs are exactly this shape).
+* **build time** — the vectorized lexsort/cumsum ``from_edges`` builder
+  vs the original per-edge Python loop, raced on a ~1M-edge graph.
+* **PageRank sweep** — one aggregation pass ``y = sum_j w*x[nbr]`` over
+  every vertex: one padded-width ``ell_spmv`` launch vs the per-bucket
+  ``ell_spmv_bucketed`` launches (interpret mode on CPU; the relative
+  number is the point).
+
+Appends ``results/BENCH_graph.json``; wired into ``benchmarks.run
+--smoke`` for the CI artifact job (tiny sizes).
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common
+from benchmarks.common import emit, time_fn
+from repro.core.graph import (DataGraph, _build_ell_loop,
+                              _build_ell_vectorized, zipf_edges)
+from repro.kernels.ell_spmv import ell_spmv, ell_spmv_bucketed
+
+_RESULTS = pathlib.Path(__file__).resolve().parent.parent / "results"
+
+
+def _uniform_edges(nv: int, ne: int, seed: int = 0) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    pairs = rng.integers(0, nv, (int(ne * 1.2), 2))
+    pairs = pairs[pairs[:, 0] != pairs[:, 1]][:ne]
+    lo = np.minimum(pairs[:, 0], pairs[:, 1])
+    hi = np.maximum(pairs[:, 0], pairs[:, 1])
+    return np.unique(np.stack([lo, hi], axis=1), axis=0)
+
+
+def _sweep_us(g: DataGraph, interpret: bool = True) -> tuple[float, float]:
+    """One full-graph PageRank aggregation, monolithic vs bucketed."""
+    ell = g.ell
+    p = g.to_padded()
+    x = g.vertex_data["rank"][:, None].astype(jnp.float32)
+    w_full = jnp.where(p.nbr_mask, g.edge_data["w"][p.edge_ids],
+                       0.0).astype(jnp.float32)
+    w_blocks = [jnp.where(m, g.edge_data["w"][e], 0.0).astype(jnp.float32)
+                for m, e in zip(ell.nbr_mask, ell.edge_ids)]
+    mono = jax.jit(lambda x: ell_spmv(p.nbrs, w_full, x,
+                                      interpret=interpret))
+    sliced = jax.jit(lambda x: ell_spmv_bucketed(ell.nbrs, w_blocks, x,
+                                                 interpret=interpret))
+    # same function before timing (float tolerance: launch widths
+    # compile with different excess precision; the engines' bitwise
+    # parity is between their two same-shape dispatch paths, §7)
+    y_m, y_s = mono(x), sliced(x)
+    np.testing.assert_allclose(np.asarray(y_m),
+                               np.asarray(y_s)[np.asarray(ell.inv_perm)],
+                               rtol=1e-5, atol=1e-7)
+    return time_fn(mono, x), time_fn(sliced, x)
+
+
+def _bench_graph(name: str, nv: int, edges: np.ndarray) -> dict:
+    g = pagerank_graph(nv, edges)
+    deg = np.asarray(g.degree, dtype=np.float64)
+    mono_slots = g.n_vertices * g.max_deg
+    sliced_slots = g.ell.padded_slots
+    mono_us, sliced_us = _sweep_us(g)
+    entry = {
+        "graph": name, "nv": nv, "n_edges": int(g.n_edges),
+        "max_deg": int(g.max_deg), "mean_deg": round(float(deg.mean()), 3),
+        "skew_max_over_mean": round(g.max_deg / max(deg.mean(), 1e-9), 2),
+        "monolithic_slots": int(mono_slots),
+        "sliced_slots": int(sliced_slots),
+        "slot_reduction": round(mono_slots / max(sliced_slots, 1), 2),
+        "bucket_widths": list(g.ell.widths),
+        "sweep_monolithic_us": round(mono_us, 1),
+        "sweep_sliced_us": round(sliced_us, 1),
+        "sweep_speedup": round(mono_us / max(sliced_us, 1e-9), 3),
+    }
+    emit(f"graph_storage_{name}_sweep_mono", mono_us,
+         f"nv={nv};slots={mono_slots}")
+    emit(f"graph_storage_{name}_sweep_sliced", sliced_us,
+         f"nv={nv};slots={sliced_slots};x{entry['slot_reduction']}")
+    return entry
+
+
+def pagerank_graph(nv: int, edges: np.ndarray) -> DataGraph:
+    from repro.apps import pagerank
+    return pagerank.make_graph(edges, nv)
+
+
+def _bench_build(ne_target: int) -> dict:
+    """Vectorized vs loop ELL build on a large uniform edge list."""
+    nv = max(ne_target // 10, 16)
+    edges = _uniform_edges(nv, ne_target, seed=1)
+    deg = np.zeros(nv, dtype=np.int64)
+    for col in (0, 1):
+        np.add.at(deg, edges[:, col], 1)
+    md = max(int(deg.max()), 1)
+    t0 = time.perf_counter()
+    vec = _build_ell_vectorized(nv, edges, md)
+    t_vec = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    loop = _build_ell_loop(nv, edges, md)
+    t_loop = time.perf_counter() - t0
+    for a, b in zip(vec, loop):       # identical output, not just faster
+        assert np.array_equal(a, b)
+    emit("graph_build_loop", t_loop * 1e6, f"ne={len(edges)}")
+    emit("graph_build_vectorized", t_vec * 1e6,
+         f"ne={len(edges)};x{t_loop / max(t_vec, 1e-9):.1f}")
+    return {
+        "n_edges": int(len(edges)), "nv": nv,
+        "build_loop_us": round(t_loop * 1e6, 1),
+        "build_vectorized_us": round(t_vec * 1e6, 1),
+        "build_speedup": round(t_loop / max(t_vec, 1e-9), 2),
+    }
+
+
+def run() -> None:
+    if common.SMOKE:
+        nv_zipf, cap, nv_uni, ne_uni, ne_build = 400, 32, 300, 900, 20_000
+    else:
+        nv_zipf, cap, nv_uni, ne_uni, ne_build = 10_000, 192, 5_000, \
+            20_000, 1_000_000
+    entry = {
+        "bench": "graph_storage",
+        "smoke": common.SMOKE,
+        "recorded_at": time.strftime("%Y-%m-%dT%H:%M:%S"),
+        "graphs": [
+            _bench_graph("uniform", nv_uni,
+                         _uniform_edges(nv_uni, ne_uni, seed=2)),
+            _bench_graph("zipf", nv_zipf,
+                         zipf_edges(nv_zipf, alpha=2.0, max_deg=cap,
+                                    seed=0)),
+        ],
+        "build": _bench_build(ne_build),
+    }
+    zipf = entry["graphs"][1]
+    if not common.SMOKE:
+        # the PR's acceptance criterion, enforced at record time
+        assert zipf["skew_max_over_mean"] >= 32, zipf
+        assert zipf["slot_reduction"] >= 4, zipf
+    _RESULTS.mkdir(exist_ok=True)
+    path = _RESULTS / "BENCH_graph.json"
+    history = json.loads(path.read_text()) if path.exists() else []
+    history.append(entry)
+    path.write_text(json.dumps(history, indent=2) + "\n")

@@ -8,6 +8,8 @@ Prints ``name,us_per_call,derived`` CSV rows.
          (LockingEngine) side by side with the old k_select proxy
          (Fig. 8a/8b); appends results/BENCH_locking.json
   kernels Pallas kernels vs jnp oracle; appends results/BENCH_engines.json
+  graph  padded vs sliced-ELL storage: slot counts, build time,
+         PageRank sweep; appends results/BENCH_graph.json
   roofline dry-run roofline table (per arch x shape x mesh)
 
 ``--smoke`` runs tiny sizes (CI artifact job); without an explicit
@@ -18,8 +20,8 @@ import sys
 
 def main() -> None:
     from benchmarks import (common, fig1_consistency, fig6_scaling,
-                            fig6cd_comparison, fig8_locking, kernels_bench,
-                            roofline_table)
+                            fig6cd_comparison, fig8_locking, graph_storage,
+                            kernels_bench, roofline_table)
     args = sys.argv[1:]
     common.SMOKE = "--smoke" in args
     args = [a for a in args if a != "--smoke"]
@@ -27,10 +29,12 @@ def main() -> None:
     mods = {
         "fig1": fig1_consistency, "fig6ab": fig6_scaling,
         "fig6cd": fig6cd_comparison, "fig8": fig8_locking,
-        "kernels": kernels_bench, "roofline": roofline_table,
+        "kernels": kernels_bench, "graph": graph_storage,
+        "roofline": roofline_table,
     }
     if only is None and common.SMOKE:
-        selected = ["fig8", "kernels"]      # the BENCH_*.json producers
+        # the BENCH_*.json producers
+        selected = ["fig8", "kernels", "graph"]
     else:
         selected = [only] if only else list(mods)
     print("name,us_per_call,derived")

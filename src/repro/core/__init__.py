@@ -1,7 +1,7 @@
 """GraphLab abstraction in JAX — the paper's core contribution.
 
 Public API:
-    DataGraph, bipartite_edges, grid_edges_3d
+    DataGraph, SlicedEll, bipartite_edges, grid_edges_3d, zipf_edges
     Consistency, UpdateFn, ScopeBatch, UpdateResult
     NeighborAggregator, aggregator_update, masked_neighbor_sum
     SyncOp, sum_sync, top_two_sync
@@ -11,7 +11,8 @@ Public API:
     two_phase_partition, random_partition
     ShardPlan, DistributedChromaticEngine, DistributedLockingEngine
 """
-from repro.core.graph import DataGraph, bipartite_edges, grid_edges_3d
+from repro.core.graph import (DataGraph, SlicedEll, bipartite_edges,
+                              grid_edges_3d, zipf_edges)
 from repro.core.update import (Consistency, NeighborAggregator, ScopeBatch,
                                UpdateFn, UpdateResult, aggregator_update,
                                gather_scopes, masked_neighbor_sum,

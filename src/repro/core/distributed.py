@@ -47,7 +47,8 @@ from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core.exec import (NO_CLAIM, apply_batch, default_interpret,
                              refresh_syncs)
-from repro.core.graph import DataGraph
+from repro.core.graph import (DataGraph, EllRows, SlicedEll, bucket_index,
+                              build_sliced_ell, default_bucket_widths)
 from repro.core.sync import SyncOp
 from repro.core.update import UpdateFn
 
@@ -55,13 +56,22 @@ PyTree = Any
 
 
 class LocalStruct(NamedTuple):
-    """Per-shard graph structure adapter consumed by gather/scatter."""
-    nbrs: jax.Array
-    nbr_mask: jax.Array
-    edge_ids: jax.Array
-    is_src: jax.Array
+    """Per-shard graph structure adapter consumed by gather/scatter.
+
+    Mirrors ``DataGraph``'s structure API (``struct_rows`` / ``degree``
+    / ``n_rows`` / ``ell``) over the shard-local degree-bucketed blocks,
+    so the shared executor core runs unchanged under ``shard_map``.
+    """
+    ell: SlicedEll
     degree: jax.Array
     n_vertices: int   # rows per shard R (scatter sentinel)
+
+    @property
+    def n_rows(self) -> int:
+        return self.n_vertices
+
+    def struct_rows(self, ids: jax.Array) -> EllRows:
+        return self.ell.rows(ids)
 
 
 @dataclasses.dataclass
@@ -75,11 +85,15 @@ class ShardPlan:
     Hv: int                # vertex-exchange width per (color, peer)
     He: int                # edge-exchange width per (color, peer)
     Hg: int                # task-backflow width per peer
-    # ---- device arrays, leading dim M ----
-    nbrs: jax.Array        # [M, R, D] local neighbor slots
-    nbr_mask: jax.Array    # [M, R, D]
-    edge_ids: jax.Array    # [M, R, D] local edge ids (pad -> E_loc)
-    is_src: jax.Array      # [M, R, D]
+    # ---- sliced-ELL local structure (per bucket [M, R_b, W_b]) ----
+    ell_widths: tuple          # static ascending bucket widths
+    ell_starts: tuple          # static position offsets (len n_buckets+1)
+    ell_nbrs: tuple            # per bucket [M, R_b, W_b] local nbr slots
+    ell_nbr_mask: tuple        # per bucket [M, R_b, W_b]
+    ell_edge_ids: tuple        # per bucket [M, R_b, W_b] (pad -> E_loc)
+    ell_is_src: tuple          # per bucket [M, R_b, W_b]
+    ell_perm: jax.Array        # [M, total] bucketed pos -> local row (pad -> R)
+    ell_inv_perm: jax.Array    # [M, R] local row -> bucketed pos
     degree: jax.Array      # [M, R]
     owned_mask: jax.Array  # [M, R]
     color_ids: jax.Array   # [M, n_colors, Cmax] local owned slots
@@ -155,10 +169,11 @@ class ShardPlan:
             ledge_to_global[i, : len(ledges[i])] = ledges[i]
 
         # ---- local adjacency for owned rows ----
-        h_nbrs = np.asarray(graph.nbrs)
-        h_mask = np.asarray(graph.nbr_mask)
-        h_eids = np.asarray(graph.edge_ids)
-        h_issrc = np.asarray(graph.is_src)
+        padded = graph.to_padded()       # host build works on the flat view
+        h_nbrs = np.asarray(padded.nbrs)
+        h_mask = np.asarray(padded.nbr_mask)
+        h_eids = np.asarray(padded.edge_ids)
+        h_issrc = np.asarray(padded.is_src)
         h_deg = np.asarray(graph.degree)
         nbrs_l = np.zeros((M, R, D), dtype=np.int32)
         mask_l = np.zeros((M, R, D), dtype=bool)
@@ -272,6 +287,27 @@ class ShardPlan:
         global_ids = np.where(local_to_global >= 0, local_to_global,
                               NO_CLAIM).astype(np.int32)
 
+        # ---- degree-bucket the shard-local adjacency ----
+        # Bucket shapes must be uniform across shards (SPMD), so each
+        # bucket is padded to its max row count over shards; ghost and
+        # padding rows carry no slots and land in the first bucket.
+        widths_all = default_bucket_widths(D)
+        slot_cnt = mask_l.sum(axis=-1)                       # [M, R]
+        bidx = bucket_index(widths_all, slot_cnt)
+        counts = np.stack([(bidx == b).sum(axis=1)
+                           for b in range(len(widths_all))], axis=1)
+        sizes_all = counts.max(axis=0)                       # [n_buckets]
+        keep = [b for b in range(len(widths_all)) if sizes_all[b] > 0]
+        kwidths = tuple(widths_all[b] for b in keep)
+        ksizes = [int(sizes_all[b]) for b in keep]
+        ells = [build_sliced_ell(nbrs_l[i], mask_l[i], eids_l[i],
+                                 issrc_l[i], pad_edge=E_loc,
+                                 widths=kwidths, bucket_sizes=ksizes)
+                for i in range(M)]
+        stack = lambda field: tuple(
+            jnp.stack([getattr(ells[i], field)[b] for i in range(M)])
+            for b in range(len(kwidths)))
+
         return ShardPlan(
             M=M, R=R, E_loc=E_loc, n_colors=n_colors, Cmax=Cmax,
             Hv=Hv, He=He, Hg=Hg, Hc=Hc,
@@ -279,8 +315,11 @@ class ShardPlan:
             cesend_idx=jnp.asarray(cesend_idx),
             cesend_mask=jnp.asarray(cesend_mask),
             cerecv_idx=jnp.asarray(cerecv_idx),
-            nbrs=jnp.asarray(nbrs_l), nbr_mask=jnp.asarray(mask_l),
-            edge_ids=jnp.asarray(eids_l), is_src=jnp.asarray(issrc_l),
+            ell_widths=kwidths, ell_starts=ells[0].starts,
+            ell_nbrs=stack("nbrs"), ell_nbr_mask=stack("nbr_mask"),
+            ell_edge_ids=stack("edge_ids"), ell_is_src=stack("is_src"),
+            ell_perm=jnp.stack([e.perm for e in ells]),
+            ell_inv_perm=jnp.stack([e.inv_perm for e in ells]),
             degree=jnp.asarray(deg_l), owned_mask=jnp.asarray(owned_mask),
             color_ids=jnp.asarray(color_ids), color_valid=jnp.asarray(color_valid),
             send_idx=jnp.asarray(send_idx), send_mask=jnp.asarray(send_mask),
@@ -292,6 +331,28 @@ class ShardPlan:
             local_to_global=local_to_global, ledge_to_global=ledge_to_global,
             assignment=assignment,
         )
+
+    # ------------------------------------------------------------------
+    def ell_arrays(self) -> dict:
+        """The sliced-ELL device arrays, keyed for a shard_map plan dict."""
+        return dict(
+            ell_nbrs=self.ell_nbrs, ell_nbr_mask=self.ell_nbr_mask,
+            ell_edge_ids=self.ell_edge_ids, ell_is_src=self.ell_is_src,
+            ell_perm=self.ell_perm, ell_inv_perm=self.ell_inv_perm)
+
+    def local_ell(self, plan_b: dict) -> SlicedEll:
+        """Rebuild one shard's ``SlicedEll`` from squeezed plan blocks
+        (inside ``shard_map``, leading M dim removed)."""
+        return SlicedEll(
+            widths=self.ell_widths, starts=self.ell_starts,
+            n_rows=self.R, max_deg=self.ell_widths[-1],
+            pad_edge=self.E_loc,
+            nbrs=plan_b["ell_nbrs"], nbr_mask=plan_b["ell_nbr_mask"],
+            edge_ids=plan_b["ell_edge_ids"], is_src=plan_b["ell_is_src"],
+            perm=plan_b["ell_perm"], inv_perm=plan_b["ell_inv_perm"])
+
+    def local_struct(self, plan_b: dict) -> LocalStruct:
+        return LocalStruct(self.local_ell(plan_b), plan_b["degree"], self.R)
 
     # ------------------------------------------------------------------
     def shard_vertex_data(self, vertex_data: PyTree) -> PyTree:
@@ -392,9 +453,6 @@ class DistributedChromaticEngine:
         self.mesh = Mesh(np.array(devs[: self.plan.M]), (self.axis,))
 
     # -- per-shard program (runs under shard_map; leading dim 1) --------
-    def _local_struct(self, p_nbrs, p_mask, p_eids, p_issrc, p_deg):
-        return LocalStruct(p_nbrs, p_mask, p_eids, p_issrc, p_deg, self.plan.R)
-
     def _build_step(self):
         plan, upd, axis = self.plan, self.update_fn, self.axis
         M = plan.M
@@ -472,15 +530,14 @@ class DistributedChromaticEngine:
         globals0 = {s.key: s.run(self.graph.vertex_data) for s in self.syncs}
 
         plan_arrays = dict(
-            nbrs=plan.nbrs, nbr_mask=plan.nbr_mask, edge_ids=plan.edge_ids,
-            is_src=plan.is_src, degree=plan.degree,
-            owned_mask=plan.owned_mask,
+            degree=plan.degree, owned_mask=plan.owned_mask,
             color_ids=plan.color_ids, color_valid=plan.color_valid,
             send_idx=plan.send_idx, send_mask=plan.send_mask,
             recv_idx=plan.recv_idx, esend_idx=plan.esend_idx,
             esend_mask=plan.esend_mask, erecv_idx=plan.erecv_idx,
             tsend_idx=plan.tsend_idx, tsend_mask=plan.tsend_mask,
             trecv_idx=plan.trecv_idx,
+            **plan.ell_arrays(),
         )
         _, superstep = self._build_step()
         n_colors = plan.n_colors
@@ -494,9 +551,7 @@ class DistributedChromaticEngine:
             vdata = jax.tree.map(lambda a: a[0], vdata)
             edata = jax.tree.map(lambda a: a[0], edata)
             act, prio = act[0], prio[0]
-            struct = LocalStruct(plan_b["nbrs"], plan_b["nbr_mask"],
-                                 plan_b["edge_ids"], plan_b["is_src"],
-                                 plan_b["degree"], plan.R)
+            struct = plan.local_struct(plan_b)
             state = (vdata, edata, act, prio, globals_, jnp.int32(0),
                      jnp.int32(0))
 

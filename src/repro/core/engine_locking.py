@@ -55,8 +55,8 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
-from repro.core.distributed import (LocalStruct, ShardPlan,
-                                    make_dist_sync_run, task_backflow)
+from repro.core.distributed import (ShardPlan, make_dist_sync_run,
+                                    task_backflow)
 from repro.core.exec import (NO_CLAIM, ExecutorCore,
                              adjacent_claim_winners, apply_batch,
                              claim_winners, default_interpret,
@@ -69,7 +69,7 @@ PyTree = Any
 
 
 def conflict_winners(struct, ids, sel, consistency: Consistency,
-                     claim_ids=None, combine=None):
+                     claim_ids=None, combine=None, rows=None):
     """Reader/writer lock grant as one claim scatter + one check.
 
     The claim pattern mirrors the paper's lock table per consistency
@@ -78,18 +78,23 @@ def conflict_winners(struct, ids, sel, consistency: Consistency,
     are compatible (``self_claims`` -> independent-set winners), and
     VERTEX/UNSAFE scopes never conflict (every candidate wins).
     ``combine`` is the distributed engine's cross-shard min-combine of
-    the claim array (identity when None / single shard).
+    the claim array (identity when None / single shard).  ``rows`` is
+    the candidates' materialized adjacency — one bucketed-row gather
+    shared by the claim scatter and the winner check.
     """
     if consistency == Consistency.FULL:
-        claim = scope_claims(struct, ids, sel, claim_ids)
+        rows = struct.struct_rows(ids) if rows is None else rows
+        claim = scope_claims(struct, ids, sel, claim_ids, rows=rows)
         if combine is not None:
             claim = combine(claim)
-        return claim_winners(struct, ids, sel, claim, claim_ids)
+        return claim_winners(struct, ids, sel, claim, claim_ids, rows=rows)
     if consistency == Consistency.EDGE:
+        rows = struct.struct_rows(ids) if rows is None else rows
         claim = self_claims(struct, ids, sel, claim_ids)
         if combine is not None:
             claim = combine(claim)
-        return adjacent_claim_winners(struct, ids, sel, claim, claim_ids)
+        return adjacent_claim_winners(struct, ids, sel, claim, claim_ids,
+                                      rows=rows)
     return sel      # VERTEX / UNSAFE: no inter-vertex conflicts
 
 
@@ -245,24 +250,27 @@ class DistributedLockingEngine:
             cand_sel = (active & owned)[cand]
 
             # 2-3. claim pass + cross-shard combine -> winner batch
+            cand_rows = struct.struct_rows(cand)
             win = conflict_winners(
                 struct, cand, cand_sel, consistency,
                 claim_ids=gids[cand],
-                combine=lambda c: combine_claims(c, plan_b))
+                combine=lambda c: combine_claims(c, plan_b),
+                rows=cand_rows)
 
             # 4. execute winners through the shared executor core
+            # (reusing the claim pass's materialized candidate rows)
             carry = (vdata, edata, active, priority, n_upd)
             carry = apply_batch(
                 struct, upd, carry, cand, win, globals_, sentinel=R,
-                use_kernel=use_kernel, interpret=interpret)
+                use_kernel=use_kernel, interpret=interpret, rows=cand_rows)
             vdata, edata, active, priority, n_upd = carry
 
             # 5. version bumps for executed rows (and their edges)
             version = version.at[jnp.where(win, cand, R)].add(
                 1, mode="drop")
             if exchange_edges:
-                eids = struct.edge_ids[cand]
-                emask = struct.nbr_mask[cand] & win[:, None]
+                eids = cand_rows.edge_ids
+                emask = cand_rows.nbr_mask & win[:, None]
                 eversion = eversion.at[
                     jnp.where(emask, eids, E_loc + 1).reshape(-1)].add(
                         1, mode="drop")
@@ -304,12 +312,12 @@ class DistributedLockingEngine:
         globals0 = {s.key: s.run(self.graph.vertex_data) for s in self.syncs}
 
         plan_arrays = dict(
-            nbrs=plan.nbrs, nbr_mask=plan.nbr_mask, edge_ids=plan.edge_ids,
-            is_src=plan.is_src, degree=plan.degree,
+            degree=plan.degree,
             owned_mask=plan.owned_mask, global_ids=plan.global_ids,
             tsend_idx=plan.tsend_idx, tsend_mask=plan.tsend_mask,
             trecv_idx=plan.trecv_idx, cesend_idx=plan.cesend_idx,
             cesend_mask=plan.cesend_mask, cerecv_idx=plan.cerecv_idx,
+            **plan.ell_arrays(),
         )
         superstep = self._build_superstep()
         axis = self.axis
@@ -322,9 +330,7 @@ class DistributedLockingEngine:
             vdata = jax.tree.map(lambda a: a[0], vdata)
             edata = jax.tree.map(lambda a: a[0], edata)
             act, prio = act[0], prio[0]
-            struct = LocalStruct(plan_b["nbrs"], plan_b["nbr_mask"],
-                                 plan_b["edge_ids"], plan_b["is_src"],
-                                 plan_b["degree"], R)
+            struct = plan.local_struct(plan_b)
             state = (vdata, edata, act, prio, globals_, jnp.int32(0),
                      jnp.int32(0),
                      jnp.zeros((R,), jnp.int32),           # vertex versions

@@ -47,7 +47,7 @@ import numpy as np
 from repro.core.graph import DataGraph
 from repro.core.sync import SyncOp
 from repro.core.update import UpdateFn, gather_scopes, scatter_result
-from repro.kernels.ell_spmv import ell_fold, ell_spmv
+from repro.kernels.ell_spmv import ell_fold, ell_spmv_bucketed
 from repro.kernels.ops import default_interpret
 
 PyTree = Any
@@ -146,7 +146,7 @@ def consume_and_reschedule(active, priority, ids, sel, nbr_ids, nbr_mask,
 NO_CLAIM = jnp.iinfo(jnp.int32).max   # "nobody claims this row"
 
 
-def scope_claims(struct, ids, sel, claim_ids=None):
+def scope_claims(struct, ids, sel, claim_ids=None, rows=None):
     """Deterministic Chandy–Misra-style lock acquisition as one scatter.
 
     Every candidate vertex ``ids[p]`` (masked by ``sel``) *claims* its
@@ -156,20 +156,22 @@ def scope_claims(struct, ids, sel, claim_ids=None):
     the total order (and therefore the winner set) is partition
     independent.  Padded/unselected slots are routed to the OOB row
     (``n_rows``) exactly like the task-set algebra, so ``mode="drop"``
-    scatters are exact.
+    scatters are exact.  ``rows`` is the candidates' materialized
+    adjacency (``struct.struct_rows(ids)``); pass it in to share one
+    bucketed-row gather across the claim pass.
 
     Returns ``claim [n_rows] int32``: the minimum claim id over all
     candidates whose scope contains the row, ``NO_CLAIM`` where
     unclaimed.
     """
-    n_rows = struct.nbrs.shape[0]
+    n_rows = struct.n_rows
     cid = ids.astype(jnp.int32) if claim_ids is None else claim_ids
     claim = jnp.full((n_rows,), NO_CLAIM, jnp.int32)
     safe_self = jnp.where(sel, ids, n_rows)
     claim = claim.at[safe_self].min(cid, mode="drop")
-    nbrs = struct.nbrs[ids]                              # [P, D]
-    nmask = struct.nbr_mask[ids] & sel[:, None]
-    safe_n = jnp.where(nmask, nbrs, n_rows)
+    rows = struct.struct_rows(ids) if rows is None else rows
+    nmask = rows.nbr_mask & sel[:, None]
+    safe_n = jnp.where(nmask, rows.nbrs, n_rows)
     cvals = jnp.where(nmask, cid[:, None], NO_CLAIM)
     return claim.at[safe_n.reshape(-1)].min(cvals.reshape(-1), mode="drop")
 
@@ -180,13 +182,13 @@ def self_claims(struct, ids, sel, claim_ids=None):
     not in any pending window" — the read-lock-compatible claim array
     for the edge-consistency winner rule (``adjacent_claim_winners``).
     """
-    n_rows = struct.nbrs.shape[0]
+    n_rows = struct.n_rows
     cid = ids.astype(jnp.int32) if claim_ids is None else claim_ids
     claim = jnp.full((n_rows,), NO_CLAIM, jnp.int32)
     return claim.at[jnp.where(sel, ids, n_rows)].min(cid, mode="drop")
 
 
-def claim_winners(struct, ids, sel, claim, claim_ids=None):
+def claim_winners(struct, ids, sel, claim, claim_ids=None, rows=None):
     """Full-consistency grant: a candidate enters the executing batch
     iff it holds the min-id claim over *every* row of its scope (self +
     real neighbor slots) in a ``scope_claims`` array.
@@ -201,13 +203,14 @@ def claim_winners(struct, ids, sel, claim, claim_ids=None):
     """
     cid = ids.astype(jnp.int32) if claim_ids is None else claim_ids
     own = claim[ids] == cid
-    nbrs = struct.nbrs[ids]
-    nb_ok = jnp.where(struct.nbr_mask[ids],
-                      claim[nbrs] == cid[:, None], True).all(axis=-1)
+    rows = struct.struct_rows(ids) if rows is None else rows
+    nb_ok = jnp.where(rows.nbr_mask,
+                      claim[rows.nbrs] == cid[:, None], True).all(axis=-1)
     return sel & own & nb_ok
 
 
-def adjacent_claim_winners(struct, ids, sel, claim, claim_ids=None):
+def adjacent_claim_winners(struct, ids, sel, claim, claim_ids=None,
+                           rows=None):
     """Edge/vertex-consistency grant over a ``self_claims`` array: a
     candidate wins iff its id is strictly minimal among its *candidate
     neighbors* (non-candidates read as ``NO_CLAIM`` = +inf).
@@ -220,9 +223,9 @@ def adjacent_claim_winners(struct, ids, sel, claim, claim_ids=None):
     """
     cid = ids.astype(jnp.int32) if claim_ids is None else claim_ids
     own = claim[ids] == cid
-    nbrs = struct.nbrs[ids]
-    nb_ok = jnp.where(struct.nbr_mask[ids],
-                      claim[nbrs] > cid[:, None], True).all(axis=-1)
+    rows = struct.struct_rows(ids) if rows is None else rows
+    nb_ok = jnp.where(rows.nbr_mask,
+                      claim[rows.nbrs] > cid[:, None], True).all(axis=-1)
     return sel & own & nb_ok
 
 
@@ -230,53 +233,116 @@ def adjacent_claim_winners(struct, ids, sel, claim, claim_ids=None):
 # Update dispatch (dense scopes or the Pallas aggregator fast path)
 # ----------------------------------------------------------------------
 
+def route_batch_to_buckets(ell, ids, sel, w, vals=None):
+    """Scatter batch-row slot arrays onto their bucketed rows.
+
+    ``w [B, max_deg]`` (pre-masked weights) — and optionally
+    ``vals [B, max_deg, F]`` — are routed to per-bucket
+    ``[Nv_b, W_b(, F)]`` buffers by the same OOB-sentinel scatter as
+    ``SlicedEll.row_activation``; rows outside the batch stay zero
+    (and are gated off by the row mask anyway).  Both aggregator
+    dispatch paths build their launch inputs this way, so weight
+    evaluation happens once, on the batch scope, at batch cost —
+    never per graph row.
+    """
+    pos = jnp.where(sel, ell.inv_perm[ids], ell.total_rows)
+    w_blocks, v_blocks = [], []
+    for b in range(ell.n_buckets):
+        s, e, wb = ell.starts[b], ell.starts[b + 1], ell.widths[b]
+        rb = e - s
+        in_b = sel & (pos >= s) & (pos < e)
+        loc = jnp.where(in_b, pos - s, rb)         # OOB sentinel row
+        w_blocks.append(jnp.zeros((rb + 1, wb), jnp.float32).at[loc].set(
+            w[:, :wb], mode="drop")[:rb])
+        if vals is not None:
+            f = vals.shape[-1]
+            v_blocks.append(
+                jnp.zeros((rb + 1, wb, f), jnp.float32).at[loc].set(
+                    vals[:, :wb], mode="drop")[:rb])
+    return w_blocks, v_blocks
+
+
+def bucketed_dense_fold(ell, ids, sel, w, vals, interpret: bool):
+    """Reduce a dense batch scope through per-bucket kernel folds.
+
+    The dense fallback's reduction must stay bit-identical to the
+    bucketed fast path, and floating multiply-add chains are only
+    reproducible when compiled at the *same shapes*: whether the
+    backend contracts ``acc + w*x`` into an FMA can vary with launch
+    width and row count, so folding the batch at ``[B, max_deg]`` while
+    the fast path runs ``[Nv_b, W_b]`` launches drifts by ulps.  The
+    fallback therefore routes the batch's (pre-masked) weights and
+    gathered values onto their bucketed rows and reduces each bucket
+    with ``ell_fold`` at exactly the fast path's ``[Nv_b, W_b]`` shape,
+    with the same dynamic row gate (DESIGN.md §7).
+    """
+    row_masks = ell.bucket_slices(ell.row_activation(ids, sel))
+    w_blocks, v_blocks = route_batch_to_buckets(ell, ids, sel, w, vals)
+    ys = [ell_fold(wbuf, vbuf, row_mask=rm, interpret=interpret)
+          for wbuf, vbuf, rm in zip(w_blocks, v_blocks, row_masks)]
+    y_rows = jnp.concatenate(ys, axis=0)
+    return jnp.where(sel[:, None], y_rows[ell.inv_perm[ids]], 0.0)
+
+
 def dispatch_update(struct, update_fn: UpdateFn, vertex_data, edge_data,
                     ids, sel, globals_, *, use_kernel: bool,
-                    interpret: bool):
+                    interpret: bool, rows=None):
     """Materialize scopes for ``ids`` and run the update function.
 
     If the update declares a ``NeighborAggregator`` and the kernel path
     is enabled, the dense ``[B, D, F]`` neighbor-data gather is skipped:
-    a lite scope (no ``nbr_data``) is materialized and the gather+combine
-    runs through the ``ell_spmv`` Pallas kernel with per-slot edge
-    weights and the active-row mask ``sel``.  With the kernel path
-    disabled, the dense scope is reduced through ``ell_fold`` — the same
-    kernel arithmetic with the *same* ``interpret`` setting — which is
-    what makes the two paths bit-identical (DESIGN.md §4).
+    a lite scope (no ``nbr_data``) is materialized and the aggregation
+    runs through ``ell_spmv_bucketed`` — one width-specialized Pallas
+    launch per degree bucket over the bucket's own rows, with the batch
+    routed onto bucket rows by the OOB-sentinel scatter
+    (``SlicedEll.row_activation``).  Per-row compute is therefore the
+    bucket width, not the global ``max_deg``.  With the kernel path
+    disabled, the dense ``[B, D, F]`` scope *is* materialized, and its
+    reduction runs through ``bucketed_dense_fold`` — the same kernel
+    accumulation at the same per-bucket shapes — which is what keeps
+    the two paths bit-identical (DESIGN.md §4, §7).
     """
     agg = update_fn.aggregator
     if agg is None:
-        scope = gather_scopes(struct, vertex_data, edge_data, ids, globals_)
+        scope = gather_scopes(struct, vertex_data, edge_data, ids, globals_,
+                              rows=rows)
         return scope, update_fn(scope)
     if not use_kernel:
-        scope = gather_scopes(struct, vertex_data, edge_data, ids, globals_)
+        scope = gather_scopes(struct, vertex_data, edge_data, ids, globals_,
+                              rows=rows)
         w = jnp.where(scope.nbr_mask, agg.weight(scope),
                       0.0).astype(jnp.float32)
         vals = agg.feature(scope.nbr_data).astype(jnp.float32)
-        y = ell_fold(w, vals, interpret=interpret)
+        y = bucketed_dense_fold(struct.ell, ids, sel, w, vals, interpret)
         return scope, agg.combine(scope, y)
     scope = gather_scopes(struct, vertex_data, edge_data, ids, globals_,
-                          with_nbr_data=False)
-    w = jnp.where(scope.nbr_mask, agg.weight(scope), 0.0).astype(jnp.float32)
+                          with_nbr_data=False, rows=rows)
+    ell = struct.ell
     x = agg.feature(vertex_data).astype(jnp.float32)
-    y = ell_spmv(scope.nbr_ids, w, x, row_mask=sel, interpret=interpret)
+    w = jnp.where(scope.nbr_mask, agg.weight(scope), 0.0).astype(jnp.float32)
+    w_blocks, _ = route_batch_to_buckets(ell, ids, sel, w)
+    row_masks = ell.bucket_slices(ell.row_activation(ids, sel))
+    y_rows = ell_spmv_bucketed(ell.nbrs, w_blocks, x, row_masks=row_masks,
+                               interpret=interpret)
+    y = jnp.where(sel[:, None], y_rows[ell.inv_perm[ids]], 0.0)
     return scope, agg.combine(scope, y)
 
 
 def apply_batch(struct, update_fn: UpdateFn, carry, ids, valid, globals_,
                 *, sentinel: int, nbr_stamp=None, use_kernel: bool = True,
-                interpret: bool = False):
+                interpret: bool = False, rows=None):
     """Execute one conflict-free batch: the body every engine shares.
 
     ``carry`` is ``(vertex_data, edge_data, active, priority, n_updates)``;
     ``valid`` masks padded/foreign batch slots; tasks actually executed
-    are ``valid & active[ids]``.
+    are ``valid & active[ids]``.  ``rows`` optionally shares the batch's
+    materialized adjacency with a preceding claim pass.
     """
     vdata, edata, active, priority, n_upd = carry
     sel = valid & active[ids]
     scope, res = dispatch_update(
         struct, update_fn, vdata, edata, ids, sel, globals_,
-        use_kernel=use_kernel, interpret=interpret)
+        use_kernel=use_kernel, interpret=interpret, rows=rows)
     vdata, edata = scatter_result(struct, vdata, edata, ids, sel, scope, res)
     active, priority = consume_and_reschedule(
         active, priority, ids, sel, scope.nbr_ids, scope.nbr_mask, res,

@@ -3,10 +3,21 @@
 The paper's data graph G = (V, E, D) stores mutable user data on vertices
 and (optionally directed) edges while the *structure* is static.  That
 static-structure guarantee is exactly what ``jit`` wants: we freeze the
-adjacency into padded ELL form (``[Nv, max_deg]``) once, and all engine
-iterations are pure array programs over it.
+adjacency once, and all engine iterations are pure array programs over it.
 
-Conventions
+Storage layout (DESIGN.md §7): the adjacency is **degree-bucketed
+sliced ELL**.  A single padded ``[Nv, max_deg]`` block — the original
+layout — lets one hub vertex inflate every row to ``max_deg`` slots,
+which on the paper's power-law workloads (Netflix ALS, NER CoEM, §5) is
+the scaling limiter Distributed GraphLab (arXiv:1204.6078) calls out.
+Instead, vertices are permuted into power-of-two width buckets
+(2, 4, ..., ``max_deg``); each bucket stores its own padded block
+``[Nv_b, W_b]``, so total storage is ``sum_b Nv_b * W_b`` — within 2x of
+the exact CSR size — and kernels unroll ``W_b`` slots instead of
+``max_deg``.  The permutation (and its inverse) lives on the graph;
+everything above ``DataGraph.from_edges`` is unaware of the layout.
+
+Conventions (per bucket block, and in any padded view of it)
 -----------
 * ``nbrs[v, j]``      -- vertex id of the j-th neighbor of v (0 if padded)
 * ``nbr_mask[v, j]``  -- True for real neighbor slots
@@ -19,13 +30,18 @@ Conventions
                          edge data may carry separate fields per direction
                          and the update function picks using ``is_src``.
 
+Slot *order* within a row is identical across layouts (edge-insertion
+order), which is what keeps the bucketed kernel path bit-identical to
+the dense fallback: trailing zero-weight pad slots are exact no-ops in
+the shared kernel accumulation (DESIGN.md §7).
+
 Vertex data and edge data are pytrees of arrays with leading dim ``Nv``
 resp. ``n_edges + 1`` (one pad row).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any
+from typing import Any, NamedTuple, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -43,6 +59,281 @@ def _tree_pad_rows(tree: PyTree, n_rows: int) -> PyTree:
     return jax.tree.map(pad, tree)
 
 
+class EllRows(NamedTuple):
+    """A batch of adjacency rows materialized at full width ``[B, Dmax]``."""
+    nbrs: jax.Array
+    nbr_mask: jax.Array
+    edge_ids: jax.Array
+    is_src: jax.Array
+
+
+# ----------------------------------------------------------------------
+# Sliced ELL: degree-bucketed adjacency storage
+# ----------------------------------------------------------------------
+
+@dataclasses.dataclass
+class SlicedEll:
+    """Degree-bucketed adjacency: one padded block per width bucket.
+
+    Rows (vertices locally, shard rows in a ``ShardPlan``) are permuted
+    so that bucket ``b`` holds the contiguous position range
+    ``[starts[b], starts[b+1])`` with block width ``widths[b]``.
+    ``perm[p]`` is the row id stored at bucketed position ``p``
+    (``n_rows`` on bucket padding positions); ``inv_perm[r]`` is the
+    bucketed position of row ``r`` (every real row is in exactly one
+    bucket).  Neighbor values in the blocks are *row ids* in the
+    original addressing, so gathers from ``[n_rows, ...]`` data arrays
+    need no translation.
+    """
+
+    # --- static layout ---
+    widths: tuple[int, ...]        # ascending bucket widths
+    starts: tuple[int, ...]        # len n_buckets+1 position offsets
+    n_rows: int                    # addressable rows (Nv or R)
+    max_deg: int                   # widths[-1]
+    pad_edge: int                  # edge id stored in padded slots
+    # --- per-bucket device blocks ---
+    nbrs: tuple[jax.Array, ...]        # [Nv_b, W_b] int32
+    nbr_mask: tuple[jax.Array, ...]    # [Nv_b, W_b] bool
+    edge_ids: tuple[jax.Array, ...]    # [Nv_b, W_b] int32
+    is_src: tuple[jax.Array, ...]      # [Nv_b, W_b] bool
+    # --- the permutation ---
+    perm: jax.Array                # [total_rows] int32 (pad -> n_rows)
+    inv_perm: jax.Array            # [n_rows] int32
+
+    # ------------------------------------------------------------------
+    @property
+    def n_buckets(self) -> int:
+        return len(self.widths)
+
+    @property
+    def total_rows(self) -> int:
+        return self.starts[-1]
+
+    @property
+    def padded_slots(self) -> int:
+        """Stored (= kernel-computed) neighbor slots, padding included."""
+        return sum((self.starts[b + 1] - self.starts[b]) * self.widths[b]
+                   for b in range(self.n_buckets))
+
+    def bucket_slices(self, arr: jax.Array) -> tuple[jax.Array, ...]:
+        """Split a ``[total_rows, ...]`` array into per-bucket slices."""
+        return tuple(arr[self.starts[b]: self.starts[b + 1]]
+                     for b in range(self.n_buckets))
+
+    # ------------------------------------------------------------------
+    def rows(self, ids: jax.Array) -> EllRows:
+        """Materialize full-width ``[B, max_deg]`` adjacency rows.
+
+        The escape from the bucketed layout for everything that is
+        per-*batch* rather than per-graph (scope gathers, claim passes,
+        edge scatters): one gather per bucket, selected per row by
+        bucket membership.  Columns past a row's bucket width read as
+        padding (mask False, edge id ``pad_edge``).
+        """
+        pos = self.inv_perm[ids]                       # [B]
+        d = self.max_deg
+        out_n = jnp.zeros(ids.shape + (d,), jnp.int32)
+        out_m = jnp.zeros(ids.shape + (d,), bool)
+        out_e = jnp.full(ids.shape + (d,), self.pad_edge, jnp.int32)
+        out_s = jnp.zeros(ids.shape + (d,), bool)
+        for b in range(self.n_buckets):
+            s, e, w = self.starts[b], self.starts[b + 1], self.widths[b]
+            in_b = (pos >= s) & (pos < e)
+            loc = jnp.where(in_b, pos - s, 0)
+            sel = in_b[..., None]
+            pad = [(0, 0)] * (loc.ndim) + [(0, d - w)]
+            out_n = jnp.where(sel, jnp.pad(self.nbrs[b][loc], pad), out_n)
+            out_m = jnp.where(sel, jnp.pad(self.nbr_mask[b][loc], pad), out_m)
+            out_e = jnp.where(sel, jnp.pad(self.edge_ids[b][loc], pad,
+                                           constant_values=self.pad_edge),
+                              out_e)
+            out_s = jnp.where(sel, jnp.pad(self.is_src[b][loc], pad), out_s)
+        return EllRows(out_n, out_m, out_e, out_s)
+
+    def row_activation(self, ids: jax.Array, sel: jax.Array) -> jax.Array:
+        """Route batch slots to their bucketed rows: ``[total_rows]`` bool.
+
+        The OOB-sentinel scatter of the task-set algebra: unselected /
+        padded batch slots go to the out-of-bounds position so
+        ``mode="drop"`` makes the scatter exact even though padded slots
+        alias row 0.
+        """
+        pos = jnp.where(sel, self.inv_perm[ids], self.total_rows)
+        act = jnp.zeros((self.total_rows,), bool)
+        return act.at[pos].set(True, mode="drop")
+
+    def to_padded(self) -> EllRows:
+        """The monolithic ``[n_rows, max_deg]`` view — the escape hatch
+        for the sequential oracle, property tests and benchmarks."""
+        return self.rows(jnp.arange(self.n_rows, dtype=jnp.int32))
+
+
+jax.tree_util.register_dataclass(
+    SlicedEll,
+    data_fields=["nbrs", "nbr_mask", "edge_ids", "is_src", "perm",
+                 "inv_perm"],
+    meta_fields=["widths", "starts", "n_rows", "max_deg", "pad_edge"])
+
+
+def default_bucket_widths(max_deg: int) -> tuple[int, ...]:
+    """Power-of-two widths 2, 4, ... capped by (and ending at) max_deg."""
+    out, w = [], 2
+    while w < max_deg:
+        out.append(w)
+        w *= 2
+    out.append(max(max_deg, 1))
+    return tuple(out)
+
+
+def bucket_index(widths, slot_cnt: np.ndarray) -> np.ndarray:
+    """The bucket of each row: the smallest width covering its slot
+    count (zero-slot rows to the first bucket).  The single source of
+    the assignment rule — ``build_sliced_ell`` and ``ShardPlan.build``
+    must agree on it or forced bucket sizes desynchronize."""
+    return np.searchsorted(np.asarray(widths), np.maximum(slot_cnt, 1))
+
+
+def build_sliced_ell(nbrs: np.ndarray, nbr_mask: np.ndarray,
+                     edge_ids: np.ndarray, is_src: np.ndarray,
+                     pad_edge: int,
+                     widths: Sequence[int] | None = None,
+                     bucket_sizes: Sequence[int] | None = None) -> SlicedEll:
+    """Bucket host-side padded ELL arrays into a ``SlicedEll``.
+
+    Each row goes to the smallest bucket whose width covers its real
+    slot count (zero-slot rows to the first bucket); within a bucket,
+    rows keep ascending id order.  ``bucket_sizes`` forces per-bucket
+    row counts (padding with empty rows) — the ``ShardPlan`` uses this
+    to keep bucket shapes uniform across shards; without it, empty
+    buckets are dropped.
+    """
+    n_rows, d = nbrs.shape
+    slot_cnt = nbr_mask.sum(axis=1)
+    widths = tuple(widths) if widths is not None \
+        else default_bucket_widths(int(d))
+    assert widths[-1] >= (int(slot_cnt.max()) if n_rows else 0)
+    bidx = bucket_index(widths, slot_cnt)
+    groups = [np.nonzero(bidx == b)[0] for b in range(len(widths))]
+
+    if bucket_sizes is None:
+        keep = [b for b in range(len(widths)) if len(groups[b])]
+        keep = keep or [0]
+        widths = tuple(widths[b] for b in keep)
+        groups = [groups[b] for b in keep]
+        sizes = [len(g) for g in groups]
+    else:
+        sizes = [int(s) for s in bucket_sizes]
+        assert len(sizes) == len(widths)
+        assert all(s >= len(g) for s, g in zip(sizes, groups))
+
+    starts = (0, *np.cumsum(sizes).tolist())
+    total = starts[-1]
+    perm = np.full(total, n_rows, dtype=np.int32)
+    inv_perm = np.zeros(n_rows, dtype=np.int32)
+    bn, bm, be, bs = [], [], [], []
+    for b, (g, w) in enumerate(zip(groups, widths)):
+        nb = np.zeros((sizes[b], w), np.int32)
+        mk = np.zeros((sizes[b], w), bool)
+        ei = np.full((sizes[b], w), pad_edge, np.int32)
+        sr = np.zeros((sizes[b], w), bool)
+        if len(g):
+            nb[: len(g)] = nbrs[g, :w]
+            mk[: len(g)] = nbr_mask[g, :w]
+            ei[: len(g)] = edge_ids[g, :w]
+            sr[: len(g)] = is_src[g, :w]
+            perm[starts[b]: starts[b] + len(g)] = g
+            inv_perm[g] = np.arange(starts[b], starts[b] + len(g))
+        bn.append(jnp.asarray(nb))
+        bm.append(jnp.asarray(mk))
+        be.append(jnp.asarray(ei))
+        bs.append(jnp.asarray(sr))
+    return SlicedEll(
+        widths=widths, starts=starts, n_rows=n_rows,
+        max_deg=int(d), pad_edge=int(pad_edge),
+        nbrs=tuple(bn), nbr_mask=tuple(bm), edge_ids=tuple(be),
+        is_src=tuple(bs),
+        perm=jnp.asarray(perm), inv_perm=jnp.asarray(inv_perm))
+
+
+# ----------------------------------------------------------------------
+# Padded-ELL builders (host side)
+# ----------------------------------------------------------------------
+
+def _build_ell_loop(n_vertices: int, edges: np.ndarray, md: int):
+    """Reference per-edge-loop builder (the original ``from_edges``
+    body).  Kept as the oracle for the vectorized builder — asserted
+    identical in tests and raced in ``benchmarks/graph_storage.py``."""
+    ne = len(edges)
+    nbrs = np.zeros((n_vertices, md), dtype=np.int32)
+    mask = np.zeros((n_vertices, md), dtype=bool)
+    eids = np.full((n_vertices, md), ne, dtype=np.int32)  # pad edge
+    is_src = np.zeros((n_vertices, md), dtype=bool)
+    cursor = np.zeros(n_vertices, dtype=np.int64)
+    us, vs = edges[:, 0], edges[:, 1]
+    for e in range(ne):
+        u, v = us[e], vs[e]
+        cu, cv = cursor[u], cursor[v]
+        nbrs[u, cu], mask[u, cu], eids[u, cu], is_src[u, cu] = v, True, e, True
+        cursor[u] = cu + 1
+        nbrs[v, cv], mask[v, cv], eids[v, cv] = u, True, e
+        cursor[v] = cv + 1
+    return nbrs, mask, eids, is_src
+
+
+def _build_ell_vectorized(n_vertices: int, edges: np.ndarray, md: int):
+    """Vectorized ELL build: lexsort/cumsum slot assignment, no Python
+    per-edge loop.  Bit-identical to ``_build_ell_loop`` including its
+    self-loop semantics (both endpoint writes share one slot; the
+    later, non-src write wins; the cursor advances once).
+    """
+    ne = len(edges)
+    nbrs = np.zeros((n_vertices, md), dtype=np.int32)
+    mask = np.zeros((n_vertices, md), dtype=bool)
+    eids = np.full((n_vertices, md), ne, dtype=np.int32)
+    is_src = np.zeros((n_vertices, md), dtype=bool)
+    if ne == 0:
+        return nbrs, mask, eids, is_src
+
+    flat_v = edges.reshape(-1)                    # u0, v0, u1, v1, ...
+    # Slot of occurrence k = #prior occurrences of that vertex, counting
+    # a self-loop's two occurrences once (the loop reads both cursors
+    # before either write).  Rank within equal-vertex groups via a
+    # stable sort, then subtract the running count of v-side self-loop
+    # occurrences (inclusive: a self-loop's v side reuses the u slot).
+    vside_selfloop = np.zeros(2 * ne, dtype=np.int64)
+    vside_selfloop[1::2] = edges[:, 0] == edges[:, 1]
+    order = np.argsort(flat_v, kind="stable")
+    sv = flat_v[order]
+    boundary = np.ones(2 * ne, dtype=bool)
+    boundary[1:] = sv[1:] != sv[:-1]
+    group_id = np.cumsum(boundary) - 1
+    group_start = np.nonzero(boundary)[0]
+    rank_sorted = np.arange(2 * ne) - group_start[group_id]
+    cum = np.cumsum(vside_selfloop[order])
+    before_group = np.concatenate([[0], cum])[group_start]
+    slot_sorted = rank_sorted - (cum - before_group[group_id])
+    slot = np.empty(2 * ne, dtype=np.int64)
+    slot[order] = slot_sorted
+
+    nbr_flat = edges[:, ::-1].reshape(-1)         # v0, u0, v1, u1, ...
+    eid_flat = np.repeat(np.arange(ne, dtype=np.int64), 2)
+    src_flat = np.tile(np.asarray([True, False]), ne)
+    # duplicate (vertex, slot) pairs only arise from self-loops, where
+    # both occurrences write identical nbrs/mask/eids values; is_src is
+    # the one field where the sides differ, so force the loop builder's
+    # outcome (the v-side write never touches is_src, leaving the
+    # u-side True in place) explicitly instead of relying on
+    # fancy-assignment ordering
+    nbrs[flat_v, slot] = nbr_flat
+    mask[flat_v, slot] = True
+    eids[flat_v, slot] = eid_flat
+    src_flat[1::2] = edges[:, 0] == edges[:, 1]
+    is_src[flat_v, slot] = src_flat
+    return nbrs, mask, eids, is_src
+
+
+# ----------------------------------------------------------------------
 @dataclasses.dataclass
 class DataGraph:
     """Static graph structure + mutable vertex/edge data (device arrays)."""
@@ -50,11 +341,8 @@ class DataGraph:
     n_vertices: int
     n_edges: int
     max_deg: int
-    # --- static structure (int32 / bool device arrays) ---
-    nbrs: jax.Array            # [Nv, max_deg] int32
-    nbr_mask: jax.Array        # [Nv, max_deg] bool
-    edge_ids: jax.Array        # [Nv, max_deg] int32 (pad slots -> n_edges)
-    is_src: jax.Array          # [Nv, max_deg] bool
+    # --- static structure: degree-bucketed sliced ELL ---
+    ell: SlicedEll
     degree: jax.Array          # [Nv] int32
     # --- mutable user data ---
     vertex_data: PyTree        # leaves [Nv, ...]
@@ -73,12 +361,15 @@ class DataGraph:
         vertex_data: PyTree,
         edge_data: PyTree = None,
         max_deg: int | None = None,
+        bucket_widths: Sequence[int] | None = None,
     ) -> "DataGraph":
-        """Build the padded ELL structure from an undirected edge list.
+        """Build the sliced-ELL structure from an undirected edge list.
 
         ``edges``: [Ne, 2] integer array, each row an undirected edge
         {u, v} (self loops and duplicates are the caller's business;
         both are handled but duplicates count twice toward degree).
+        ``bucket_widths`` overrides the power-of-two degree buckets
+        (mostly for tests; the default is ``default_bucket_widths``).
         """
         edges = np.asarray(edges, dtype=np.int64)
         if edges.size == 0:
@@ -94,34 +385,36 @@ class DataGraph:
             md = max_deg
         md = max(md, 1)
 
-        nbrs = np.zeros((n_vertices, md), dtype=np.int32)
-        mask = np.zeros((n_vertices, md), dtype=bool)
-        eids = np.full((n_vertices, md), ne, dtype=np.int32)  # pad edge
-        is_src = np.zeros((n_vertices, md), dtype=bool)
-        cursor = np.zeros(n_vertices, dtype=np.int64)
-        us, vs = edges[:, 0], edges[:, 1]
-        for e in range(ne):
-            u, v = us[e], vs[e]
-            cu, cv = cursor[u], cursor[v]
-            nbrs[u, cu], mask[u, cu], eids[u, cu], is_src[u, cu] = v, True, e, True
-            cursor[u] = cu + 1
-            nbrs[v, cv], mask[v, cv], eids[v, cv] = u, True, e
-            cursor[v] = cv + 1
+        nbrs, mask, eids, is_src = _build_ell_vectorized(
+            n_vertices, edges, md)
+        ell = build_sliced_ell(nbrs, mask, eids, is_src, pad_edge=ne,
+                               widths=bucket_widths)
 
         edge_data = {} if edge_data is None else edge_data
         return DataGraph(
             n_vertices=n_vertices,
             n_edges=ne,
             max_deg=md,
-            nbrs=jnp.asarray(nbrs),
-            nbr_mask=jnp.asarray(mask),
-            edge_ids=jnp.asarray(eids),
-            is_src=jnp.asarray(is_src),
+            ell=ell,
             degree=jnp.asarray(deg, dtype=jnp.int32),
             vertex_data=jax.tree.map(jnp.asarray, vertex_data),
             edge_data=_tree_pad_rows(edge_data, 1),
             edges_np=edges,
         )
+
+    # -- structure access ----------------------------------------------
+    @property
+    def n_rows(self) -> int:
+        """Row-id space / scatter sentinel (mirrors ``LocalStruct``)."""
+        return self.n_vertices
+
+    def struct_rows(self, ids: jax.Array) -> EllRows:
+        """Full-width adjacency rows for a batch of vertex ids."""
+        return self.ell.rows(ids)
+
+    def to_padded(self) -> EllRows:
+        """Monolithic ``[Nv, max_deg]`` view (oracle / test escape hatch)."""
+        return self.ell.to_padded()
 
     # ------------------------------------------------------------------
     def with_colors(self, colors: np.ndarray) -> "DataGraph":
@@ -176,3 +469,25 @@ def grid_edges_3d(nx: int, ny: int, nz: int) -> tuple[int, np.ndarray]:
                 if z + 1 < nz:
                     edges.append((vid(x, y, z), vid(x, y, z + 1)))
     return nx * ny * nz, np.asarray(edges, dtype=np.int64)
+
+
+def zipf_edges(n_vertices: int, alpha: float = 2.0,
+               max_deg: int | None = None, seed: int = 0) -> np.ndarray:
+    """Power-law degree graph via the configuration model.
+
+    Samples Zipf(``alpha``) degrees (optionally clipped to ``max_deg``),
+    pairs the half-edge stubs uniformly at random, then drops self loops
+    and duplicate edges — the natural-graph skew of the paper's Netflix
+    / NER workloads, and the regime the sliced-ELL layout targets.
+    """
+    rng = np.random.default_rng(seed)
+    deg = rng.zipf(alpha, n_vertices)
+    if max_deg is not None:
+        deg = np.minimum(deg, max_deg)
+    stubs = np.repeat(np.arange(n_vertices, dtype=np.int64), deg)
+    rng.shuffle(stubs)
+    pairs = stubs[: 2 * (len(stubs) // 2)].reshape(-1, 2)
+    pairs = pairs[pairs[:, 0] != pairs[:, 1]]
+    lo = np.minimum(pairs[:, 0], pairs[:, 1])
+    hi = np.maximum(pairs[:, 0], pairs[:, 1])
+    return np.unique(np.stack([lo, hi], axis=1), axis=0)

@@ -49,6 +49,7 @@ class ScopeBatch:
     nbr_mask: jax.Array     # [B, D] bool
     nbr_data: PyTree        # [B, D, ...]   adjacent vertex data (R; R/W if FULL)
     edge_data: PyTree       # [B, D, ...]   adjacent edge data (R/W if EDGE/FULL)
+    e_ids: jax.Array        # [B, D] int32  slot edge ids (pad -> pad edge row)
     is_src: jax.Array       # [B, D] bool   True iff v is endpoint 0 of slot edge
     degree: jax.Array       # [B] int32
     globals: dict           # latest sync-op results, keyed by SyncOp.key
@@ -124,7 +125,11 @@ def weighted_slot_fold(w: jax.Array, vals: jax.Array,
     """sum_j w[:, j] * vals[:, j] — w [B, D] (pre-masked), vals [B, D, F].
 
     Runs through the ``ell_spmv`` kernel's accumulation (interpret mode
-    off-TPU) so the result is bit-identical to the aggregator fast path.
+    off-TPU).  Bitwise reproducibility holds between *same-shape*
+    launches only (DESIGN.md §7): an update calling this helper gets
+    identical bits on both engine dispatch paths because both call it
+    with the same batch shapes — it is NOT bit-comparable against the
+    fast path's per-bucket launches.
     """
     from repro.kernels.ell_spmv import ell_fold
     from repro.kernels.ops import default_interpret
@@ -179,17 +184,22 @@ def aggregator_update(feature, weight, combine,
 # ----------------------------------------------------------------------
 
 def gather_scopes(graph_struct, vertex_data, edge_data, v_ids, globals_,
-                  with_nbr_data: bool = True) -> ScopeBatch:
+                  with_nbr_data: bool = True, rows=None) -> ScopeBatch:
     """Materialize ScopeBatch for the vertex ids ``v_ids`` ([B] int32).
 
-    ``graph_struct`` is anything exposing nbrs / nbr_mask / edge_ids /
-    is_src / degree arrays (a DataGraph or a ShardedGraph local block).
-    ``with_nbr_data=False`` produces a *lite* scope (``nbr_data=None``)
-    for the aggregator fast path, skipping the [B, D, F] gather.
+    ``graph_struct`` is anything exposing ``struct_rows(ids)`` /
+    ``degree`` / ``n_rows`` (a DataGraph or a ShardPlan LocalStruct);
+    the sliced-ELL storage materializes the full-width adjacency rows
+    per *batch*, so the scope shape stays ``[B, max_deg]`` whatever the
+    bucketed layout underneath.  ``with_nbr_data=False`` produces a
+    *lite* scope (``nbr_data=None``) for the aggregator fast path,
+    skipping the [B, D, F] gather.  ``rows`` accepts the batch's
+    already-materialized adjacency (e.g. the locking engine's claim
+    pass gathered it) to share the bucketed-row gather.
     """
-    nbrs = graph_struct.nbrs[v_ids]            # [B, D]
-    mask = graph_struct.nbr_mask[v_ids]
-    eids = graph_struct.edge_ids[v_ids]
+    if rows is None:
+        rows = graph_struct.struct_rows(v_ids)
+    nbrs, eids = rows.nbrs, rows.edge_ids      # [B, D]
     take_v = lambda a: a[v_ids]
     take_n = lambda a: a[nbrs]
     take_e = lambda a: a[eids]
@@ -197,11 +207,12 @@ def gather_scopes(graph_struct, vertex_data, edge_data, v_ids, globals_,
         v_ids=v_ids,
         v_data=jax.tree.map(take_v, vertex_data),
         nbr_ids=nbrs,
-        nbr_mask=mask,
+        nbr_mask=rows.nbr_mask,
         nbr_data=(jax.tree.map(take_n, vertex_data)
                   if with_nbr_data else None),
         edge_data=jax.tree.map(take_e, edge_data),
-        is_src=graph_struct.is_src[v_ids],
+        e_ids=eids,
+        is_src=rows.is_src,
         degree=graph_struct.degree[v_ids],
         globals=globals_,
     )
@@ -223,7 +234,7 @@ def scatter_result(
     vertex_data = jax.tree.map(lambda d, n: put_v(d, n), vertex_data, result.v_data)
 
     if result.edge_data is not None:
-        eids = graph_struct.edge_ids[v_ids]                      # [B, D]
+        eids = scope.e_ids                                       # [B, D]
         emask = scope.nbr_mask & valid[:, None]                  # [B, D]
         # route masked-off writes to the pad edge row
         pad = edge_data and jax.tree.leaves(edge_data)[0].shape[0] - 1
@@ -237,7 +248,7 @@ def scatter_result(
     if result.nbr_data is not None:
         nbrs = scope.nbr_ids
         nmask = scope.nbr_mask & valid[:, None]
-        nv = graph_struct.nbrs.shape[0]
+        nv = graph_struct.n_rows
         safe_nbrs = jnp.where(nmask, nbrs, nv)  # drop OOB
         def put_n(dst, new):
             flat_ids = safe_nbrs.reshape(-1)

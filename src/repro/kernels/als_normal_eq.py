@@ -41,6 +41,29 @@ def _als_kernel(nbrs_ref, m_ref, r_ref, x_ref, a_ref, b_ref, *, max_deg: int):
     b_ref[...] = b
 
 
+def als_normal_eq_bucketed(nbrs_blocks, mask_blocks, ratings_blocks,
+                           x: jax.Array, interpret: bool = False):
+    """Sliced-ELL normal equations: one width-specialized launch per
+    degree bucket (mirrors ``ell_spmv_bucketed``).  Blocks are the
+    per-bucket ``[Nv_b, W_b]`` slices of neighbor ids / mask / per-slot
+    ratings; each bucket's static slot unroll is its own width, so the
+    accumulation work is the sliced slot count instead of
+    ``Nv * max_deg``.  Returns ``(A [sum Nv_b, d, d], b [sum Nv_b, d])``
+    in bucketed row order.
+    """
+    d = x.shape[1]
+    As, bs = [], []
+    for nb, mk, rt in zip(nbrs_blocks, mask_blocks, ratings_blocks):
+        if nb.shape[0] == 0:
+            As.append(jnp.zeros((0, d, d), x.dtype))
+            bs.append(jnp.zeros((0, d), x.dtype))
+            continue
+        a, b = als_normal_eq(nb, mk, rt, x, interpret=interpret)
+        As.append(a)
+        bs.append(b)
+    return jnp.concatenate(As, axis=0), jnp.concatenate(bs, axis=0)
+
+
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def als_normal_eq(nbrs: jax.Array, mask: jax.Array, ratings: jax.Array,
                   x: jax.Array, interpret: bool = False):

@@ -45,15 +45,34 @@ _TV = 128        # vertex rows per block
 _TF = 128        # feature columns per tile
 
 
-def _spmv_kernel(nbrs_ref, w_ref, rmask_ref, x_ref, y_ref, *, max_deg: int):
+def _spmv_kernel(nbrs_ref, w_ref, rmask_ref, x_ref, y_ref, *,
+                 max_deg: int, interpret: bool):
     nb = nbrs_ref[...]          # [TV, D] int32
     m = rmask_ref[...]          # [TV, 1] f32 row gate (1 active, 0 masked)
     w = w_ref[...] * m          # zero every slot of masked rows
     x = x_ref[...]              # [R, TF] full shard-local feature tile
     acc = jnp.zeros(y_ref.shape, jnp.float32)   # f32 accumulation
     for j in range(max_deg):    # static unroll over neighbor slots
+        wj = w[:, j][:, None]   # [TV, 1]
         xi = x[nb[:, j]]        # [TV, TF] dense row gather
-        acc = acc + (w[:, j][:, None] * xi).astype(jnp.float32)
+        prod = (wj * xi).astype(jnp.float32)
+        if interpret:
+            # Interpret mode inlines this body into the caller's XLA
+            # computation, where the backend may contract ``acc + w*x``
+            # into an FMA — skipping the product's rounding step —
+            # depending on how the surrounding graph fuses, i.e. on
+            # launch width and consumers.  Sliced-ELL parity needs every
+            # launch width to round identically (DESIGN.md §7), so pin
+            # the product behind a select: a select between mul and add
+            # blocks FMA contraction and is bitwise-exact.  The
+            # predicate must be runtime-derived or the compiler folds
+            # the select away (and the FMA returns); ``w * 0 <= 0``
+            # cannot be folded for runtime floats.  Finite weights —
+            # already the kernel's contract for pad slots — make it
+            # always true.  A compiled Mosaic kernel is an opaque unit
+            # with uniform per-slot codegen and skips this.
+            prod = jnp.where(wj * 0.0 <= 0.0, prod, 0.0)
+        acc = acc + prod
     y_ref[...] = acc.astype(y_ref.dtype)
 
 
@@ -64,7 +83,9 @@ def ell_spmv(nbrs: jax.Array, w: jax.Array, x: jax.Array,
     """y[v] = row_mask[v] * sum_j w[v, j] * x[nbrs[v, j]].
 
     nbrs:     [Nv, D] int32 (padded slots may point anywhere; w must be 0)
-    w:        [Nv, D] float
+    w:        [Nv, D] float — finite values only: in interpret mode the
+              FMA-blocking guard zeroes non-finite-weight slots instead
+              of propagating them (a compiled Mosaic kernel propagates)
     x:        [R, F]  float (gather source; R >= max(nbrs)+1)
     row_mask: [Nv] bool/float or None — rows with a falsy mask yield 0
               (the engines' active-task mask; None means all rows on)
@@ -87,7 +108,7 @@ def ell_spmv(nbrs: jax.Array, w: jax.Array, x: jax.Array,
 
     grid = (nv_pad // tv, f_pad // tf)
     y = pl.pallas_call(
-        functools.partial(_spmv_kernel, max_deg=d),
+        functools.partial(_spmv_kernel, max_deg=d, interpret=interpret),
         grid=grid,
         in_specs=[
             pl.BlockSpec((tv, d), lambda i, k: (i, 0)),
@@ -100,6 +121,40 @@ def ell_spmv(nbrs: jax.Array, w: jax.Array, x: jax.Array,
         interpret=interpret,
     )(nbrs_p, w_p, rm_p, x_p)
     return y[:nv, :f]
+
+
+def ell_spmv_bucketed(nbrs_blocks, w_blocks, x: jax.Array,
+                      row_masks=None, interpret: bool = False) -> jax.Array:
+    """Sliced-ELL SpMV: one width-specialized launch per degree bucket.
+
+    ``nbrs_blocks`` / ``w_blocks`` are per-bucket ``[Nv_b, W_b]`` arrays
+    (a ``SlicedEll``'s blocks); ``row_masks`` optionally gates each
+    bucket's rows (the engines' batch activation routed onto bucket rows
+    via the OOB-sentinel scatter).  Each bucket gets its own
+    ``pl.pallas_call`` whose static slot unroll is the bucket width
+    ``W_b`` instead of the global ``max_deg`` — total compute is the
+    sliced slot count ``sum_b Nv_b * W_b``, the whole point of the
+    layout (DESIGN.md §7).  Per-row accumulation order equals the
+    monolithic kernel's over the row's real slot prefix, and the
+    monolithic layout's extra trailing slots all carry weight 0.0, so
+    this computes the same *function* as a padded-width launch — to
+    float tolerance only, NOT bitwise: excess-precision/FMA decisions
+    vary with launch width.  Bitwise reproducibility holds between
+    computations compiled at the *same* per-bucket shapes, which is
+    how the executor pairs this entry with ``bucketed_dense_fold``
+    (DESIGN.md §7).
+
+    Returns ``y [sum_b Nv_b, F]`` in bucketed row order (concatenated
+    blocks); callers translate through the ``SlicedEll`` permutation.
+    """
+    ys = []
+    for b, (nb, w) in enumerate(zip(nbrs_blocks, w_blocks)):
+        rm = None if row_masks is None else row_masks[b]
+        if nb.shape[0] == 0:      # forced-size bucket empty on this shard
+            ys.append(jnp.zeros((0, x.shape[1]), x.dtype))
+            continue
+        ys.append(ell_spmv(nb, w, x, row_mask=rm, interpret=interpret))
+    return jnp.concatenate(ys, axis=0)
 
 
 def ell_fold(w: jax.Array, vals: jax.Array,

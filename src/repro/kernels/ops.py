@@ -12,7 +12,10 @@ import jax
 
 from repro.kernels import ref
 from repro.kernels.ell_spmv import ell_spmv as _ell_spmv_kernel
+from repro.kernels.ell_spmv import ell_spmv_bucketed as _ell_spmv_bucketed
 from repro.kernels.als_normal_eq import als_normal_eq as _als_kernel
+from repro.kernels.als_normal_eq import (
+    als_normal_eq_bucketed as _als_bucketed)
 from repro.kernels.window_attention import (
     decode_window_attention as _window_kernel)
 
@@ -31,10 +34,22 @@ def ell_spmv(nbrs, w, x, row_mask=None, use_pallas: bool = True):
     return _ell_spmv_kernel(nbrs, w, x, row_mask, interpret=_interpret())
 
 
+def ell_spmv_bucketed(nbrs_blocks, w_blocks, x, row_masks=None):
+    """Sliced-ELL SpMV: width-specialized launch per degree bucket."""
+    return _ell_spmv_bucketed(nbrs_blocks, w_blocks, x,
+                              row_masks=row_masks, interpret=_interpret())
+
+
 def als_normal_eq(nbrs, mask, ratings, x, use_pallas: bool = True):
     if not use_pallas:
         return ref.als_normal_eq_ref(nbrs, mask, ratings, x)
     return _als_kernel(nbrs, mask, ratings, x, interpret=_interpret())
+
+
+def als_normal_eq_bucketed(nbrs_blocks, mask_blocks, ratings_blocks, x):
+    """Sliced-ELL ALS accumulation: one launch per degree bucket."""
+    return _als_bucketed(nbrs_blocks, mask_blocks, ratings_blocks, x,
+                         interpret=_interpret())
 
 
 def decode_window_attention(q, k, v, kv_len, use_pallas: bool = True):

@@ -62,23 +62,88 @@ def test_bsp_kernel_path_bit_identical():
 
 
 def test_kernel_path_is_actually_dispatched(monkeypatch):
-    """use_kernel=True must route through ell_spmv (no silent fallback)."""
+    """use_kernel=True must route through the bucketed kernel entry
+    (no silent fallback to the dense scope path)."""
     calls = []
-    real = exec_mod.ell_spmv
+    real = exec_mod.ell_spmv_bucketed
 
     def counting(*args, **kwargs):
         calls.append(1)
         return real(*args, **kwargs)
 
-    monkeypatch.setattr(exec_mod, "ell_spmv", counting)
+    monkeypatch.setattr(exec_mod, "ell_spmv_bucketed", counting)
     g, upd = _pagerank_setup()
     ChromaticEngine(g, upd, use_kernel=True).run(num_supersteps=1)
     assert calls, "aggregator fast path was not dispatched"
     n_kernel_calls = len(calls)
     calls.clear()
     ChromaticEngine(g, upd, use_kernel=False).run(num_supersteps=1)
-    assert not calls, "use_kernel=False must not call the kernel"
+    assert not calls, "use_kernel=False must not call the fast path"
     assert n_kernel_calls >= 1
+
+
+def _zipf_pagerank_setup():
+    """Power-law degree graph: the skew regime the sliced-ELL layout
+    targets (hub vertex >> mean degree -> several active buckets)."""
+    from repro.core.graph import zipf_edges
+    edges = zipf_edges(150, alpha=2.0, max_deg=48, seed=9)
+    g = pagerank.make_graph(edges, 150)
+    assert g.ell.n_buckets >= 3          # the test must exercise buckets
+    return g, pagerank.make_update(1e-6)
+
+
+@pytest.mark.parametrize("mode", ["chromatic", "priority", "bsp", "locking"])
+def test_zipf_kernel_path_bit_identical(mode):
+    """Dense-vs-kernel bitwise parity on a Zipf(alpha~2) degree graph —
+    the acceptance invariant of the sliced-ELL refactor (DESIGN.md §7):
+    one compiled accumulation per bucket keeps every engine's two
+    dispatch paths bit-for-bit equal even with heavy degree skew."""
+    from repro.core import LockingEngine, bsp_engine
+    g, upd = _zipf_pagerank_setup()
+
+    def run(use_kernel):
+        if mode == "chromatic":
+            return ChromaticEngine(g, upd, use_kernel=use_kernel,
+                                   max_supersteps=200).run()
+        if mode == "priority":
+            return PriorityEngine(g, upd, use_kernel=use_kernel, k_select=16,
+                                  max_supersteps=8000).run()
+        if mode == "locking":
+            return LockingEngine(g, upd, use_kernel=use_kernel,
+                                 max_pending=16, max_supersteps=8000).run()
+        return bsp_engine(g, upd, use_kernel=use_kernel).run(num_supersteps=8)
+
+    st_k, st_d = run(True), run(False)
+    assert np.array_equal(np.asarray(st_k.vertex_data["rank"]),
+                          np.asarray(st_d.vertex_data["rank"]))
+    assert np.array_equal(np.asarray(st_k.active), np.asarray(st_d.active))
+    assert int(st_k.n_updates) == int(st_d.n_updates)
+
+
+def test_ell_spmv_bucketed_matches_monolithic():
+    """The width-specialized per-bucket launches compute the same
+    function as one padded-width launch (trailing slots carry weight
+    exactly 0).  Equality is to float tolerance, not bitwise: different
+    launch *widths* compile with different excess-precision decisions
+    on CPU, which is exactly why the engines' two dispatch paths both
+    reduce at the per-bucket shapes (DESIGN.md §7) — that
+    engine-level parity IS asserted bitwise, above."""
+    from repro.core.graph import zipf_edges
+    from repro.kernels.ell_spmv import ell_spmv_bucketed
+    edges = zipf_edges(200, alpha=2.0, max_deg=32, seed=4)
+    g = pagerank.make_graph(edges, 200)
+    ell, p = g.ell, g.to_padded()
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(200, 5)), jnp.float32)
+    w_full = jnp.where(p.nbr_mask, g.edge_data["w"][p.edge_ids],
+                       0.0).astype(jnp.float32)
+    w_blocks = [jnp.where(m, g.edge_data["w"][e], 0.0).astype(jnp.float32)
+                for m, e in zip(ell.nbr_mask, ell.edge_ids)]
+    y_mono = np.asarray(ell_spmv(p.nbrs, w_full, x, interpret=True))
+    y_b = np.asarray(ell_spmv_bucketed(ell.nbrs, w_blocks, x,
+                                       interpret=True))
+    np.testing.assert_allclose(y_b[np.asarray(ell.inv_perm)], y_mono,
+                               rtol=1e-6, atol=1e-7)
 
 
 def test_ell_spmv_row_mask_matches_ref():

@@ -8,7 +8,8 @@ from hypothesis import given, settings, strategies as st
 
 pytestmark = pytest.mark.slow      # hypothesis sweeps: own CI job
 
-from repro.core.graph import DataGraph, bipartite_edges, grid_edges_3d
+from repro.core.graph import (DataGraph, _build_ell_loop, bipartite_edges,
+                              grid_edges_3d)
 from conftest import random_graph
 
 
@@ -31,10 +32,11 @@ def test_ell_structure_roundtrip(g):
     dg = DataGraph.from_edges(nv, edges,
                               {"x": np.zeros(nv, np.float32)},
                               {"w": np.arange(len(edges), dtype=np.float32)})
-    nbrs = np.asarray(dg.nbrs)
-    mask = np.asarray(dg.nbr_mask)
-    eids = np.asarray(dg.edge_ids)
-    issrc = np.asarray(dg.is_src)
+    padded = dg.to_padded()       # flat view of the sliced-ELL buckets
+    nbrs = np.asarray(padded.nbrs)
+    mask = np.asarray(padded.nbr_mask)
+    eids = np.asarray(padded.edge_ids)
+    issrc = np.asarray(padded.is_src)
     seen = {}
     for v in range(nv):
         for j in range(dg.max_deg):
@@ -52,6 +54,24 @@ def test_ell_structure_roundtrip(g):
         assert sorted(srcs) == [False, True]   # exactly one src side
     # degrees consistent with mask
     np.testing.assert_array_equal(np.asarray(dg.degree), mask.sum(1))
+
+
+@given(graphs())
+@settings(max_examples=40, deadline=None)
+def test_sliced_ell_roundtrip_property(g):
+    """Property form of the storage refactor's contract: the bucketed
+    layout's ``to_padded()`` equals the original loop builder's padded
+    ELL output on arbitrary random graphs."""
+    nv, edges = g
+    if len(edges) == 0:
+        return
+    dg = DataGraph.from_edges(nv, edges, {"x": np.zeros(nv, np.float32)})
+    want = _build_ell_loop(nv, edges, dg.max_deg)
+    for a, b in zip(dg.to_padded(), want):
+        np.testing.assert_array_equal(np.asarray(a), b)
+    # buckets tile the vertex set exactly once
+    perm = np.asarray(dg.ell.perm)
+    assert sorted(perm[perm < nv].tolist()) == list(range(nv))
 
 
 def test_bipartite_and_grid_helpers():

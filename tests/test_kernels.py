@@ -54,6 +54,62 @@ def test_als_normal_eq_sweep(nv, deg, rows, d):
                                rtol=1e-5, atol=1e-5)
 
 
+def _bucketize(nv, deg_counts, widths):
+    """Host-side helper: rows -> (bucket row lists, starts) like SlicedEll."""
+    bidx = np.searchsorted(np.asarray(widths), np.maximum(deg_counts, 1))
+    return [np.nonzero(bidx == b)[0] for b in range(len(widths))]
+
+
+def test_ell_spmv_bucketed_sweep():
+    """Per-bucket width-specialized launches vs the monolithic oracle."""
+    rng = np.random.default_rng(3)
+    nv, rows, feat = 90, 120, 7
+    widths = (2, 4, 9)
+    deg = np.minimum(rng.zipf(2.0, nv), widths[-1])
+    groups = _bucketize(nv, deg, widths)
+    nbrs_b, w_b, order = [], [], []
+    for g, wd in zip(groups, widths):
+        nb = rng.integers(0, rows, (len(g), wd)).astype(np.int32)
+        mk = np.arange(wd)[None, :] < deg[g, None]
+        w = (rng.random((len(g), wd)) * mk).astype(np.float32)
+        nbrs_b.append(jnp.asarray(nb))
+        w_b.append(jnp.asarray(w))
+        order.append(g)
+    x = jnp.asarray(rng.normal(size=(rows, feat)), jnp.float32)
+    got = np.asarray(ops.ell_spmv_bucketed(nbrs_b, w_b, x))
+    ofs = 0
+    for nb, w, g in zip(nbrs_b, w_b, order):
+        want = np.asarray(ref.ell_spmv_ref(nb, w, x))
+        np.testing.assert_allclose(got[ofs: ofs + len(g)], want,
+                                   rtol=1e-5, atol=1e-6)
+        ofs += len(g)
+    assert ofs == got.shape[0] == nv
+
+
+def test_als_normal_eq_bucketed_sweep():
+    rng = np.random.default_rng(5)
+    rows, d = 80, 6
+    widths = (2, 5)
+    sizes = (11, 7)
+    nbrs_b, m_b, r_b = [], [], []
+    for n, wd in zip(sizes, widths):
+        nbrs_b.append(jnp.asarray(
+            rng.integers(0, rows, (n, wd)), jnp.int32))
+        m_b.append(jnp.asarray(rng.random((n, wd)) < 0.6))
+        r_b.append(jnp.asarray(rng.normal(size=(n, wd)), jnp.float32))
+    x = jnp.asarray(rng.normal(size=(rows, d)), jnp.float32)
+    a, b = ops.als_normal_eq_bucketed(nbrs_b, m_b, r_b, x)
+    assert a.shape == (sum(sizes), d, d) and b.shape == (sum(sizes), d)
+    ofs = 0
+    for nb, mk, rt, n in zip(nbrs_b, m_b, r_b, sizes):
+        ar, br = ref.als_normal_eq_ref(nb, mk, rt, x)
+        np.testing.assert_allclose(np.asarray(a)[ofs: ofs + n],
+                                   np.asarray(ar), rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(np.asarray(b)[ofs: ofs + n],
+                                   np.asarray(br), rtol=1e-4, atol=1e-4)
+        ofs += n
+
+
 @pytest.mark.parametrize("bh,w,dh", [
     (1, 8, 16),
     (4, 100, 32),
