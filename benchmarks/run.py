@@ -10,6 +10,8 @@ Prints ``name,us_per_call,derived`` CSV rows.
   kernels Pallas kernels vs jnp oracle; appends results/BENCH_engines.json
   graph  padded vs sliced-ELL storage: slot counts, build time,
          PageRank sweep; appends results/BENCH_graph.json
+  dispatch window size k x {bucket-row, batch, adaptive} dispatch
+         sweep (DESIGN.md §8); appends results/BENCH_dispatch.json
   roofline dry-run roofline table (per arch x shape x mesh)
 
 ``--smoke`` runs tiny sizes (CI artifact job); without an explicit
@@ -19,9 +21,9 @@ import sys
 
 
 def main() -> None:
-    from benchmarks import (common, fig1_consistency, fig6_scaling,
-                            fig6cd_comparison, fig8_locking, graph_storage,
-                            kernels_bench, roofline_table)
+    from benchmarks import (common, dispatch_window, fig1_consistency,
+                            fig6_scaling, fig6cd_comparison, fig8_locking,
+                            graph_storage, kernels_bench, roofline_table)
     args = sys.argv[1:]
     common.SMOKE = "--smoke" in args
     args = [a for a in args if a != "--smoke"]
@@ -30,11 +32,12 @@ def main() -> None:
         "fig1": fig1_consistency, "fig6ab": fig6_scaling,
         "fig6cd": fig6cd_comparison, "fig8": fig8_locking,
         "kernels": kernels_bench, "graph": graph_storage,
+        "dispatch": dispatch_window,
         "roofline": roofline_table,
     }
     if only is None and common.SMOKE:
         # the BENCH_*.json producers
-        selected = ["fig8", "kernels", "graph"]
+        selected = ["fig8", "kernels", "graph", "dispatch"]
     else:
         selected = [only] if only else list(mods)
     print("name,us_per_call,derived")

@@ -22,9 +22,10 @@ from repro.core.coloring import (greedy_coloring, distance2_coloring,
                                  single_color, bipartite_coloring,
                                  verify_coloring)
 from repro.core.exec import (EngineState, ExecutorCore, apply_batch,
-                             claim_winners, consume_and_reschedule,
-                             init_engine_state, refresh_syncs,
-                             scope_claims)
+                             choose_dispatch, claim_winners,
+                             consume_and_reschedule, init_engine_state,
+                             refresh_syncs, scope_claims,
+                             switch_on_window_width)
 from repro.core.engine_chromatic import ChromaticEngine
 from repro.core.engine_priority import PriorityEngine
 from repro.core.engine_bsp import bsp_engine

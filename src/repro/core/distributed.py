@@ -45,10 +45,11 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
-from repro.core.exec import (NO_CLAIM, apply_batch, default_interpret,
-                             refresh_syncs)
+from repro.core.exec import (NO_CLAIM, apply_batch, choose_dispatch,
+                             default_interpret, refresh_syncs)
 from repro.core.graph import (DataGraph, EllRows, SlicedEll, bucket_index,
-                              build_sliced_ell, default_bucket_widths)
+                              build_sliced_ell, default_bucket_widths,
+                              sliced_slot_count)
 from repro.core.sync import SyncOp
 from repro.core.update import UpdateFn
 
@@ -70,8 +71,9 @@ class LocalStruct(NamedTuple):
     def n_rows(self) -> int:
         return self.n_vertices
 
-    def struct_rows(self, ids: jax.Array) -> EllRows:
-        return self.ell.rows(ids)
+    def struct_rows(self, ids: jax.Array,
+                    width: int | None = None) -> EllRows:
+        return self.ell.rows(ids, width=width)
 
 
 @dataclasses.dataclass
@@ -333,6 +335,12 @@ class ShardPlan:
         )
 
     # ------------------------------------------------------------------
+    @property
+    def sliced_slots(self) -> int:
+        """Per-shard stored slot count ``sum_b R_b * W_b`` — the bucket
+        path's per-dispatch compute, the cost model's other arm."""
+        return sliced_slot_count(self.ell_starts, self.ell_widths)
+
     def ell_arrays(self) -> dict:
         """The sliced-ELL device arrays, keyed for a shard_map plan dict."""
         return dict(
@@ -441,6 +449,8 @@ class DistributedChromaticEngine:
     axis: str = "shard"
     use_kernel: bool = True                 # aggregator fast path on?
     kernel_interpret: bool | None = None    # None -> auto (off-TPU: True)
+    # color phases sweep whole shards: per-bucket row launches
+    dispatch: str = "bucket"
 
     def __post_init__(self):
         if self.graph.colors is None:
@@ -459,6 +469,8 @@ class DistributedChromaticEngine:
         interpret = (self.kernel_interpret if self.kernel_interpret
                      is not None else default_interpret())
         use_kernel = self.use_kernel
+        mode = choose_dispatch(self.dispatch, plan.Cmax,
+                               plan.ell_widths[-1], plan.sliced_slots)
 
         def color_phase(c, carry, struct, plan_b, globals_):
             ids = plan_b["color_ids"][c]
@@ -467,7 +479,8 @@ class DistributedChromaticEngine:
             # task-set consume/reschedule (OOB sentinel = local row R)
             carry = apply_batch(
                 struct, upd, carry, ids, valid, globals_,
-                sentinel=plan.R, use_kernel=use_kernel, interpret=interpret)
+                sentinel=plan.R, use_kernel=use_kernel, interpret=interpret,
+                dispatch=mode)
             vdata, edata, active, priority, n_upd = carry
 
             # ---- ghost data push (owner -> ghost) ----

@@ -29,8 +29,13 @@ from repro.core.update import UpdateFn
 
 def bsp_engine(graph: DataGraph, update_fn: UpdateFn,
                syncs: Sequence[SyncOp] = (), max_supersteps: int = 100,
-               use_kernel: bool = True) -> ChromaticEngine:
-    """Strategy: one phase containing every active vertex (trivial color)."""
+               use_kernel: bool = True,
+               dispatch: str = "bucket") -> ChromaticEngine:
+    """Strategy: one phase containing every active vertex (trivial color).
+
+    The single phase batches the whole graph, so the per-bucket row
+    launches are the natural dispatch shape (DESIGN.md §8).
+    """
     g = graph.with_colors(single_color(graph.n_vertices))
     return ChromaticEngine(g, update_fn, syncs, max_supersteps,
-                           use_kernel=use_kernel)
+                           use_kernel=use_kernel, dispatch=dispatch)

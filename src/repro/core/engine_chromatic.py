@@ -39,6 +39,10 @@ from repro.core.exec import (EngineState, ExecutorCore,  # noqa: F401
 class ChromaticEngine(ExecutorCore):
     """Strategy: phase c = all active vertices of color c (static batches)."""
 
+    # color batches sweep most of the graph: the per-bucket row launches
+    # are the right (amortized) launch shape (DESIGN.md §8)
+    dispatch: str = "bucket"
+
     def __post_init__(self):
         if self.graph.colors is None:
             raise ValueError("graph needs colors; call graph.with_colors(...)")

@@ -59,8 +59,10 @@ from repro.core.distributed import (ShardPlan, make_dist_sync_run,
                                     task_backflow)
 from repro.core.exec import (NO_CLAIM, ExecutorCore,
                              adjacent_claim_winners, apply_batch,
-                             claim_winners, default_interpret,
-                             refresh_syncs, scope_claims, self_claims)
+                             choose_dispatch, claim_winners,
+                             default_interpret, refresh_syncs,
+                             scope_claims, self_claims,
+                             switch_on_window_width)
 from repro.core.graph import DataGraph
 from repro.core.sync import SyncOp
 from repro.core.update import Consistency, UpdateFn
@@ -98,6 +100,64 @@ def conflict_winners(struct, ids, sel, consistency: Consistency,
     return sel      # VERTEX / UNSAFE: no inter-vertex conflicts
 
 
+def conflict_winners_windowed(struct, ids, sel, consistency: Consistency,
+                              claim_ids=None, combine=None):
+    """``conflict_winners`` at the window's snapped bucket width.
+
+    The batch-shaped claim pass (DESIGN.md §8): candidate adjacency is
+    gathered at ``[P, W]`` where ``W`` is the pending window's max
+    bucket width, instead of the ``[P, max_deg]`` materialization the
+    bucket path shares with its dispatch — the last place the old full
+    width shape leaked into small-window execution.
+
+    Without a ``combine`` (single device), one width switch wraps the
+    whole pass, sharing a single ``[P, W]`` gather between claim
+    scatter and winner check exactly like the bucket path's ``rows=``.
+    With a ``combine``, the claim array — ``[n_rows]`` whatever the
+    width — must cross shards between scatter and check, so the
+    collective runs *between* two width switches (each gathering its
+    own ``[P, W]`` rows); shards may resolve different widths
+    independently because the switch branches are collective-free.
+    """
+    if consistency not in (Consistency.FULL, Consistency.EDGE):
+        return sel      # VERTEX / UNSAFE: no inter-vertex conflicts
+    if combine is None:
+        def at_width(w):
+            def f(_):
+                rows = struct.struct_rows(ids, width=w)
+                return conflict_winners(struct, ids, sel, consistency,
+                                        claim_ids, rows=rows)
+            return f
+        return switch_on_window_width(struct.ell, ids, sel, at_width,
+                                      jnp.int32(0))
+    if consistency == Consistency.FULL:
+        def claim_at(w):
+            def f(_):
+                rows = struct.struct_rows(ids, width=w)
+                return scope_claims(struct, ids, sel, claim_ids, rows=rows)
+            return f
+        claim = combine(switch_on_window_width(struct.ell, ids, sel,
+                                               claim_at, jnp.int32(0)))
+
+        def win_at(w):
+            def f(claim):
+                rows = struct.struct_rows(ids, width=w)
+                return claim_winners(struct, ids, sel, claim, claim_ids,
+                                     rows=rows)
+            return f
+        return switch_on_window_width(struct.ell, ids, sel, win_at, claim)
+    # EDGE: self claims touch no adjacency (width-independent by nature)
+    claim = combine(self_claims(struct, ids, sel, claim_ids))
+
+    def win_at(w):
+        def f(claim):
+            rows = struct.struct_rows(ids, width=w)
+            return adjacent_claim_winners(struct, ids, sel, claim,
+                                          claim_ids, rows=rows)
+        return f
+    return switch_on_window_width(struct.ell, ids, sel, win_at, claim)
+
+
 @dataclasses.dataclass
 class LockingEngine(ExecutorCore):
     """Strategy: top-``max_pending`` pending window, min-id claim winners.
@@ -110,6 +170,10 @@ class LockingEngine(ExecutorCore):
 
     max_supersteps: int = 2000
     max_pending: int = 64       # P: in-flight scope acquisitions
+    # "auto" (DESIGN.md §8): small pending windows get the window-shaped
+    # [P, W] claim pass and kernel launches; a saturating window
+    # (max_pending ~ Nv) keeps the per-bucket row launches
+    dispatch: str = "auto"
 
     def __post_init__(self):
         self.n_phases = 1
@@ -119,8 +183,15 @@ class LockingEngine(ExecutorCore):
         score = jnp.where(state.active, state.priority, -jnp.inf)
         _, cand = jax.lax.top_k(score, p)           # [P] pending window
         cand_sel = state.active[cand]
-        win = conflict_winners(self.graph, cand, cand_sel,
-                               self.update_fn.consistency)
+        ell = self.graph.ell
+        mode = choose_dispatch(self.dispatch, p, ell.max_deg,
+                               ell.padded_slots)
+        if mode == "batch":
+            win = conflict_winners_windowed(self.graph, cand, cand_sel,
+                                            self.update_fn.consistency)
+        else:
+            win = conflict_winners(self.graph, cand, cand_sel,
+                                   self.update_fn.consistency)
         return cand, win
 
     def select(self, c, ctx):
@@ -150,6 +221,10 @@ class DistributedLockingEngine:
     axis: str = "shard"
     use_kernel: bool = True                 # aggregator fast path on?
     kernel_interpret: bool | None = None    # None -> auto (off-TPU: True)
+    # "auto" (DESIGN.md §8): small per-shard pending windows get the
+    # batch-shaped claim pass and [P, W] launches; saturating windows
+    # keep the per-bucket row launches
+    dispatch: str = "auto"
 
     def __post_init__(self):
         if (self.update_fn.consistency == Consistency.FULL
@@ -178,6 +253,8 @@ class DistributedLockingEngine:
         exchange_edges = self.exchange_edges
         syncs = self.syncs
         consistency = self.update_fn.consistency
+        mode = choose_dispatch(self.dispatch, P_win,
+                               plan.ell_widths[-1], plan.sliced_slots)
 
         def a2a(x):
             return jax.lax.all_to_all(x, axis, 0, 0, tiled=True)
@@ -249,31 +326,53 @@ class DistributedLockingEngine:
             _, cand = jax.lax.top_k(score, P_win)
             cand_sel = (active & owned)[cand]
 
-            # 2-3. claim pass + cross-shard combine -> winner batch
-            cand_rows = struct.struct_rows(cand)
-            win = conflict_winners(
-                struct, cand, cand_sel, consistency,
-                claim_ids=gids[cand],
-                combine=lambda c: combine_claims(c, plan_b),
-                rows=cand_rows)
+            # 2-3. claim pass + cross-shard combine -> winner batch.
+            # Batch mode gathers candidate adjacency at the window's
+            # snapped bucket width (collectives stay between the width
+            # switches); bucket mode shares one full-width gather
+            # across claim pass and dispatch.
+            if mode == "batch":
+                cand_rows = None
+                win = conflict_winners_windowed(
+                    struct, cand, cand_sel, consistency,
+                    claim_ids=gids[cand],
+                    combine=lambda c: combine_claims(c, plan_b))
+            else:
+                cand_rows = struct.struct_rows(cand)
+                win = conflict_winners(
+                    struct, cand, cand_sel, consistency,
+                    claim_ids=gids[cand],
+                    combine=lambda c: combine_claims(c, plan_b),
+                    rows=cand_rows)
 
             # 4. execute winners through the shared executor core
             # (reusing the claim pass's materialized candidate rows)
             carry = (vdata, edata, active, priority, n_upd)
             carry = apply_batch(
                 struct, upd, carry, cand, win, globals_, sentinel=R,
-                use_kernel=use_kernel, interpret=interpret, rows=cand_rows)
+                use_kernel=use_kernel, interpret=interpret, rows=cand_rows,
+                dispatch=mode)
             vdata, edata, active, priority, n_upd = carry
 
             # 5. version bumps for executed rows (and their edges)
             version = version.at[jnp.where(win, cand, R)].add(
                 1, mode="drop")
             if exchange_edges:
-                eids = cand_rows.edge_ids
-                emask = cand_rows.nbr_mask & win[:, None]
-                eversion = eversion.at[
-                    jnp.where(emask, eids, E_loc + 1).reshape(-1)].add(
-                        1, mode="drop")
+                def bump_eversion(rows, ev):
+                    emask = rows.nbr_mask & win[:, None]
+                    return ev.at[jnp.where(emask, rows.edge_ids,
+                                           E_loc + 1).reshape(-1)].add(
+                                               1, mode="drop")
+                if mode == "batch":
+                    def bump_at(w):
+                        def f(ev):
+                            rows = struct.struct_rows(cand, width=w)
+                            return bump_eversion(rows, ev)
+                        return f
+                    eversion = switch_on_window_width(
+                        struct.ell, cand, win, bump_at, eversion)
+                else:
+                    eversion = bump_eversion(cand_rows, eversion)
 
             # 6. versioned ghost/edge sync
             vdata, sent_ver, n_fresh, n_full = push_ghost_versioned(

@@ -53,6 +53,11 @@ class PriorityEngine(ExecutorCore):
                                 # priority-based scheduling"): priority is
                                 # ignored; tasks keep insertion order via a
                                 # monotone counter
+    # "auto" resolves the k_select window through the cost model
+    # (DESIGN.md §8): the small windows this engine exists for launch
+    # window-shaped [B, W] kernels instead of the full per-bucket row
+    # set, while a graph-sized k_select keeps the bucket launches
+    dispatch: str = "auto"
 
     def __post_init__(self):
         if self.graph.colors is None:

@@ -47,7 +47,8 @@ import numpy as np
 from repro.core.graph import DataGraph
 from repro.core.sync import SyncOp
 from repro.core.update import UpdateFn, gather_scopes, scatter_result
-from repro.kernels.ell_spmv import ell_fold, ell_spmv_bucketed
+from repro.kernels.ell_spmv import (ell_fold, ell_spmv_batched,
+                                    ell_spmv_bucketed)
 from repro.kernels.ops import default_interpret
 
 PyTree = Any
@@ -233,6 +234,32 @@ def adjacent_claim_winners(struct, ids, sel, claim, claim_ids=None,
 # Update dispatch (dense scopes or the Pallas aggregator fast path)
 # ----------------------------------------------------------------------
 
+def choose_dispatch(mode: str | None, batch_size: int, max_deg: int,
+                    sliced_slots: int) -> str:
+    """Resolve a dispatch mode to ``"bucket"`` or ``"batch"`` (DESIGN.md §8).
+
+    ``"bucket"`` launches the full per-bucket row set — per-dispatch
+    cost is the sliced slot count ``sum_b Nv_b * W_b``, amortized and
+    optimal for sweep engines whose batches cover most of the graph.
+    ``"batch"`` gathers the window at its snapped bucket width and
+    launches once at ``[B, W]`` — cost ``B * W``, the right shape for
+    the dynamic engines' small scheduler windows (k << Nv).
+
+    ``"auto"`` is the static cost model: the batch path's worst case
+    (every window touches the widest bucket, ``W = max_deg``) against
+    the bucket path's fixed slot count.  Both sides are trace-time
+    constants — batch width ``B`` is the engine's static window size —
+    so the choice never retraces and, because the runtime width only
+    ever undercuts the estimate, "auto" never picks a batch launch
+    costlier than the bucket launch it replaced.
+    """
+    if mode in ("bucket", "batch"):
+        return mode
+    if mode not in (None, "auto"):
+        raise ValueError(f"unknown dispatch mode {mode!r}")
+    return "batch" if batch_size * max_deg < sliced_slots else "bucket"
+
+
 def route_batch_to_buckets(ell, ids, sel, w, vals=None):
     """Scatter batch-row slot arrays onto their bucketed rows.
 
@@ -286,7 +313,7 @@ def bucketed_dense_fold(ell, ids, sel, w, vals, interpret: bool):
 
 def dispatch_update(struct, update_fn: UpdateFn, vertex_data, edge_data,
                     ids, sel, globals_, *, use_kernel: bool,
-                    interpret: bool, rows=None):
+                    interpret: bool, rows=None, batch_shaped: bool = False):
     """Materialize scopes for ``ids`` and run the update function.
 
     If the update declares a ``NeighborAggregator`` and the kernel path
@@ -301,12 +328,38 @@ def dispatch_update(struct, update_fn: UpdateFn, vertex_data, edge_data,
     reduction runs through ``bucketed_dense_fold`` — the same kernel
     accumulation at the same per-bucket shapes — which is what keeps
     the two paths bit-identical (DESIGN.md §4, §7).
+
+    ``batch_shaped`` selects the window-shaped dispatch instead
+    (DESIGN.md §8): ``rows`` is the window's ``[B, W]`` snapped-width
+    adjacency, the aggregation launches once through
+    ``ell_spmv_batched`` at ``[B, W]`` (cost ``B * W``, not the sliced
+    slot count), and the dense fallback reduces through ``ell_fold`` at
+    the *same* ``[B, W]`` shape with the same row gate — so the
+    dense-vs-kernel bitwise parity invariant extends to this path.
     """
     agg = update_fn.aggregator
     if agg is None:
         scope = gather_scopes(struct, vertex_data, edge_data, ids, globals_,
                               rows=rows)
         return scope, update_fn(scope)
+    if batch_shaped:
+        assert rows is not None, "batch-shaped dispatch needs window rows"
+        if not use_kernel:
+            scope = gather_scopes(struct, vertex_data, edge_data, ids,
+                                  globals_, rows=rows)
+            w = jnp.where(scope.nbr_mask, agg.weight(scope),
+                          0.0).astype(jnp.float32)
+            vals = agg.feature(scope.nbr_data).astype(jnp.float32)
+            y = ell_fold(w, vals, row_mask=sel, interpret=interpret)
+            return scope, agg.combine(scope, y)
+        scope = gather_scopes(struct, vertex_data, edge_data, ids, globals_,
+                              with_nbr_data=False, rows=rows)
+        x = agg.feature(vertex_data).astype(jnp.float32)
+        w = jnp.where(scope.nbr_mask, agg.weight(scope),
+                      0.0).astype(jnp.float32)
+        y = ell_spmv_batched(rows.nbrs, w, x, row_mask=sel,
+                             interpret=interpret)
+        return scope, agg.combine(scope, y)
     if not use_kernel:
         scope = gather_scopes(struct, vertex_data, edge_data, ids, globals_,
                               rows=rows)
@@ -328,27 +381,76 @@ def dispatch_update(struct, update_fn: UpdateFn, vertex_data, edge_data,
     return scope, agg.combine(scope, y)
 
 
-def apply_batch(struct, update_fn: UpdateFn, carry, ids, valid, globals_,
-                *, sentinel: int, nbr_stamp=None, use_kernel: bool = True,
-                interpret: bool = False, rows=None):
-    """Execute one conflict-free batch: the body every engine shares.
-
-    ``carry`` is ``(vertex_data, edge_data, active, priority, n_updates)``;
-    ``valid`` masks padded/foreign batch slots; tasks actually executed
-    are ``valid & active[ids]``.  ``rows`` optionally shares the batch's
-    materialized adjacency with a preceding claim pass.
-    """
+def _apply_selected(struct, update_fn: UpdateFn, carry, ids, sel, globals_,
+                    *, sentinel: int, nbr_stamp, use_kernel: bool,
+                    interpret: bool, rows, batch_shaped: bool):
+    """Gather/kernel -> update -> scatter -> bookkeeping for a resolved
+    selection mask (the shared tail of both dispatch paths)."""
     vdata, edata, active, priority, n_upd = carry
-    sel = valid & active[ids]
     scope, res = dispatch_update(
         struct, update_fn, vdata, edata, ids, sel, globals_,
-        use_kernel=use_kernel, interpret=interpret, rows=rows)
+        use_kernel=use_kernel, interpret=interpret, rows=rows,
+        batch_shaped=batch_shaped)
     vdata, edata = scatter_result(struct, vdata, edata, ids, sel, scope, res)
     active, priority = consume_and_reschedule(
         active, priority, ids, sel, scope.nbr_ids, scope.nbr_mask, res,
         sentinel, nbr_stamp=nbr_stamp)
     return (vdata, edata, active, priority,
             n_upd + sel.sum(dtype=jnp.int32))
+
+
+def switch_on_window_width(ell, ids, sel, width_fn, operand):
+    """Run ``width_fn(W)(operand)`` at the window's snapped bucket width.
+
+    The batch-shaped dispatch trick (DESIGN.md §8): ``lax.switch`` on
+    the runtime ``window_bucket`` index over one statically-traced
+    branch per bucket width, so a hub-free window pays ``[B, W]``-shaped
+    gathers and launches instead of ``[B, max_deg]``.  Branch outputs
+    must be width-independent shapes (engine carries, claim arrays,
+    winner masks all are).  Branches contain no collectives, so shards
+    of a distributed engine may resolve different widths independently.
+    """
+    if ell.n_buckets == 1:
+        return width_fn(ell.widths[0])(operand)
+    bidx = ell.window_bucket(ids, sel)
+    return jax.lax.switch(
+        bidx, [width_fn(w) for w in ell.widths], operand)
+
+
+def apply_batch(struct, update_fn: UpdateFn, carry, ids, valid, globals_,
+                *, sentinel: int, nbr_stamp=None, use_kernel: bool = True,
+                interpret: bool = False, rows=None, dispatch: str = "bucket"):
+    """Execute one conflict-free batch: the body every engine shares.
+
+    ``carry`` is ``(vertex_data, edge_data, active, priority, n_updates)``;
+    ``valid`` masks padded/foreign batch slots; tasks actually executed
+    are ``valid & active[ids]``.  ``rows`` optionally shares the batch's
+    materialized adjacency with a preceding claim pass (bucket path
+    only).  ``dispatch`` picks the launch shape (resolve "auto" through
+    ``choose_dispatch`` first): ``"bucket"`` runs the per-bucket row
+    launches, ``"batch"`` runs the whole body at the window's snapped
+    ``[B, W]`` width under ``switch_on_window_width``.  Both paths
+    produce bitwise-identical results under the interpret-mode
+    FMA-blocking guard — trailing zero-weight slots are exact no-ops —
+    which ``tests/test_dispatch.py`` asserts engine by engine.
+    """
+    vdata, edata, active, priority, n_upd = carry
+    sel = valid & active[ids]
+    if dispatch == "batch":
+        def at_width(w):
+            def body(carry):
+                wrows = struct.struct_rows(ids, width=w)
+                return _apply_selected(
+                    struct, update_fn, carry, ids, sel, globals_,
+                    sentinel=sentinel, nbr_stamp=nbr_stamp,
+                    use_kernel=use_kernel, interpret=interpret,
+                    rows=wrows, batch_shaped=True)
+            return body
+        return switch_on_window_width(struct.ell, ids, sel, at_width, carry)
+    return _apply_selected(
+        struct, update_fn, carry, ids, sel, globals_, sentinel=sentinel,
+        nbr_stamp=nbr_stamp, use_kernel=use_kernel, interpret=interpret,
+        rows=rows, batch_shaped=False)
 
 
 # ----------------------------------------------------------------------
@@ -396,6 +498,13 @@ class ExecutorCore:
     max_supersteps: int = 100
     use_kernel: bool = True                 # aggregator fast path on?
     kernel_interpret: bool | None = None    # None -> auto (off-TPU: True)
+    # launch shape per phase batch: "bucket" (per-bucket row launches),
+    # "batch" (window-shaped [B, W]), or "auto" (cost model, DESIGN.md §8).
+    # Sweep strategies (chromatic/BSP) pin "bucket"; the dynamic window
+    # strategies (priority/locking) keep "auto", whose cost model sends
+    # their small windows down the batch path and graph-sized windows
+    # back to the bucket launches.
+    dispatch: str = "auto"
 
     # -- strategy interface -------------------------------------------
     n_phases: int = dataclasses.field(init=False, default=1)
@@ -431,11 +540,14 @@ class ExecutorCore:
 
         def phase(c, carry):
             ids, valid = self.select(c, ctx)
+            ell = self.graph.ell
+            mode = choose_dispatch(self.dispatch, ids.shape[0],
+                                   ell.max_deg, ell.padded_slots)
             return apply_batch(
                 self.graph, self.update_fn, carry, ids, valid,
                 state.globals, sentinel=self.graph.n_vertices,
                 nbr_stamp=stamp, use_kernel=self.use_kernel,
-                interpret=interpret)
+                interpret=interpret, dispatch=mode)
 
         carry = (state.vertex_data, state.edge_data, state.active,
                  state.priority, state.n_updates)

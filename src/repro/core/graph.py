@@ -67,6 +67,14 @@ class EllRows(NamedTuple):
     is_src: jax.Array
 
 
+def sliced_slot_count(starts: Sequence[int], widths: Sequence[int]) -> int:
+    """Stored (= bucket-kernel-computed) slots ``sum_b Nv_b * W_b`` —
+    the single definition behind ``SlicedEll.padded_slots`` and
+    ``ShardPlan.sliced_slots`` (the cost model's bucket-path arm)."""
+    return sum((starts[b + 1] - starts[b]) * widths[b]
+               for b in range(len(widths)))
+
+
 # ----------------------------------------------------------------------
 # Sliced ELL: degree-bucketed adjacency storage
 # ----------------------------------------------------------------------
@@ -113,8 +121,7 @@ class SlicedEll:
     @property
     def padded_slots(self) -> int:
         """Stored (= kernel-computed) neighbor slots, padding included."""
-        return sum((self.starts[b + 1] - self.starts[b]) * self.widths[b]
-                   for b in range(self.n_buckets))
+        return sliced_slot_count(self.starts, self.widths)
 
     def bucket_slices(self, arr: jax.Array) -> tuple[jax.Array, ...]:
         """Split a ``[total_rows, ...]`` array into per-bucket slices."""
@@ -122,23 +129,57 @@ class SlicedEll:
                      for b in range(self.n_buckets))
 
     # ------------------------------------------------------------------
-    def rows(self, ids: jax.Array) -> EllRows:
-        """Materialize full-width ``[B, max_deg]`` adjacency rows.
+    def snap_width(self, width: int) -> int:
+        """Snap a requested scope width up to the nearest bucket width.
+
+        Width-specialized gathers compile one jit variant per *bucket*
+        width (a handful of power-of-two values) instead of one per
+        requested window width — the shape-caching contract of the
+        batch-shaped dispatch path (DESIGN.md §8).
+        """
+        for w in self.widths:
+            if w >= width:
+                return w
+        return self.widths[-1]
+
+    def window_bucket(self, ids: jax.Array, sel: jax.Array) -> jax.Array:
+        """Runtime index of the widest bucket a selected row lives in.
+
+        The batch-shaped dispatch path branches on this scalar
+        (``lax.switch`` over the static bucket widths) so a hub-free
+        window gathers and launches at its own snapped width instead of
+        the global ``max_deg``.  An empty selection reports bucket 0.
+        """
+        pos = self.inv_perm[ids]
+        bounds = jnp.asarray(self.starts[1:], jnp.int32)
+        b = jnp.searchsorted(bounds, pos, side="right").astype(jnp.int32)
+        return jnp.max(jnp.where(sel, b, 0)).astype(jnp.int32)
+
+    def rows(self, ids: jax.Array, width: int | None = None) -> EllRows:
+        """Materialize ``[B, W]`` adjacency rows (default ``W=max_deg``).
 
         The escape from the bucketed layout for everything that is
         per-*batch* rather than per-graph (scope gathers, claim passes,
         edge scatters): one gather per bucket, selected per row by
         bucket membership.  Columns past a row's bucket width read as
         padding (mask False, edge id ``pad_edge``).
+
+        ``width`` (static) truncates the materialization to the snapped
+        bucket width: buckets wider than ``W`` are skipped entirely, so
+        their rows read as *empty* — callers must guarantee every row
+        they act on sits in a bucket of width <= ``W`` (the
+        ``window_bucket`` switch of the batch dispatch path does).
         """
+        d = self.max_deg if width is None else self.snap_width(width)
         pos = self.inv_perm[ids]                       # [B]
-        d = self.max_deg
         out_n = jnp.zeros(ids.shape + (d,), jnp.int32)
         out_m = jnp.zeros(ids.shape + (d,), bool)
         out_e = jnp.full(ids.shape + (d,), self.pad_edge, jnp.int32)
         out_s = jnp.zeros(ids.shape + (d,), bool)
         for b in range(self.n_buckets):
             s, e, w = self.starts[b], self.starts[b + 1], self.widths[b]
+            if w > d:
+                break
             in_b = (pos >= s) & (pos < e)
             loc = jnp.where(in_b, pos - s, 0)
             sel = in_b[..., None]
@@ -174,6 +215,35 @@ jax.tree_util.register_dataclass(
     data_fields=["nbrs", "nbr_mask", "edge_ids", "is_src", "perm",
                  "inv_perm"],
     meta_fields=["widths", "starts", "n_rows", "max_deg", "pad_edge"])
+
+
+def bucket_major_edge_order(ell: SlicedEll, n_edges: int) -> np.ndarray:
+    """Edge ids in bucket-major first-visit order: ``order[new] = old``.
+
+    Walking buckets in width order, rows in bucketed position order and
+    slots left to right, an edge is numbered at its first appearance.
+    Renumbering edge rows this way makes each bucket block's
+    ``edge_ids`` gathers (and the pad-row-guarded scatters back) walk
+    edge data in nearly-contiguous ascending runs instead of the random
+    order the input edge list happened to arrive in (ROADMAP
+    "Edge-data locality").  Host-side, build-time only.
+    """
+    visits = [np.asarray(ell.edge_ids[b])[np.asarray(ell.nbr_mask[b])]
+              for b in range(ell.n_buckets)]
+    flat = (np.concatenate(visits) if visits
+            else np.zeros(0, np.int64)).astype(np.int64)
+    _, first = np.unique(flat, return_index=True)
+    order = flat[np.sort(first)]
+    assert len(order) == n_edges, "every edge must appear in some row"
+    return order
+
+
+def _renumber_edge_ids(ell: SlicedEll, inv_order: np.ndarray,
+                       n_edges: int) -> SlicedEll:
+    """Map every stored edge id through ``inv_order`` (pad id fixed)."""
+    table = jnp.asarray(np.append(inv_order, ell.pad_edge).astype(np.int32))
+    return dataclasses.replace(
+        ell, edge_ids=tuple(table[e] for e in ell.edge_ids))
 
 
 def default_bucket_widths(max_deg: int) -> tuple[int, ...]:
@@ -352,6 +422,12 @@ class DataGraph:
     # --- optional annotations ---
     colors: jax.Array | None = None   # [Nv] int32, attached by coloring.py
     n_colors: int = 0
+    # --- bucket-major edge renumbering (edge-data locality) ---
+    # edge_perm[new] = input-order edge id; edge_inv_perm[input] = new.
+    # Identity when built with edge_locality=False.  ``edges_np`` and
+    # all edge-data rows are stored in the *new* order.
+    edge_perm: np.ndarray | None = None
+    edge_inv_perm: np.ndarray | None = None
 
     # ------------------------------------------------------------------
     @staticmethod
@@ -362,6 +438,7 @@ class DataGraph:
         edge_data: PyTree = None,
         max_deg: int | None = None,
         bucket_widths: Sequence[int] | None = None,
+        edge_locality: bool = True,
     ) -> "DataGraph":
         """Build the sliced-ELL structure from an undirected edge list.
 
@@ -370,6 +447,14 @@ class DataGraph:
         both are handled but duplicates count twice toward degree).
         ``bucket_widths`` overrides the power-of-two degree buckets
         (mostly for tests; the default is ``default_bucket_widths``).
+        ``edge_locality`` renumbers edge rows into bucket-major
+        first-visit order (``bucket_major_edge_order``): per-bucket
+        ``edge_ids`` gathers become nearly contiguous.  ``edge_data``
+        must be given in the *input* edge order; it is permuted here,
+        and ``edges_np`` / the stored edge rows use the new order
+        (``edge_perm`` maps back).  Slot order within every adjacency
+        row is untouched, so the renumbering is bitwise inert for any
+        engine (asserted in ``tests/test_dispatch.py``).
         """
         edges = np.asarray(edges, dtype=np.int64)
         if edges.size == 0:
@@ -391,6 +476,18 @@ class DataGraph:
                                widths=bucket_widths)
 
         edge_data = {} if edge_data is None else edge_data
+        if edge_locality and ne:
+            order = bucket_major_edge_order(ell, ne)
+            inv_order = np.empty(ne, dtype=np.int64)
+            inv_order[order] = np.arange(ne)
+            ell = _renumber_edge_ids(ell, inv_order, ne)
+            edges = edges[order]
+            sel = jnp.asarray(order)
+            edge_data = jax.tree.map(lambda a: jnp.asarray(a)[sel],
+                                     edge_data)
+        else:
+            order = np.arange(ne, dtype=np.int64)
+            inv_order = order.copy()
         return DataGraph(
             n_vertices=n_vertices,
             n_edges=ne,
@@ -400,6 +497,8 @@ class DataGraph:
             vertex_data=jax.tree.map(jnp.asarray, vertex_data),
             edge_data=_tree_pad_rows(edge_data, 1),
             edges_np=edges,
+            edge_perm=order,
+            edge_inv_perm=inv_order,
         )
 
     # -- structure access ----------------------------------------------
@@ -408,9 +507,12 @@ class DataGraph:
         """Row-id space / scatter sentinel (mirrors ``LocalStruct``)."""
         return self.n_vertices
 
-    def struct_rows(self, ids: jax.Array) -> EllRows:
-        """Full-width adjacency rows for a batch of vertex ids."""
-        return self.ell.rows(ids)
+    def struct_rows(self, ids: jax.Array,
+                    width: int | None = None) -> EllRows:
+        """Adjacency rows for a batch of vertex ids; ``width`` requests
+        the window-snapped ``[B, W]`` materialization (see
+        ``SlicedEll.rows``)."""
+        return self.ell.rows(ids, width=width)
 
     def to_padded(self) -> EllRows:
         """Monolithic ``[Nv, max_deg]`` view (oracle / test escape hatch)."""

@@ -42,7 +42,14 @@ class Consistency(enum.Enum):
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass
 class ScopeBatch:
-    """The scopes S_v of a batch of vertices, materialized by gathers."""
+    """The scopes S_v of a batch of vertices, materialized by gathers.
+
+    The slot axis D is ``max_deg`` on the bucket dispatch path and the
+    window's snapped bucket width ``W <= max_deg`` on the batch-shaped
+    path (DESIGN.md §8) — user update functions must treat it as opaque
+    (mask with ``nbr_mask``, reduce over the axis), never assume it
+    equals the graph's ``max_deg``.
+    """
     v_ids: jax.Array        # [B] int32 vertex ids
     v_data: PyTree          # [B, ...]      central vertex data (R/W)
     nbr_ids: jax.Array      # [B, D] int32
@@ -189,13 +196,15 @@ def gather_scopes(graph_struct, vertex_data, edge_data, v_ids, globals_,
 
     ``graph_struct`` is anything exposing ``struct_rows(ids)`` /
     ``degree`` / ``n_rows`` (a DataGraph or a ShardPlan LocalStruct);
-    the sliced-ELL storage materializes the full-width adjacency rows
-    per *batch*, so the scope shape stays ``[B, max_deg]`` whatever the
-    bucketed layout underneath.  ``with_nbr_data=False`` produces a
-    *lite* scope (``nbr_data=None``) for the aggregator fast path,
-    skipping the [B, D, F] gather.  ``rows`` accepts the batch's
-    already-materialized adjacency (e.g. the locking engine's claim
-    pass gathered it) to share the bucketed-row gather.
+    the sliced-ELL storage materializes the adjacency rows per *batch*,
+    so the scope shape is ``[B, max_deg]`` (or the window's snapped
+    ``[B, W]`` on the batch dispatch path) whatever the bucketed layout
+    underneath.  ``with_nbr_data=False`` produces a *lite* scope
+    (``nbr_data=None``) for the aggregator fast path, skipping the
+    [B, D, F] gather.  ``rows`` accepts the batch's already-
+    materialized adjacency (e.g. the locking engine's claim pass
+    gathered it, or a width-snapped gather) to share the bucketed-row
+    gather and to set the scope's slot width.
     """
     if rows is None:
         rows = graph_struct.struct_rows(v_ids)

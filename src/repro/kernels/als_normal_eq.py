@@ -64,6 +64,20 @@ def als_normal_eq_bucketed(nbrs_blocks, mask_blocks, ratings_blocks,
     return jnp.concatenate(As, axis=0), jnp.concatenate(bs, axis=0)
 
 
+def als_normal_eq_batched(nbrs: jax.Array, mask: jax.Array,
+                          ratings: jax.Array, x: jax.Array,
+                          interpret: bool = False):
+    """Window-shaped normal equations: one ``[B, W]`` launch over a
+    gathered scope (mirrors ``ell_spmv_batched``).  For a small
+    scheduler window the per-bucket launches of
+    ``als_normal_eq_bucketed`` still accumulate every bucket row; this
+    entry accumulates only the window's ``B * W`` slots.  Delegates to
+    the shared launch so any same-shape fallback reduction compiles to
+    the identical accumulation (DESIGN.md §8).
+    """
+    return als_normal_eq(nbrs, mask, ratings, x, interpret=interpret)
+
+
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def als_normal_eq(nbrs: jax.Array, mask: jax.Array, ratings: jax.Array,
                   x: jax.Array, interpret: bool = False):

@@ -157,6 +157,31 @@ def ell_spmv_bucketed(nbrs_blocks, w_blocks, x: jax.Array,
     return jnp.concatenate(ys, axis=0)
 
 
+def ell_spmv_batched(nbrs: jax.Array, w: jax.Array, x: jax.Array,
+                     row_mask: jax.Array | None = None,
+                     interpret: bool = False) -> jax.Array:
+    """Window-shaped SpMV: one ``[B, W]`` launch over a gathered scope.
+
+    The batch-shaped dispatch path (DESIGN.md §8): instead of launching
+    every bucket's ``[Nv_b, W_b]`` rows — ``O(sum_b Nv_b * W_b)`` work
+    per dispatch regardless of how small the scheduler window is — the
+    executor gathers the window's adjacency at its snapped bucket width
+    ``W`` and launches once at ``[B, W]``, so per-dispatch compute is
+    ``B * W``.  ``nbrs`` / ``w`` are the gathered window rows (pad
+    slots: any index, weight exactly 0), ``x [R, F]`` the resident
+    feature block, ``row_mask`` the window's selection gate.
+
+    Deliberately delegates to the same launch as ``ell_spmv`` rather
+    than growing a second kernel body: the dense fallback reduces the
+    same window through ``ell_fold`` at the identical ``[B, W]`` shape,
+    and bitwise dense-vs-kernel parity holds exactly because both paths
+    run one compiled accumulation per shape (DESIGN.md §4, §7).  A
+    separate kernel body would reintroduce the FMA-contraction drift
+    the shared launch exists to pin down.
+    """
+    return ell_spmv(nbrs, w, x, row_mask=row_mask, interpret=interpret)
+
+
 def ell_fold(w: jax.Array, vals: jax.Array,
              row_mask: jax.Array | None = None,
              interpret: bool = False) -> jax.Array:

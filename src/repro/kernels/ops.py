@@ -12,8 +12,11 @@ import jax
 
 from repro.kernels import ref
 from repro.kernels.ell_spmv import ell_spmv as _ell_spmv_kernel
+from repro.kernels.ell_spmv import ell_spmv_batched as _ell_spmv_batched
 from repro.kernels.ell_spmv import ell_spmv_bucketed as _ell_spmv_bucketed
 from repro.kernels.als_normal_eq import als_normal_eq as _als_kernel
+from repro.kernels.als_normal_eq import (
+    als_normal_eq_batched as _als_batched)
 from repro.kernels.als_normal_eq import (
     als_normal_eq_bucketed as _als_bucketed)
 from repro.kernels.window_attention import (
@@ -40,6 +43,12 @@ def ell_spmv_bucketed(nbrs_blocks, w_blocks, x, row_masks=None):
                               row_masks=row_masks, interpret=_interpret())
 
 
+def ell_spmv_batched(nbrs, w, x, row_mask=None):
+    """Window-shaped SpMV: one [B, W] launch over a gathered scope."""
+    return _ell_spmv_batched(nbrs, w, x, row_mask=row_mask,
+                             interpret=_interpret())
+
+
 def als_normal_eq(nbrs, mask, ratings, x, use_pallas: bool = True):
     if not use_pallas:
         return ref.als_normal_eq_ref(nbrs, mask, ratings, x)
@@ -50,6 +59,11 @@ def als_normal_eq_bucketed(nbrs_blocks, mask_blocks, ratings_blocks, x):
     """Sliced-ELL ALS accumulation: one launch per degree bucket."""
     return _als_bucketed(nbrs_blocks, mask_blocks, ratings_blocks, x,
                          interpret=_interpret())
+
+
+def als_normal_eq_batched(nbrs, mask, ratings, x):
+    """Window-shaped ALS accumulation: one [B, W] launch."""
+    return _als_batched(nbrs, mask, ratings, x, interpret=_interpret())
 
 
 def decode_window_attention(q, k, v, kv_len, use_pallas: bool = True):

@@ -1,0 +1,161 @@
+"""Window-shaped adaptive kernel dispatch (DESIGN.md §8).
+
+Three invariants of the batch-shaped path:
+
+* **Path parity** — for every engine, {batch, bucket} x {kernel, dense}
+  produce bit-identical runs.  Trailing zero-weight slots are exact
+  no-ops in the FMA-guarded interpret-mode accumulation, so the
+  window-shaped ``[B, W]`` launch agrees bitwise with the per-bucket
+  ``[Nv_b, W_b]`` launches *and* with both dense fallbacks.
+* **The dispatcher is invisible** — a hypothesis property that flipping
+  the dispatch mode never changes results.
+* **The cost model picks the right shape** — tiny windows route through
+  ``ell_spmv_batched``, graph-sized batches through the bucket layout.
+
+Plus the edge-data locality satellite: the bucket-major edge
+renumbering is bitwise inert for every engine.
+"""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.apps import pagerank
+from repro.core import (ChromaticEngine, LockingEngine, PriorityEngine,
+                        bsp_engine, choose_dispatch)
+from repro.core import exec as exec_mod
+from repro.core.coloring import greedy_coloring
+from repro.core.graph import DataGraph, zipf_edges
+
+
+def _zipf_setup(nv=150, max_deg=48, seed=9):
+    edges = zipf_edges(nv, alpha=2.0, max_deg=max_deg, seed=seed)
+    g = pagerank.make_graph(edges, nv)
+    assert g.ell.n_buckets >= 3          # several width branches in play
+    return g, pagerank.make_update(1e-6)
+
+
+def _run(mode, g, upd, dispatch, use_kernel=True):
+    if mode == "chromatic":
+        return ChromaticEngine(g, upd, use_kernel=use_kernel,
+                               dispatch=dispatch, max_supersteps=200).run()
+    if mode == "priority":
+        return PriorityEngine(g, upd, use_kernel=use_kernel,
+                              dispatch=dispatch, k_select=16,
+                              max_supersteps=8000).run()
+    if mode == "locking":
+        return LockingEngine(g, upd, use_kernel=use_kernel,
+                             dispatch=dispatch, max_pending=16,
+                             max_supersteps=8000).run()
+    return bsp_engine(g, upd, use_kernel=use_kernel,
+                      dispatch=dispatch).run(num_supersteps=8)
+
+
+@pytest.mark.parametrize("mode", ["chromatic", "priority", "bsp", "locking"])
+def test_dispatch_paths_bitwise_identical(mode):
+    """batch/bucket x kernel/dense: four bit-identical runs per engine
+    on a Zipf graph — the acceptance invariant of the adaptive
+    dispatcher (DESIGN.md §8)."""
+    g, upd = _zipf_setup()
+    ref = _run(mode, g, upd, "bucket", use_kernel=True)
+    for dispatch in ("batch", "bucket"):
+        for use_kernel in (True, False):
+            st = _run(mode, g, upd, dispatch, use_kernel)
+            assert np.array_equal(np.asarray(st.vertex_data["rank"]),
+                                  np.asarray(ref.vertex_data["rank"])), \
+                (dispatch, use_kernel)
+            assert np.array_equal(np.asarray(st.active),
+                                  np.asarray(ref.active))
+            assert int(st.n_updates) == int(ref.n_updates)
+            assert int(st.superstep) == int(ref.superstep)
+
+
+def test_auto_threshold_selects_by_window_size(monkeypatch):
+    """The cost model: B * max_deg vs the sliced slot count.  A k=8
+    window must launch window-shaped; a k=Nv window must fall back to
+    the per-bucket row launches."""
+    g, upd = _zipf_setup()
+    ell = g.ell
+    assert choose_dispatch("auto", 8, ell.max_deg,
+                           ell.padded_slots) == "batch"
+    assert choose_dispatch("auto", g.n_vertices, ell.max_deg,
+                           ell.padded_slots) == "bucket"
+    with pytest.raises(ValueError):
+        choose_dispatch("bogus", 8, ell.max_deg, ell.padded_slots)
+
+    calls = {"batched": 0, "bucketed": 0}
+    real_b, real_r = exec_mod.ell_spmv_batched, exec_mod.ell_spmv_bucketed
+    monkeypatch.setattr(exec_mod, "ell_spmv_batched",
+                        lambda *a, **k: (calls.__setitem__(
+                            "batched", calls["batched"] + 1),
+                            real_b(*a, **k))[1])
+    monkeypatch.setattr(exec_mod, "ell_spmv_bucketed",
+                        lambda *a, **k: (calls.__setitem__(
+                            "bucketed", calls["bucketed"] + 1),
+                            real_r(*a, **k))[1])
+    PriorityEngine(g, upd, k_select=8, dispatch="auto",
+                   max_supersteps=10).run(num_supersteps=1)
+    assert calls["batched"] and not calls["bucketed"]
+    calls.update(batched=0, bucketed=0)
+    PriorityEngine(g, upd, k_select=g.n_vertices, dispatch="auto",
+                   max_supersteps=10).run(num_supersteps=1)
+    assert calls["bucketed"] and not calls["batched"]
+
+
+def test_locking_windowed_claim_pass_matches_full_width():
+    """The batch-shaped claim pass (snapped-width candidate gathers)
+    grants exactly the same winner batches as the full-width pass —
+    the whole run is bit-identical, updates included."""
+    g, upd = _zipf_setup(nv=120, max_deg=32, seed=4)
+    a = LockingEngine(g, upd, max_pending=8, dispatch="batch",
+                      max_supersteps=8000).run()
+    b = LockingEngine(g, upd, max_pending=8, dispatch="bucket",
+                      max_supersteps=8000).run()
+    assert np.array_equal(np.asarray(a.vertex_data["rank"]),
+                          np.asarray(b.vertex_data["rank"]))
+    assert int(a.n_updates) == int(b.n_updates)
+    assert int(a.superstep) == int(b.superstep)
+
+
+def _normalized_weights(nv, edges):
+    deg = np.zeros(nv)
+    for u, v in edges:
+        deg[u] += 1
+        deg[v] += 1
+    deg = np.maximum(deg, 1)
+    return np.asarray([1.0 / np.sqrt(deg[u] * deg[v]) for u, v in edges],
+                      dtype=np.float32)
+
+
+@pytest.mark.parametrize("mode", ["chromatic", "priority", "bsp", "locking"])
+def test_edge_locality_reorder_is_bitwise_inert(mode):
+    """Bucket-major edge renumbering changes where edge rows live, not
+    what any engine computes: ordered vs input-ordered layouts are
+    bit-identical (slot order within adjacency rows is untouched)."""
+    nv = 100
+    edges = zipf_edges(nv, alpha=2.0, max_deg=32, seed=5)
+    w = _normalized_weights(nv, edges)
+    colors = greedy_coloring(nv, edges)   # shared: coloring sees one order
+    upd = pagerank.make_update(1e-6)
+
+    def build(locality):
+        g = DataGraph.from_edges(
+            nv, edges, {"rank": np.ones(nv, np.float32)}, {"w": w},
+            edge_locality=locality)
+        return g.with_colors(colors)
+
+    g_on, g_off = build(True), build(False)
+    assert not np.array_equal(g_on.edge_perm, g_off.edge_perm)
+    st_on = _run(mode, g_on, upd, "batch")
+    st_off = _run(mode, g_off, upd, "batch")
+    assert np.array_equal(np.asarray(st_on.vertex_data["rank"]),
+                          np.asarray(st_off.vertex_data["rank"]))
+    assert int(st_on.n_updates) == int(st_off.n_updates)
+    # edge rows correspond through the stored permutation
+    np.testing.assert_array_equal(
+        np.asarray(st_on.edge_data["w"])[:-1][g_on.edge_inv_perm],
+        np.asarray(st_off.edge_data["w"])[:-1])
+
+
+# The hypothesis property ("the dispatcher's choice never changes
+# results") lives in tests/test_graph_properties.py with the other
+# optional-dep property sweeps, so this module never skips wholesale.

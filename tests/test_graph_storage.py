@@ -34,13 +34,24 @@ def test_vectorized_builder_identical_to_loop(seed):
 
 
 def test_sliced_ell_roundtrips_adjacency():
-    """to_padded() == the old monolithic from_edges output."""
+    """to_padded() == the old monolithic from_edges output (edge ids
+    modulo the bucket-major renumbering, exactly when locality is on)."""
     edges = random_graph(80, 240, seed=7)
-    g = DataGraph.from_edges(80, edges, {"x": np.zeros(80, np.float32)})
-    want = _build_ell_loop(80, edges, g.max_deg)
-    got = g.to_padded()
-    for a, b in zip(got, want):
+    g0 = DataGraph.from_edges(80, edges, {"x": np.zeros(80, np.float32)},
+                              edge_locality=False)
+    want = _build_ell_loop(80, edges, g0.max_deg)
+    for a, b in zip(g0.to_padded(), want):
         np.testing.assert_array_equal(np.asarray(a), b)
+    # with locality on, only the edge *ids* change — mapped through the
+    # stored permutation they are the unordered layout's ids
+    g = DataGraph.from_edges(80, edges, {"x": np.zeros(80, np.float32)})
+    got = g.to_padded()
+    np.testing.assert_array_equal(np.asarray(got.nbrs), want[0])
+    np.testing.assert_array_equal(np.asarray(got.nbr_mask), want[1])
+    to_input = np.append(g.edge_perm, g.n_edges)     # pad id fixed
+    np.testing.assert_array_equal(to_input[np.asarray(got.edge_ids)],
+                                  want[2])
+    np.testing.assert_array_equal(np.asarray(got.is_src), want[3])
     # every vertex is in exactly one bucket; the permutation is exact
     perm = np.asarray(g.ell.perm)
     assert sorted(perm[perm < 80].tolist()) == list(range(80))
@@ -83,6 +94,25 @@ def test_sliced_storage_shrinks_on_zipf():
     assert gu.ell.padded_slots <= 2 * gu.n_vertices * gu.max_deg
 
 
+def test_bucket_major_edge_order_is_first_visit():
+    """Edge-data locality (DESIGN.md §8): walking buckets in width
+    order, rows top to bottom and slots left to right, the stored edge
+    ids appear in first-visit order 0, 1, 2, ... — so per-bucket edge
+    gathers walk edge data in ascending, nearly-contiguous runs."""
+    edges = zipf_edges(400, alpha=2.0, max_deg=48, seed=6)
+    g = DataGraph.from_edges(400, edges, {"x": np.zeros(400, np.float32)})
+    ell = g.ell
+    visits = np.concatenate([
+        np.asarray(ell.edge_ids[b])[np.asarray(ell.nbr_mask[b])]
+        for b in range(ell.n_buckets)])
+    first = visits[np.sort(np.unique(visits, return_index=True)[1])]
+    np.testing.assert_array_equal(first, np.arange(g.n_edges))
+    # the permutation round-trips, and edges_np rows follow the new ids
+    np.testing.assert_array_equal(g.edge_perm[g.edge_inv_perm],
+                                  np.arange(g.n_edges))
+    np.testing.assert_array_equal(g.edges_np, edges[g.edge_perm])
+
+
 def test_row_activation_routes_oob():
     edges = random_graph(30, 60, seed=4)
     g = DataGraph.from_edges(30, edges, {"x": np.zeros(30, np.float32)})
@@ -115,6 +145,41 @@ def test_forced_bucket_sizes_pad_rows():
     got = ell.to_padded()
     for a, b in zip(got, p):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_width_specialized_rows_and_window_bucket():
+    """The batch dispatch path's gather contract (DESIGN.md §8):
+    ``rows(ids, width=W)`` equals the full materialization truncated to
+    W for rows in buckets <= W and reads as padding for wider rows;
+    ``window_bucket`` reports the widest selected bucket."""
+    edges = zipf_edges(300, alpha=2.0, max_deg=40, seed=3)
+    g = DataGraph.from_edges(300, edges, {"x": np.zeros(300, np.float32)})
+    ell = g.ell
+    assert ell.n_buckets >= 3
+    assert ell.snap_width(3) == 4 and ell.snap_width(2) == 2
+    assert ell.snap_width(ell.max_deg + 7) == ell.widths[-1]
+    ids = jnp.arange(300, dtype=jnp.int32)
+    full = ell.rows(ids)
+    w = ell.widths[1]
+    part = ell.rows(ids, width=w)
+    assert part.nbrs.shape == (300, w)
+    deg = np.asarray(g.degree)
+    fits = deg <= w
+    for f_arr, p_arr in [(full.nbrs, part.nbrs), (full.nbr_mask, part.nbr_mask),
+                         (full.edge_ids, part.edge_ids), (full.is_src, part.is_src)]:
+        np.testing.assert_array_equal(np.asarray(f_arr)[fits, :w],
+                                      np.asarray(p_arr)[fits])
+    assert not np.asarray(part.nbr_mask)[~fits].any()   # wider rows: empty
+    # window_bucket: a selection inside bucket 0 reports 0; including a
+    # widest-bucket row reports n_buckets - 1; empty selection -> 0
+    inv = np.asarray(ell.inv_perm)
+    narrow = np.nonzero((inv >= ell.starts[0]) & (inv < ell.starts[1]))[0][:4]
+    wide = np.nonzero(inv >= ell.starts[ell.n_buckets - 1])[0][:1]
+    sel_ids = jnp.asarray(np.concatenate([narrow, wide]), jnp.int32)
+    sel = jnp.ones(sel_ids.shape, bool)
+    assert int(ell.window_bucket(sel_ids, sel)) == ell.n_buckets - 1
+    assert int(ell.window_bucket(sel_ids, sel.at[-1].set(False))) == 0
+    assert int(ell.window_bucket(sel_ids, jnp.zeros_like(sel))) == 0
 
 
 def test_zipf_edges_are_skewed_and_simple():

@@ -35,8 +35,11 @@ def test_locking_engine_needs_no_coloring():
     is unavailable — same fixed point as the chromatic engine."""
     edges = random_graph(40, 90, seed=5)
     g_colored = pagerank.make_graph(edges, 40)
+    # recycle the colored graph's edge data: its rows follow the
+    # bucket-major renumbering, so pair them with edges_np (same order)
     g_plain = DataGraph.from_edges(
-        40, edges, {"rank": np.asarray(g_colored.vertex_data["rank"])},
+        40, g_colored.edges_np,
+        {"rank": np.asarray(g_colored.vertex_data["rank"])},
         {"w": np.asarray(g_colored.edge_data["w"])[:-1]})
     upd = pagerank.make_update(1e-6)
     chrom = ChromaticEngine(g_colored, upd, max_supersteps=300).run()
