@@ -9,21 +9,20 @@ from __future__ import annotations
 import numpy as np
 
 from benchmarks.common import emit, time_fn
+from repro import api
 from repro.apps import als
-from repro.core import ChromaticEngine, bsp_engine
 
 
 def run() -> None:
     sweeps = 12
     rmse = {}
-    for mode in ("consistent", "inconsistent"):
+    for mode, scheduler in (("consistent", "chromatic"),
+                            ("inconsistent", "bsp")):
         prob = als.synthetic_netflix(60, 50, d=6, density=0.25,
                                      noise=0.05, seed=7)
         upd = als.make_update(6, lam=0.05, eps=0.0)
-        if mode == "consistent":
-            eng = ChromaticEngine(prob.graph, upd, max_supersteps=sweeps)
-        else:
-            eng = bsp_engine(prob.graph, upd, max_supersteps=sweeps)
+        eng = api.build_engine(prob.graph, upd, scheduler=scheduler,
+                               max_supersteps=sweeps)
         us = time_fn(lambda: eng.run(num_supersteps=sweeps), iters=1)
         st = eng.run(num_supersteps=sweeps)
         err = als.dataset_rmse(prob, st.vertex_data)

@@ -15,9 +15,9 @@ from __future__ import annotations
 import numpy as np
 
 from benchmarks.common import emit, time_fn
+from repro import api
 from repro.apps import als, coem, lbp
-from repro.core import (ChromaticEngine, PriorityEngine, ShardPlan,
-                        random_partition, two_phase_partition)
+from repro.core import ShardPlan, random_partition, two_phase_partition
 
 
 def _apps():
@@ -38,7 +38,7 @@ def run() -> None:
     apps = _apps()
     # (a) update throughput on this host
     for name, (g, upd, vbytes, _part) in apps.items():
-        eng = ChromaticEngine(g, upd, max_supersteps=5)
+        eng = api.build_engine(g, upd, max_supersteps=5)
         us = time_fn(lambda e=eng: e.run(num_supersteps=5), iters=2)
         st = eng.run(num_supersteps=5)
         n_upd = max(int(st.n_updates), 1)

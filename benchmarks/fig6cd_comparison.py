@@ -15,10 +15,11 @@ from __future__ import annotations
 import numpy as np
 
 from benchmarks.common import emit, time_fn
+from repro import api
 from repro.apps import als, coem
 from repro.baselines.mapreduce import als_mapreduce, coem_mapreduce
 from repro.baselines.mpi_als import als_mpi
-from repro.core import (ChromaticEngine, ShardPlan, random_partition)
+from repro.core import ShardPlan, random_partition
 
 
 def run() -> None:
@@ -27,7 +28,7 @@ def run() -> None:
         prob = als.synthetic_netflix(120, 100, d=4, density=0.1, seed=2,
                                      d_model=d)
         upd = als.make_update(d, eps=0.0)
-        eng = ChromaticEngine(prob.graph, upd, max_supersteps=3)
+        eng = api.build_engine(prob.graph, upd, max_supersteps=3)
         us = time_fn(lambda e=eng: e.run(num_supersteps=3), iters=2)
         st = eng.run(num_supersteps=3)
         n_upd = max(int(st.n_updates), 1)
@@ -41,7 +42,7 @@ def run() -> None:
     prob = als.synthetic_netflix(200, 150, d=8, density=0.08, seed=3)
     iters = 4
     upd = als.make_update(8, eps=0.0)
-    eng = ChromaticEngine(prob.graph, upd, max_supersteps=iters)
+    eng = api.build_engine(prob.graph, upd, max_supersteps=iters)
     us_gl = time_fn(lambda: eng.run(num_supersteps=iters), iters=2)
     emit("fig6d_netflix_graphlab", us_gl / iters, "")
     us_mr = time_fn(lambda: als_mapreduce(prob, iters), iters=2)
@@ -54,7 +55,7 @@ def run() -> None:
     # ---- Fig 7(a): NER under two models + traffic accounting ----
     nprob = coem.synthetic_ner(400, 300, 5, mean_deg=8, seed=1)
     updc = coem.make_update(0.0)
-    engc = ChromaticEngine(nprob.graph, updc, max_supersteps=iters)
+    engc = api.build_engine(nprob.graph, updc, max_supersteps=iters)
     us_gl = time_fn(lambda: engc.run(num_supersteps=iters), iters=2)
     us_mr = time_fn(lambda: coem_mapreduce(nprob, iters), iters=2)
     _, cstats = coem_mapreduce(nprob, 1)

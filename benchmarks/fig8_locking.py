@@ -37,9 +37,9 @@ import numpy as np
 
 import benchmarks.common as common
 from benchmarks.common import emit, time_fn
+from repro import api
 from repro.apps import lbp
-from repro.core import (ChromaticEngine, DistributedLockingEngine,
-                        LockingEngine, PriorityEngine, ShardPlan)
+from repro.core import ShardPlan
 
 _RESULTS = pathlib.Path(__file__).resolve().parent.parent / "results"
 
@@ -53,7 +53,7 @@ def run() -> None:
                                    seed=m)
         g = prob.graph
         upd = lbp.make_update(3, eps=1e-3)
-        eng = ChromaticEngine(g, upd, max_supersteps=3)
+        eng = api.build_engine(g, upd, max_supersteps=3)
         us = time_fn(lambda e=eng: e.run(num_supersteps=3), iters=2)
         asg = lbp.frame_partition(prob, m)
         plan = ShardPlan.build(g, asg, m) if m > 1 else None
@@ -77,8 +77,9 @@ def run() -> None:
     # single-device sweeps depend only on the schedule knob, not on the
     # partition — run each point once
     for p in ps:
-        eng = LockingEngine(prob.graph, lbp.make_update(3, eps=1e-2),
-                            max_pending=p, max_supersteps=max_ss)
+        eng = api.build_engine(prob.graph, lbp.make_update(3, eps=1e-2),
+                               scheduler="locking", max_pending=p,
+                               max_supersteps=max_ss)
         st = eng.run()
         us = time_fn(lambda e=eng: e.run(), iters=1)
         emit(f"fig8b_maxpending{p}", us,
@@ -88,8 +89,9 @@ def run() -> None:
             "updates": int(st.n_updates)}
 
     for k in ks:
-        eng = PriorityEngine(prob.graph, lbp.make_update(3, eps=1e-2),
-                             k_select=k, max_supersteps=4000)
+        eng = api.build_engine(prob.graph, lbp.make_update(3, eps=1e-2),
+                               scheduler="priority", k_select=k,
+                               max_supersteps=4000)
         st = eng.run()
         us = time_fn(lambda e=eng: e.run(), iters=1)
         emit(f"fig8b_k{k}", us,
@@ -107,15 +109,18 @@ def run() -> None:
         ghost = int(np.asarray(plan.send_mask).sum())
         part = {"ghost_rows_static": ghost}
         if jax.device_count() >= n_shards:
-            res = DistributedLockingEngine(
-                prob.graph, plan, lbp.make_update(3, eps=1e-2),
+            # pass the prebuilt plan: the facade accepts it verbatim,
+            # so the host-side ShardPlan.build is not paid twice
+            res = api.run(
+                prob.graph, lbp.make_update(3, eps=1e-2),
+                scheduler="locking", n_shards=n_shards, partition=plan,
                 max_pending=ps[-1], max_supersteps=max_ss,
-                exchange_edges=True).run()
+                exchange_edges=True)
             emit(f"fig8b_{part_name}_ghost_filtered", 0.0,
-                 f"static={ghost};sent={res['ghost_rows_sent']};"
-                 f"full={res['ghost_rows_full']}")
-            part["ghost_rows_sent"] = res["ghost_rows_sent"]
-            part["ghost_rows_full"] = res["ghost_rows_full"]
+                 f"static={ghost};sent={res.stats['ghost_rows_sent']};"
+                 f"full={res.stats['ghost_rows_full']}")
+            part["ghost_rows_sent"] = res.stats["ghost_rows_sent"]
+            part["ghost_rows_full"] = res.stats["ghost_rows_full"]
         else:
             emit(f"fig8b_{part_name}_ghost_static", 0.0, f"static={ghost}")
         entry["partitions"][part_name] = part

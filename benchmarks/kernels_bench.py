@@ -22,8 +22,8 @@ _RESULTS = pathlib.Path(__file__).resolve().parent.parent / "results"
 
 def _bench_engine_paths() -> None:
     """Dense-scope vs Pallas-aggregator dispatch through the executor."""
+    from repro import api
     from repro.apps import pagerank
-    from repro.core import ChromaticEngine
 
     rng = np.random.default_rng(0)
     nv, ne = 2000, 8000
@@ -40,7 +40,8 @@ def _bench_engine_paths() -> None:
              "max_deg": int(g.max_deg), "supersteps": 3,
              "recorded_at": time.strftime("%Y-%m-%dT%H:%M:%S")}
     for label, use_kernel in (("dense_scope", False), ("aggregator", True)):
-        eng = ChromaticEngine(g, upd, max_supersteps=3, use_kernel=use_kernel)
+        eng = api.build_engine(g, upd, max_supersteps=3,
+                               use_kernel=use_kernel)
         us = time_fn(lambda e=eng: e.run(num_supersteps=3), iters=2)
         emit(f"engine_pagerank_{label}", us,
              f"nv={nv};use_kernel={use_kernel}")

@@ -1,6 +1,6 @@
 """CoSeg (paper §5.2): residual-prioritized LBP + GMM sync — the workload
-that needs the Locking Engine (run here both as the PriorityEngine
-analogue and as the real claim-pass LockingEngine, DESIGN.md §6).
+that needs the Locking Engine, run through the ``repro.api`` facade as
+three scheduler strings over one identical program (DESIGN.md §9).
 
 Shows the paper's claims on one problem:
   1. adaptive prioritized scheduling does far fewer updates than fixed
@@ -16,8 +16,8 @@ import time
 
 import numpy as np
 
+from repro import api
 from repro.apps import lbp
-from repro.core import ChromaticEngine, LockingEngine, PriorityEngine
 
 K = 4          # labels
 FEAT = 3
@@ -26,45 +26,44 @@ FEAT = 3
 def main() -> None:
     prob = lbp.synthetic_coseg(n_frames=6, h=6, w=12, n_labels=K,
                                n_feat=FEAT, noise=0.55, seed=0)
-    g = prob.graph
+    g, upd, syncs = lbp.build(prob, beta=0.6, eps=5e-3, tau=2)
     nv = g.n_vertices
     base = float((np.asarray(g.vertex_data["unary"]).argmax(1)
                   == prob.true_labels).mean())
     print(f"CoSeg grid {prob.shape}: {nv} super-pixels, {g.n_edges} edges, "
           f"{g.n_colors} colors | unary-only accuracy {base:.3f}")
 
-    upd = lbp.make_update(K, beta=0.6, eps=5e-3)
-    syncs = [lbp.gmm_sync(K, FEAT, tau=2)]
-
     t0 = time.time()
-    chrom = ChromaticEngine(g, upd, syncs=syncs, max_supersteps=40).run()
+    chrom = api.run(g, upd, syncs=syncs, scheduler="chromatic",
+                    max_supersteps=40)
     t_c = time.time() - t0
     acc_c = lbp.label_accuracy(prob, chrom.vertex_data)
-    print(f"chromatic (fixed sweeps): {int(chrom.superstep)} supersteps, "
-          f"{int(chrom.n_updates)} updates, {t_c:.2f}s, acc {acc_c:.3f}")
+    print(f"chromatic (fixed sweeps): {chrom.superstep} supersteps, "
+          f"{chrom.n_updates} updates, {t_c:.2f}s, acc {acc_c:.3f}")
 
     t0 = time.time()
-    prio = PriorityEngine(g, upd, syncs=syncs, k_select=64,
-                          max_supersteps=20000).run()
+    prio = api.run(g, upd, syncs=syncs, scheduler="priority", k_select=64,
+                   max_supersteps=20000)
     t_p = time.time() - t0
     acc_p = lbp.label_accuracy(prob, prio.vertex_data)
     print(f"priority (locking-engine analogue, k=64): "
-          f"{int(prio.superstep)} supersteps, {int(prio.n_updates)} updates,"
+          f"{prio.superstep} supersteps, {prio.n_updates} updates,"
           f" {t_p:.2f}s, acc {acc_p:.3f}")
+
     t0 = time.time()
-    lst = LockingEngine(g, upd, syncs=syncs, max_pending=64,
-                        max_supersteps=20000).run()
+    lst = api.run(g, upd, syncs=syncs, scheduler="locking", max_pending=64,
+                  max_supersteps=20000)
     t_l = time.time() - t0
     acc_l = lbp.label_accuracy(prob, lst.vertex_data)
     print(f"locking (claim pass, max_pending=64): "
-          f"{int(lst.superstep)} supersteps, {int(lst.n_updates)} updates,"
+          f"{lst.superstep} supersteps, {lst.n_updates} updates,"
           f" {t_l:.2f}s, acc {acc_l:.3f}")
 
     # the engines are adaptive; compare against the non-adaptive
     # full-sweep schedule each would otherwise execute
-    sweeps_c = int(chrom.superstep) * nv
+    sweeps_c = chrom.superstep * nv
     print(f"adaptive savings vs full sweeps: chromatic "
-          f"{1 - int(chrom.n_updates) / sweeps_c:.0%}, priority engine "
+          f"{1 - chrom.n_updates / sweeps_c:.0%}, priority engine "
           f"processes the top-k residuals first (residual-BP order [27])")
     print("GMM centroids (sync):")
     print(np.asarray(prio.globals["gmm"]).round(2))

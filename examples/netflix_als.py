@@ -1,27 +1,26 @@
 """End-to-end driver: the paper's Netflix experiment (§5.1) in miniature.
 
-Full pipeline: synthetic ratings -> bipartite data graph -> two-phase
-partitioning -> distributed chromatic engine (if >1 device) or
-single-shard engine -> RMSE sync monitoring -> consistent snapshot
-checkpoint -> comparison against the Hadoop-style and MPI-style
-baselines on identical hardware.
+Full pipeline: synthetic ratings -> bipartite data graph -> the
+``repro.api`` facade choosing single-shard vs distributed chromatic
+execution from ``n_shards=`` (engine classes never appear) -> RMSE sync
+monitoring -> consistent snapshot checkpoint -> comparison against the
+Hadoop-style and MPI-style baselines on identical hardware.
 
     PYTHONPATH=src python examples/netflix_als.py
     # multi-device (the distributed engine path):
     XLA_FLAGS=--xla_force_host_platform_device_count=8 \
         PYTHONPATH=src python examples/netflix_als.py
 """
-import os
 import time
 
 import jax
 import numpy as np
 
+from repro import api
 from repro.apps import als
 from repro.baselines.mapreduce import als_mapreduce
 from repro.baselines.mpi_als import als_mpi
-from repro.core import (ChromaticEngine, DistributedChromaticEngine,
-                        ShardPlan, random_partition)
+from repro.core import random_partition
 from repro.train import checkpoint as ckpt
 
 D = 8
@@ -31,39 +30,32 @@ SWEEPS = 20
 def main() -> None:
     prob = als.synthetic_netflix(n_users=300, n_movies=200, d=D,
                                  density=0.06, noise=0.08, seed=0)
-    g = prob.graph
+    g, upd, syncs = als.build(prob, lam=0.05, eps=1e-3)
     print(f"Netflix-style problem: {prob.n_users} users x "
           f"{prob.n_movies} movies, {g.n_edges} ratings, d={D}")
-
-    upd = als.make_update(D, lam=0.05, eps=1e-3)
-    syncs = [als.rmse_sync()]
 
     n_dev = len(jax.devices())
     t0 = time.time()
     if n_dev > 1:
         # the paper's §5.1 setup: dense bipartite graph -> random partition
-        asg = random_partition(g.n_vertices, n_dev, seed=1)
-        plan = ShardPlan.build(g, asg, n_dev)
-        ghost_rows = int(np.asarray(plan.send_mask).sum())
+        out = api.run(g, upd, syncs=syncs, scheduler="chromatic",
+                      n_shards=n_dev,
+                      partition=random_partition(g.n_vertices, n_dev, seed=1),
+                      max_supersteps=SWEEPS)
+        ghost_rows = int(np.asarray(out.engine.plan.send_mask).sum())
         print(f"distributed on {n_dev} shards: "
               f"{ghost_rows} ghost rows/superstep")
-        eng = DistributedChromaticEngine(g, plan, upd, syncs=syncs,
-                                         max_supersteps=SWEEPS)
-        out = eng.run()
-        vdata, globals_ = out["vertex_data"], out["globals"]
-        n_updates, steps = out["n_updates"], out["supersteps"]
     else:
-        eng = ChromaticEngine(g, upd, syncs=syncs, max_supersteps=SWEEPS)
-        st = eng.run()
-        vdata, globals_ = st.vertex_data, st.globals
-        n_updates, steps = int(st.n_updates), int(st.superstep)
+        out = api.run(g, upd, syncs=syncs, scheduler="chromatic",
+                      max_supersteps=SWEEPS)
     t_gl = time.time() - t0
-    rmse = als.dataset_rmse(prob, vdata)
-    print(f"GraphLab ALS: {steps} supersteps, {n_updates} updates, "
-          f"{t_gl:.2f}s | sync RMSE {float(globals_['rmse']):.4f} "
+    rmse = als.dataset_rmse(prob, out.vertex_data)
+    print(f"GraphLab ALS: {out.superstep} supersteps, {out.n_updates} "
+          f"updates, {t_gl:.2f}s | sync RMSE {float(out.globals['rmse']):.4f} "
           f"(exact {rmse:.4f}, noise floor ~{prob.noise})")
 
-    ckpt.save("results/netflix_factors.npz", vdata, step=steps)
+    ckpt.save("results/netflix_factors.npz", out.vertex_data,
+              step=out.superstep)
     print("checkpoint written to results/netflix_factors.npz")
 
     # --- baselines (paper §6.2) ---

@@ -1,15 +1,27 @@
-"""Quickstart: the paper's running example (PageRank, Ex. 3.1 + §3.3).
+"""Quickstart: the paper's running example (PageRank, Ex. 3.1 + §3.3)
+through the one paper-shaped entry point, ``repro.api``.
 
-Builds a small web graph, defines the Alg.-1 update function, attaches
-the "second most popular page" sync, and runs the chromatic engine to
-convergence.
+GraphLab's programming surface is four objects (§3): a **data graph**,
+an **update function**, **sync operations**, and an engine chosen by
+*configuration* — the C++ API's ``set_scheduler_type`` / ``start()``.
+The repo mirrors that exactly:
+
+    graph, update, syncs = pagerank.build(edges, n)    # the data-graph
+    result = api.run(graph, update, syncs=syncs,       # ... start()
+                     scheduler="chromatic")            # set_scheduler_type
+
+``scheduler=`` picks any registered strategy ("chromatic", "priority",
+"bsp", "locking", or the "sequential" Def.-3.1 oracle — see
+``api.list_schedulers()``); ``n_shards=`` switches to the shard_map
+engines; ``until=`` terminates on a predicate over the sync results
+(termination-by-sync).  Every run returns the same ``RunResult``.
 
     PYTHONPATH=src python examples/quickstart.py
 """
 import numpy as np
 
+from repro import api
 from repro.apps import pagerank
-from repro.core import ChromaticEngine
 
 
 def main() -> None:
@@ -23,30 +35,37 @@ def main() -> None:
             edges.add((u, v))
     edges = np.asarray(sorted(edges))
 
-    graph = pagerank.make_graph(edges, n)
+    graph, update, syncs = pagerank.build(edges, n, eps=1e-5)
     print(f"data graph: {n} vertices, {len(edges)} edges, "
-          f"{graph.n_colors} colors")
+          f"{graph.n_colors} colors | schedulers: "
+          f"{', '.join(api.list_schedulers())}")
 
-    engine = ChromaticEngine(
-        graph,
-        pagerank.make_update(eps=1e-5),
-        syncs=[pagerank.second_most_popular_sync(),
-               pagerank.total_rank_sync()],
-        max_supersteps=100,
-    )
-    state = engine.run()
+    result = api.run(graph, update, syncs=syncs, scheduler="chromatic",
+                     max_supersteps=100)
 
-    ranks = np.asarray(state.vertex_data["rank"])
+    ranks = np.asarray(result.vertex_data["rank"])
     top = np.argsort(-ranks)[:5]
-    print(f"converged in {int(state.superstep)} supersteps, "
-          f"{int(state.n_updates)} update-function calls "
-          f"(adaptive: {int(state.n_updates) / (int(state.superstep) * n):.0%} "
+    print(f"converged in {result.superstep} supersteps, "
+          f"{result.n_updates} update-function calls "
+          f"(adaptive: {result.n_updates / (result.superstep * n):.0%} "
           f"of a full-sweep schedule)")
     print("top pages:", [(int(v), round(float(ranks[v]), 3)) for v in top])
-    second_rank, _ = state.globals["top2"]
+    second_rank, _ = result.globals["top2"]
     print(f"sync op 'second most popular page': rank={float(second_rank):.3f}"
           f" (oracle: {sorted(ranks)[-2]:.3f})")
-    print(f"sync op 'total rank': {float(state.globals['total_rank']):.2f}")
+    print(f"sync op 'total rank': {float(result.globals['total_rank']):.2f}")
+
+    # the same program under a different strategy is one string away;
+    # until= stops as soon as the total-rank sync stabilizes near its
+    # fixed point (termination-by-sync, §3.3)
+    target = float(result.globals["total_rank"])
+    early = api.run(graph, update, syncs=syncs, scheduler="priority",
+                    k_select=64, max_supersteps=5000,
+                    until=lambda g: abs(float(g["total_rank"]) - target)
+                    < 1e-3)
+    print(f"priority engine, until |total_rank - fixed point| < 1e-3: "
+          f"stopped after {early.superstep} supersteps, "
+          f"{early.n_updates} updates")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,366 @@
+"""One paper-shaped entry point: data graph + update + sync -> run.
+
+The paper's whole programming surface is §3's four objects — a data
+graph, an update function, sync operations, and an engine selected by
+*configuration* (``set_scheduler_type`` / ``set_scope_type`` /
+``start()``, §3.4-3.5).  This module is that surface for the repo
+(DESIGN.md §9):
+
+    from repro import api
+    from repro.apps import pagerank
+
+    graph, update, syncs = pagerank.build(edges, n)
+    result = api.run(graph, update, syncs=syncs,
+                     scheduler="priority", k_select=64,
+                     until=lambda g: g["total_rank"] < 1e-3)
+
+* ``scheduler=`` names a strategy from the string-keyed registry each
+  engine module self-registers into (``repro.core.registry``):
+  ``chromatic`` / ``priority`` / ``bsp`` / ``locking`` /
+  ``sequential`` (the Def.-3.1 oracle).
+* ``n_shards=`` selects the single-device strategy or its ``shard_map``
+  variant — engine *class* imports are an implementation detail the
+  facade owns.
+* kwargs are validated in one place against the registry entry: a knob
+  the strategy would silently ignore (``max_pending`` on the chromatic
+  engine, a typo'd ``dispatch=``) raises ``ValueError`` naming the
+  legal set.
+* every run returns the same ``RunResult`` (final state, superstep /
+  update counts, sync globals, optional per-superstep ``trace``), and
+  ``until=`` terminates on a predicate over the sync results — the
+  paper's termination-by-sync — replacing each engine's ad-hoc return
+  convention.
+
+The old engine classes remain importable from ``repro.core`` and are
+constructed by this facade through the registry; direct construction is
+deprecated-but-stable for out-of-tree callers and for the bitwise
+facade-vs-direct equivalence tests (``tests/test_api.py``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Sequence
+
+import numpy as np
+
+from repro.core import registry
+from repro.core.exec import EngineState, validate_dispatch
+from repro.core.registry import (describe_schedulers,  # noqa: F401
+                                 get_distributed, get_scheduler,
+                                 list_schedulers)
+from repro.core.sync import SyncOp
+from repro.core.update import Consistency, UpdateFn
+
+PyTree = Any
+
+
+# ----------------------------------------------------------------------
+# RunResult: the one return convention
+# ----------------------------------------------------------------------
+
+@dataclasses.dataclass
+class RunResult:
+    """What every ``run`` returns, whatever the strategy or shard count.
+
+    ``state`` is the full jittable ``EngineState`` for single-device
+    engine runs (feed it to ``resume``/checkpointing); ``None`` for the
+    sequential oracle and distributed runs (whose per-shard state stays
+    sharded — the local blocks are in ``stats``).  ``superstep`` is
+    ``None`` for the sequential oracle, which does not count steps;
+    ``active_any`` (did the task set drain?) is reported by every
+    scheduler.
+    ``stats`` carries strategy-specific extras (the distributed
+    engines' ``ghost_rows_sent`` / ``ghost_rows_full`` traffic counts,
+    local shard blocks); ``trace`` the per-superstep records when
+    tracing was requested.
+    """
+    vertex_data: PyTree
+    edge_data: PyTree | None
+    globals: dict
+    superstep: int | None
+    n_updates: int
+    active_any: bool | None = None
+    state: EngineState | None = None
+    engine: Any = None
+    trace: list | None = None
+    stats: dict = dataclasses.field(default_factory=dict)
+
+
+# ----------------------------------------------------------------------
+# EngineSpec: scheduler name + validated configuration
+# ----------------------------------------------------------------------
+
+@dataclasses.dataclass
+class EngineSpec:
+    """A resolved engine configuration (the ``set_*_type`` bundle).
+
+    ``options`` holds the per-strategy knobs (``k_select``,
+    ``max_pending``, ``use_kernel``, ``exchange_edges``, ...) —
+    validated against the registry entry at ``build`` time, not
+    trusted.  ``dispatch="auto"`` defers to the strategy's registered
+    default (sweep engines pin ``"bucket"``, window engines run the
+    DESIGN.md §8 cost model); ``"bucket"`` / ``"batch"`` force a launch
+    shape.  ``consistency`` overrides the update function's declared
+    scope model (the paper's ``set_scope_type``).
+    """
+    scheduler: str = "chromatic"
+    n_shards: int = 1
+    consistency: Consistency | str | None = None
+    dispatch: str | None = "auto"
+    max_supersteps: int | None = None
+    options: dict = dataclasses.field(default_factory=dict)
+
+    def __post_init__(self):
+        validate_dispatch(self.dispatch)
+        if not isinstance(self.n_shards, int) or self.n_shards < 1:
+            raise ValueError(
+                f"n_shards must be a positive int, got {self.n_shards!r}")
+
+    @property
+    def entry(self) -> registry.SchedulerEntry:
+        return get_scheduler(self.scheduler)
+
+    # -- kwarg normalization: one validator for every strategy ---------
+    def _factory_kwargs(self, entry) -> dict:
+        kwargs = dict(self.options)
+        if self.max_supersteps is not None:
+            kwargs["max_supersteps"] = self.max_supersteps
+        # "auto"/None defer to the strategy's registered default: the
+        # sweep engines pin "bucket" for a reason (DESIGN.md §8), and a
+        # forced mode must be an explicit choice.
+        if self.dispatch not in (None, "auto"):
+            kwargs["dispatch"] = self.dispatch
+        unknown = set(kwargs) - entry.allowed
+        if unknown:
+            dist = isinstance(entry, registry.DistributedEntry)
+            raise ValueError(
+                f"scheduler {self.scheduler!r}"
+                f"{' (distributed)' if dist else ''} does not "
+                f"accept {sorted(unknown)}; allowed options: "
+                f"{sorted(entry.allowed)}")
+        for key in ("max_pending", "k_select", "max_supersteps"):
+            v = kwargs.get(key)
+            # bool is an int subclass: k_select=True must not quietly
+            # become a window of 1
+            if v is not None and (isinstance(v, bool)
+                                  or not isinstance(v, int) or v < 1):
+                raise ValueError(f"{key} must be a positive int, got {v!r}")
+        return kwargs
+
+    def _resolve_update(self, update_fn: UpdateFn) -> UpdateFn:
+        if not isinstance(update_fn, UpdateFn):
+            raise ValueError(
+                f"update must be an UpdateFn, got {type(update_fn).__name__}"
+                " (wrap the callable with repro.core.update.UpdateFn or "
+                "aggregator_update)")
+        if self.consistency is None:
+            return update_fn
+        c = self.consistency
+        if isinstance(c, str):
+            try:
+                c = Consistency(c.lower())
+            except ValueError:
+                raise ValueError(
+                    f"unknown consistency {self.consistency!r}; expected "
+                    f"one of {[m.value for m in Consistency]}") from None
+        return dataclasses.replace(update_fn, consistency=c)
+
+    # -- engine construction ------------------------------------------
+    def distributed(self, partition=None) -> bool:
+        """Does this spec resolve to a ``shard_map`` engine?  True for
+        ``n_shards > 1``, and for an explicit ``partition=`` at
+        ``n_shards == 1`` — the degenerate M=1 plan (bit-identical to
+        the single-device strategy, ``tests/test_locking.py``)."""
+        return self.n_shards > 1 or partition is not None
+
+    def build(self, graph, update_fn: UpdateFn,
+              syncs: Sequence[SyncOp] = (), *, partition=None):
+        """Resolve the registry entry and construct the engine.
+
+        Without a ``partition=``, ``n_shards == 1`` builds the
+        single-device strategy; otherwise the strategy's ``shard_map``
+        variant is built over a ``ShardPlan`` (``partition=`` is a
+        ``[Nv]`` shard assignment, a callable ``(graph, n_shards) ->
+        assignment``, a prebuilt ``ShardPlan``, or None for the default
+        ``two_phase_partition(graph.n_vertices, graph.edges_np,
+        n_shards, seed=0)`` — note ``graph.edges_np`` is the graph's
+        *stored* bucket-major edge order, not the input edge list, and
+        the partitioner is edge-order-sensitive).
+        """
+        update_fn = self._resolve_update(update_fn)
+        if not self.distributed(partition):
+            entry = get_scheduler(self.scheduler)
+            self._check_colors(entry, graph)
+            return entry.factory(graph, update_fn, syncs=tuple(syncs),
+                                 **self._factory_kwargs(entry))
+        from repro.core.distributed import ShardPlan
+        dentry = get_distributed(self.scheduler)
+        self._check_colors(get_scheduler(self.scheduler), graph)
+        if isinstance(partition, ShardPlan):
+            if partition.M != self.n_shards:
+                raise ValueError(
+                    f"partition= plan has M={partition.M} shards but "
+                    f"n_shards={self.n_shards}")
+            plan = partition
+        else:
+            if callable(partition):
+                assignment = partition(graph, self.n_shards)
+            elif partition is None:
+                from repro.core.partition import two_phase_partition
+                assignment = two_phase_partition(
+                    graph.n_vertices, graph.edges_np, self.n_shards,
+                    seed=0)
+            else:
+                assignment = np.asarray(partition)
+            plan = ShardPlan.build(graph, assignment, self.n_shards)
+        return dentry.factory(graph, plan, update_fn, syncs=tuple(syncs),
+                              **self._factory_kwargs(dentry))
+
+    def _check_colors(self, entry, graph) -> None:
+        if entry.needs_colors and graph.colors is None:
+            raise ValueError(
+                f"scheduler {self.scheduler!r} needs a colored graph; "
+                "call graph.with_colors(...) (the locking engine "
+                "handles colorless graphs)")
+
+
+# ----------------------------------------------------------------------
+# run(): the uniform run loop
+# ----------------------------------------------------------------------
+
+def build_engine(graph, update: UpdateFn, *, scheduler: str = "chromatic",
+                 consistency=None, syncs: Sequence[SyncOp] = (),
+                 n_shards: int = 1, dispatch: str | None = "auto",
+                 max_pending: int | None = None,
+                 max_supersteps: int | None = None, partition=None,
+                 **options):
+    """Construct (but do not run) the engine ``run`` would drive.
+
+    For callers that reuse one engine across invocations — benchmarks
+    timing a warmed jit cache, apps exposing a configured engine —
+    while keeping engine-class selection inside the facade.
+    """
+    if max_pending is not None:
+        options["max_pending"] = max_pending
+    spec = EngineSpec(scheduler=scheduler, n_shards=n_shards,
+                      consistency=consistency, dispatch=dispatch,
+                      max_supersteps=max_supersteps, options=options)
+    return spec.build(graph, update, syncs, partition=partition)
+
+
+def run(graph, update: UpdateFn, *, scheduler: str = "chromatic",
+        consistency=None, syncs: Sequence[SyncOp] = (), n_shards: int = 1,
+        dispatch: str | None = "auto", max_pending: int | None = None,
+        max_supersteps: int | None = None,
+        until: Callable[[dict], bool] | None = None,
+        num_supersteps: int | None = None, active=None,
+        trace=None, partition=None, **options) -> RunResult:
+    """Run ``update`` over ``graph`` under the named scheduler.
+
+    The paper's ``start()``: builds the engine from configuration and
+    drives it to completion.  Termination is the earliest of the task
+    set draining, ``max_supersteps``, an explicit ``num_supersteps``
+    budget, or ``until(sync_globals) -> True`` (termination-by-sync,
+    evaluated before each superstep on the latest sync results).
+
+    ``trace=True`` (or ``trace=fn``) records one entry per superstep —
+    the default record is ``{"superstep", "n_updates", "active",
+    "globals"}``; a callable receives the ``EngineState`` and its
+    return value is recorded instead.  ``until``/``trace`` step the
+    engine superstep by superstep (bit-identical to the fused
+    while-loop run — superstep boundaries are consistent cuts, §8) and
+    are single-device only.
+
+    Per-strategy extras (``k_select=``, ``fifo=``, ``max_pending=``,
+    ``exchange_edges=``, ``snapshot_phases=``, ``use_kernel=``, ...)
+    pass through ``**options`` and are validated against the registry
+    entry — unknown or inapplicable knobs raise ``ValueError``.
+    """
+    if max_pending is not None:
+        options["max_pending"] = max_pending
+    if trace is False:
+        trace = None          # "tracing off", not a trace callable
+    priority = options.pop("priority", None)
+    spec = EngineSpec(scheduler=scheduler, n_shards=n_shards,
+                      consistency=consistency, dispatch=dispatch,
+                      max_supersteps=max_supersteps, options=options)
+    entry = spec.entry
+    if spec.distributed(partition):
+        if until is not None or trace is not None:
+            raise ValueError(
+                "until=/trace= step the engine from the host and are "
+                "single-device only; distributed runs execute one fused "
+                "shard_map program (n_shards=1 supports both)")
+        if priority is not None:
+            raise ValueError("priority= initialization is single-device "
+                             "only (shards derive priority from active)")
+        engine = spec.build(graph, update, syncs, partition=partition)
+        out = engine.run(active=active, num_supersteps=num_supersteps)
+        main = ("vertex_data", "globals", "supersteps", "n_updates",
+                "active_any")
+        return RunResult(
+            vertex_data=out["vertex_data"], edge_data=None,
+            globals=out["globals"], superstep=out["supersteps"],
+            n_updates=out["n_updates"], active_any=out["active_any"],
+            engine=engine,
+            stats={k: v for k, v in out.items() if k not in main})
+
+    engine = spec.build(graph, update, syncs)
+
+    if not entry.stepping:
+        if trace is not None:
+            raise ValueError("trace= needs a stepping engine; the "
+                             "sequential oracle does not support it")
+        if priority is not None:
+            raise ValueError("priority= initialization is engine-only; "
+                             "the sequential oracle derives priorities "
+                             "from the active set")
+        # the sequential oracle: plain-python loop + final task mask
+        vdata, edata, globals_, n_updates, act = engine.run(
+            active=active, num_supersteps=num_supersteps, until=until)
+        return RunResult(vertex_data=vdata, edge_data=edata,
+                         globals=globals_, superstep=None,
+                         n_updates=n_updates,
+                         active_any=bool(np.asarray(act).any()),
+                         engine=engine)
+
+    if until is None and trace is None:
+        state = engine.run(active=active, priority=priority,
+                           num_supersteps=num_supersteps)
+        return _result_from_state(state, engine, None)
+
+    trace_fn = _default_trace if trace is True else trace
+    state = engine.init_state(active, priority)
+    records = [] if trace is not None else None
+    steps = 0
+    while True:
+        if num_supersteps is not None:
+            if steps >= num_supersteps:
+                break
+        elif (not bool(state.active.any())
+              or int(state.superstep) >= engine.max_supersteps):
+            break
+        if until is not None and until(state.globals):
+            break
+        state = engine._step_jit(state)
+        steps += 1
+        if records is not None:
+            records.append(trace_fn(state))
+    return _result_from_state(state, engine, records)
+
+
+def _result_from_state(state: EngineState, engine, trace) -> RunResult:
+    return RunResult(
+        vertex_data=state.vertex_data, edge_data=state.edge_data,
+        globals=state.globals, superstep=int(state.superstep),
+        n_updates=int(state.n_updates),
+        active_any=bool(state.active.any()), state=state, engine=engine,
+        trace=trace)
+
+
+def _default_trace(state: EngineState) -> dict:
+    import jax
+    return {"superstep": int(state.superstep),
+            "n_updates": int(state.n_updates),
+            "active": int(state.active.sum()),
+            "globals": jax.tree.map(np.asarray, state.globals)}

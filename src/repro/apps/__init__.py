@@ -1,2 +1,33 @@
-"""Paper §5 applications expressed as GraphLab update functions."""
-from repro.apps import pagerank, als, coem, lbp, gibbs
+"""Paper §5 applications expressed as GraphLab update functions.
+
+Every app module exposes the same three-part surface:
+
+* ``make_update(...) -> UpdateFn`` — the paper's update function;
+* a graph/problem builder (``make_graph`` for PageRank, a
+  ``synthetic_*`` problem generator elsewhere) plus its sync ops;
+* ``build(...) -> (graph, update, syncs)`` — the uniform triple the
+  ``repro.api`` facade consumes directly:
+
+      from repro import api
+      from repro.apps import pagerank
+
+      graph, update, syncs = pagerank.build(edges, n)
+      result = api.run(graph, update, syncs=syncs, scheduler="chromatic")
+
+Apps never import engine classes: engine selection is the facade's job
+(``scheduler="chromatic" | "priority" | "bsp" | "locking" |
+"sequential"``, DESIGN.md §9).
+"""
+from repro.apps import als, bptf, coem, gibbs, lbp, pagerank
+
+#: name -> uniform ``build(...) -> (graph, update, syncs)`` helper
+BUILDERS = {
+    "pagerank": pagerank.build,
+    "als": als.build,
+    "coem": coem.build,
+    "lbp": lbp.build,
+    "gibbs": gibbs.build,
+    "bptf": bptf.build,
+}
+
+__all__ = ["als", "bptf", "coem", "gibbs", "lbp", "pagerank", "BUILDERS"]

@@ -115,6 +115,15 @@ def synthetic_netflix(n_users: int, n_movies: int, d: int, density: float,
     return ALSProblem(g, n_users, n_movies, d_model, ratings, pairs, noise)
 
 
+def build(problem: ALSProblem, *, lam: float = 0.05, eps: float = 1e-3,
+          tau: int = 1):
+    """Uniform facade triple ``(graph, update, syncs)`` for a problem
+    from ``synthetic_netflix`` (keep the problem around for
+    ``dataset_rmse``)."""
+    return (problem.graph, make_update(problem.d, lam=lam, eps=eps),
+            (rmse_sync(tau),))
+
+
 def dataset_rmse(problem: ALSProblem, vertex_data) -> float:
     """Exact test-style RMSE from factors (oracle for the sync op)."""
     w = np.asarray(vertex_data["w"])

@@ -146,6 +146,15 @@ def synthetic_bptf(n_users: int, n_movies: int, n_times: int, d: int,
                        np.stack([ui, mi, ti], 1), noise)
 
 
+def build(problem: BPTFProblem, *, lam: float = 0.05, eps: float = 1e-3,
+          tau: int = 1):
+    """Uniform facade triple ``(graph, update, syncs)`` for a problem
+    from ``synthetic_bptf`` (the time-table sync is load-bearing: the
+    update reads the global time factors from ``scope.globals``)."""
+    return (problem.graph, make_update(problem.d, lam=lam, eps=eps),
+            (time_table_sync(problem.n_times, problem.d, tau),))
+
+
 def dataset_rmse(problem: BPTFProblem, vertex_data, globals_) -> float:
     w = np.asarray(vertex_data["w"])
     tt = np.asarray(globals_["time_factors"])

@@ -121,6 +121,12 @@ def synthetic_ner(n_phrases: int, n_contexts: int, n_types: int,
                        np.concatenate([pt, ct]))
 
 
+def build(problem: CoEMProblem, *, eps: float = 1e-3, tau: int = 1):
+    """Uniform facade triple ``(graph, update, syncs)`` for a problem
+    from ``synthetic_ner``."""
+    return problem.graph, make_update(eps), (entropy_sync(tau),)
+
+
 def label_accuracy(problem: CoEMProblem, vertex_data) -> float:
     p = np.asarray(vertex_data["p"])
     pred = p.argmax(axis=1)

@@ -78,6 +78,15 @@ def ising_problem(edges: np.ndarray, n_vertices: int, beta: float,
     return IsingProblem(g, beta, field, np.asarray(edges))
 
 
+def build(problem: IsingProblem, *, burn_in: int = 0):
+    """Uniform facade triple ``(graph, update, syncs)`` for a problem
+    from ``ising_problem`` (no syncs: marginal statistics live on the
+    vertices themselves)."""
+    return (problem.graph,
+            make_update(problem.beta, field=problem.field, burn_in=burn_in),
+            ())
+
+
 def marginals(vertex_data) -> np.ndarray:
     ones = np.asarray(vertex_data["ones"])
     n = np.maximum(np.asarray(vertex_data["n"]), 1.0)

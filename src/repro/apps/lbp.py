@@ -130,6 +130,18 @@ def label_accuracy(problem: CoSegProblem, vertex_data) -> float:
     return float((pred == problem.true_labels).mean())
 
 
+def build(problem: CoSegProblem, *, beta: float = 1.0, gamma: float = 2.0,
+          eps: float = 1e-2, use_gmm_sync: bool = True, tau: int = 1):
+    """Uniform facade triple ``(graph, update, syncs)`` for a problem
+    from ``synthetic_coseg``."""
+    upd = make_update(problem.n_labels, beta=beta, gamma=gamma, eps=eps,
+                      use_gmm_sync=use_gmm_sync)
+    n_feat = problem.graph.vertex_data["feat"].shape[1]
+    syncs = ((gmm_sync(problem.n_labels, n_feat, tau),)
+             if use_gmm_sync else ())
+    return problem.graph, upd, syncs
+
+
 def residual_locking_engine(problem: CoSegProblem, eps: float = 1e-2,
                             max_pending: int = 64,
                             max_supersteps: int = 20000,
@@ -139,13 +151,11 @@ def residual_locking_engine(problem: CoSegProblem, eps: float = 1e-2,
     which is exactly the workload that *requires* the locking engine
     (the 3-D grid is colorable, but the priority order isn't a color
     order).  ``max_pending`` is the lock-pipeline depth of Fig. 8(b)."""
-    from repro.core.engine_locking import LockingEngine
-    upd = make_update(problem.n_labels, eps=eps, use_gmm_sync=use_gmm_sync)
-    n_feat = problem.graph.vertex_data["feat"].shape[1]
-    syncs = ([gmm_sync(problem.n_labels, n_feat)] if use_gmm_sync else [])
-    return LockingEngine(problem.graph, upd, syncs=syncs,
-                         max_pending=max_pending,
-                         max_supersteps=max_supersteps)
+    from repro import api
+    graph, upd, syncs = build(problem, eps=eps, use_gmm_sync=use_gmm_sync)
+    return api.build_engine(graph, upd, syncs=syncs, scheduler="locking",
+                            max_pending=max_pending,
+                            max_supersteps=max_supersteps)
 
 
 def distributed_locking_engine(problem: CoSegProblem, n_shards: int,
@@ -156,14 +166,12 @@ def distributed_locking_engine(problem: CoSegProblem, n_shards: int,
     """CoSeg on ``n_shards`` with the distributed locking engine: frame
     partition (or the paper's striped worst case), cut-edge message
     replicas exchanged through the versioned edge sync."""
-    from repro.core.distributed import ShardPlan
-    from repro.core.engine_locking import DistributedLockingEngine
+    from repro import api
     asg_fn = striped_partition if worst_case else frame_partition
-    plan = ShardPlan.build(problem.graph, asg_fn(problem, n_shards),
-                           n_shards)
     upd = make_update(problem.n_labels, eps=eps, use_gmm_sync=False)
-    return DistributedLockingEngine(
-        problem.graph, plan, upd, max_pending=max_pending,
+    return api.build_engine(
+        problem.graph, upd, scheduler="locking", n_shards=n_shards,
+        partition=asg_fn(problem, n_shards), max_pending=max_pending,
         max_supersteps=max_supersteps, exchange_edges=True)
 
 

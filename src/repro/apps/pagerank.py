@@ -70,6 +70,18 @@ def make_graph(edges: np.ndarray, n_vertices: int, seed: int = 0,
     return g.with_colors(greedy_coloring(n_vertices, edges))
 
 
+def build(edges: np.ndarray, n_vertices: int, *, eps: float = 1e-4,
+          seed: int = 0, max_deg: int | None = None, tau: int = 1):
+    """Uniform facade triple: ``(graph, update, syncs)``.
+
+    The syncs are the paper's §3.3 examples (second most popular page +
+    total rank); feed the triple straight to ``repro.api.run``.
+    """
+    graph = make_graph(edges, n_vertices, seed=seed, max_deg=max_deg)
+    syncs = (second_most_popular_sync(tau), total_rank_sync(tau))
+    return graph, make_update(eps), syncs
+
+
 def second_most_popular_sync(tau: int = 1):
     """The paper's §3.3 example sync: second most popular page."""
     return top_two_sync("top2", rank_fn=lambda row: row["rank"], tau=tau)

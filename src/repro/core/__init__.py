@@ -6,8 +6,11 @@ Public API:
     NeighborAggregator, aggregator_update, masked_neighbor_sum
     SyncOp, sum_sync, top_two_sync
     greedy_coloring, distance2_coloring, single_color, bipartite_coloring
+    run, build_engine, EngineSpec, RunResult     (the repro.api facade)
+    list_schedulers, register_scheduler          (the engine registry)
     ExecutorCore, ChromaticEngine, PriorityEngine, bsp_engine,
-    LockingEngine, run_sequential
+    LockingEngine, run_sequential                (deprecated direct path:
+        prefer repro.api.run(..., scheduler=...) — DESIGN.md §9)
     two_phase_partition, random_partition
     ShardPlan, DistributedChromaticEngine, DistributedLockingEngine
 """
@@ -36,3 +39,17 @@ from repro.core.partition import (two_phase_partition, random_partition,
 from repro.core.distributed import ShardPlan, DistributedChromaticEngine
 from repro.core.engine_locking import (DistributedLockingEngine,
                                        LockingEngine)
+from repro.core.registry import (describe_schedulers, get_distributed,
+                                 get_scheduler, list_schedulers,
+                                 register_distributed, register_scheduler)
+
+# The facade (repro.api) is re-exported lazily: api.py imports the
+# engine modules above, so a module-level import here would be a cycle.
+_API_NAMES = ("run", "build_engine", "EngineSpec", "RunResult", "api")
+
+
+def __getattr__(name):
+    if name in _API_NAMES:
+        from repro import api
+        return api if name == "api" else getattr(api, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

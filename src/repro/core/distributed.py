@@ -46,7 +46,9 @@ import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core.exec import (NO_CLAIM, apply_batch, choose_dispatch,
-                             default_interpret, refresh_syncs)
+                             default_interpret, refresh_syncs,
+                             validate_dispatch)
+from repro.core.registry import register_distributed
 from repro.core.graph import (DataGraph, EllRows, SlicedEll, bucket_index,
                               build_sliced_ell, default_bucket_widths,
                               sliced_slot_count)
@@ -453,6 +455,7 @@ class DistributedChromaticEngine:
     dispatch: str = "bucket"
 
     def __post_init__(self):
+        validate_dispatch(self.dispatch)
         if self.graph.colors is None:
             raise ValueError("chromatic engine needs colors; call "
                              "graph.with_colors(...) (the locking engine "
@@ -607,3 +610,8 @@ class DistributedChromaticEngine:
             n_updates=int(n_upd),
             active_any=bool((act & plan.owned_mask).any()),
         )
+
+
+# the locking engine registers its own shard_map variant in
+# repro.core.engine_locking; the two registry halves join at lookup
+register_distributed("chromatic", DistributedChromaticEngine)

@@ -23,6 +23,7 @@ import numpy as np
 from repro.core.coloring import single_color
 from repro.core.engine_chromatic import ChromaticEngine
 from repro.core.graph import DataGraph
+from repro.core.registry import register_scheduler
 from repro.core.sync import SyncOp
 from repro.core.update import UpdateFn
 
@@ -30,6 +31,7 @@ from repro.core.update import UpdateFn
 def bsp_engine(graph: DataGraph, update_fn: UpdateFn,
                syncs: Sequence[SyncOp] = (), max_supersteps: int = 100,
                use_kernel: bool = True,
+               kernel_interpret: bool | None = None,
                dispatch: str = "bucket") -> ChromaticEngine:
     """Strategy: one phase containing every active vertex (trivial color).
 
@@ -38,4 +40,12 @@ def bsp_engine(graph: DataGraph, update_fn: UpdateFn,
     """
     g = graph.with_colors(single_color(graph.n_vertices))
     return ChromaticEngine(g, update_fn, syncs, max_supersteps,
-                           use_kernel=use_kernel, dispatch=dispatch)
+                           use_kernel=use_kernel,
+                           kernel_interpret=kernel_interpret,
+                           dispatch=dispatch)
+
+
+register_scheduler(
+    "bsp", bsp_engine,
+    description="bulk-synchronous Jacobi sweeps (single trivial color); "
+                "NOT sequentially consistent — the Fig. 1 baseline")

@@ -33,6 +33,7 @@ import numpy as np
 # builder were born here and are imported from here by older call sites.
 from repro.core.exec import (EngineState, ExecutorCore,  # noqa: F401
                              build_color_batches)
+from repro.core.registry import register_scheduler
 
 
 @dataclasses.dataclass
@@ -44,6 +45,7 @@ class ChromaticEngine(ExecutorCore):
     dispatch: str = "bucket"
 
     def __post_init__(self):
+        super().__post_init__()
         if self.graph.colors is None:
             raise ValueError("graph needs colors; call graph.with_colors(...)")
         ids, valid = build_color_batches(np.asarray(self.graph.colors))
@@ -54,3 +56,9 @@ class ChromaticEngine(ExecutorCore):
 
     def select(self, c, ctx):
         return self._color_ids[c], self._color_valid[c]
+
+
+register_scheduler(
+    "chromatic", ChromaticEngine, needs_colors=True,
+    description="static per-color sweeps (§4.2.1); sequentially "
+                "consistent for the coloring's consistency model")

@@ -62,8 +62,9 @@ from repro.core.exec import (NO_CLAIM, ExecutorCore,
                              choose_dispatch, claim_winners,
                              default_interpret, refresh_syncs,
                              scope_claims, self_claims,
-                             switch_on_window_width)
+                             switch_on_window_width, validate_dispatch)
 from repro.core.graph import DataGraph
+from repro.core.registry import register_distributed, register_scheduler
 from repro.core.sync import SyncOp
 from repro.core.update import Consistency, UpdateFn
 
@@ -176,6 +177,7 @@ class LockingEngine(ExecutorCore):
     dispatch: str = "auto"
 
     def __post_init__(self):
+        super().__post_init__()
         self.n_phases = 1
 
     def prepare(self, state):
@@ -227,6 +229,7 @@ class DistributedLockingEngine:
     dispatch: str = "auto"
 
     def __post_init__(self):
+        validate_dispatch(self.dispatch)
         if (self.update_fn.consistency == Consistency.FULL
                 and self.plan.M > 1):
             # FULL neighbor writes land on ghost rows; there is no
@@ -482,3 +485,12 @@ class DistributedLockingEngine:
             ghost_rows_sent=int(sent),    # version-filtered traffic
             ghost_rows_full=int(full),    # what a static push would send
         )
+
+
+register_scheduler(
+    "locking", LockingEngine, extras=("max_pending",),
+    description="pipelined reader/writer lock engine (§4.2.2): "
+                "max_pending window + min-id claim winners; needs no "
+                "coloring")
+register_distributed(
+    "locking", DistributedLockingEngine, extras=("max_pending",))

@@ -41,6 +41,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.exec import EngineState, ExecutorCore
+from repro.core.registry import register_scheduler
 
 
 @dataclasses.dataclass
@@ -60,6 +61,7 @@ class PriorityEngine(ExecutorCore):
     dispatch: str = "auto"
 
     def __post_init__(self):
+        super().__post_init__()
         if self.graph.colors is None:
             raise ValueError("graph needs colors; call graph.with_colors(...)")
         self.n_colors = int(np.asarray(self.graph.colors).max()) + 1
@@ -85,3 +87,10 @@ class PriorityEngine(ExecutorCore):
         if not self.fifo:
             return None
         return (state.superstep + 1).astype(jnp.float32)
+
+
+register_scheduler(
+    "priority", PriorityEngine, extras=("k_select", "fifo"),
+    needs_colors=True,
+    description="top-k priority window executed color by color — the "
+                "TPU analogue of the paper's prioritized scheduling")

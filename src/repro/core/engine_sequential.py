@@ -37,6 +37,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.graph import DataGraph
+from repro.core.registry import register_scheduler
 from repro.core.sync import SyncOp
 from repro.core.update import (Consistency, UpdateFn, gather_scopes,
                                scatter_result)
@@ -69,10 +70,27 @@ def run_sequential(
     k_select: int | None = None,
     locking_pending: int | None = None,
     snapshot_phases: bool = False,
+    until=None,
+    return_active: bool = False,
 ):
-    """Returns (vertex_data, edge_data, globals, n_updates)."""
+    """Returns (vertex_data, edge_data, globals, n_updates) —
+    plus the final ``active`` task mask when ``return_active`` (how the
+    facade surfaces ``RunResult.active_any`` without changing this
+    function's long-standing 4-tuple).
+
+    ``until(globals) -> bool`` is the facade's termination-by-sync
+    predicate (paper §3.3 / DESIGN.md §9): evaluated before each
+    superstep on the latest sync results, mirroring the engines'
+    stepping loop (a predicate true at init executes nothing).
+    """
     nv = graph.n_vertices
     if locking_pending is None:
+        if graph.colors is None:
+            raise ValueError(
+                "sequential replay of color-ordered strategies needs a "
+                "colored graph; call graph.with_colors(...) or pass "
+                "locking_pending/max_pending for the colorless locking "
+                "replay")
         colors = np.asarray(graph.colors)
         n_colors = int(colors.max()) + 1 if colors.size else 1
         per_color = [np.nonzero(colors == c)[0] for c in range(n_colors)]
@@ -89,6 +107,10 @@ def run_sequential(
 
     for step in range(max_supersteps):
         if not act.any():
+            break
+        # pre-step, like the facade's stepping loop: a predicate already
+        # true on the current sync results executes no further tasks
+        if until is not None and until(globals_):
             break
         winners = None
         if locking_pending is not None:
@@ -158,4 +180,57 @@ def run_sequential(
         for s in syncs:
             if (step + 1) % max(s.tau, 1) == 0:
                 globals_[s.key] = s.run(vdata)
+    if return_active:
+        return vdata, edata, globals_, n_updates, act
     return vdata, edata, globals_, n_updates
+
+
+class SequentialEngine:
+    """The oracle as a registered strategy behind the ``repro.api``
+    facade: ``scheduler="sequential"`` builds one of these, with the
+    *same* keyword surface as the parallel engines it replays
+    (``k_select`` replays the priority engine's RemoveNext,
+    ``max_pending`` the locking engine's pending window,
+    ``snapshot_phases`` the BSP engine's Jacobi semantics).
+
+    Intentionally unjitted and stateless across runs, exactly like
+    ``run_sequential`` — it exists so facade callers can flip a
+    parallel run to its ground-truth replay by changing one string.
+    """
+
+    def __init__(self, graph: DataGraph, update_fn: UpdateFn,
+                 syncs: Sequence[SyncOp] = (), max_supersteps: int = 100,
+                 k_select: int | None = None,
+                 max_pending: int | None = None,
+                 snapshot_phases: bool = False):
+        self.graph = graph
+        self.update_fn = update_fn
+        self.syncs = syncs
+        self.max_supersteps = max_supersteps
+        self.k_select = k_select
+        self.max_pending = max_pending
+        self.snapshot_phases = snapshot_phases
+
+    def run(self, active: np.ndarray | None = None,
+            num_supersteps: int | None = None, until=None):
+        """Returns (vertex_data, edge_data, globals, n_updates,
+        active) — ``run_sequential``'s tuple plus the final task mask,
+        wrapped into a ``RunResult`` by the facade."""
+        steps = (num_supersteps if num_supersteps is not None
+                 else self.max_supersteps)
+        return run_sequential(
+            self.graph, self.update_fn, syncs=self.syncs, active=active,
+            max_supersteps=steps, k_select=self.k_select,
+            locking_pending=self.max_pending,
+            snapshot_phases=self.snapshot_phases, until=until,
+            return_active=True)
+
+
+register_scheduler(
+    "sequential", SequentialEngine,
+    shared=("max_supersteps",),
+    extras=("k_select", "max_pending", "snapshot_phases"),
+    stepping=False,
+    description="unjitted one-task-at-a-time oracle (Def. 3.1); replays "
+                "chromatic / priority (k_select) / locking (max_pending) "
+                "/ BSP (snapshot_phases) RemoveNext orders")

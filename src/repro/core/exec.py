@@ -234,6 +234,24 @@ def adjacent_claim_winners(struct, ids, sel, claim, claim_ids=None,
 # Update dispatch (dense scopes or the Pallas aggregator fast path)
 # ----------------------------------------------------------------------
 
+DISPATCH_MODES = ("auto", "bucket", "batch")
+
+
+def validate_dispatch(mode: str | None) -> None:
+    """Reject unknown dispatch strings at *construction* time.
+
+    ``choose_dispatch`` also raises, but only once a superstep traces —
+    by which point the typo'd engine has already been handed around.
+    Every engine (and the ``repro.api`` facade validator) funnels its
+    ``dispatch=`` through here in ``__post_init__`` so the error is
+    immediate and names the legal set.
+    """
+    if mode not in (None,) + DISPATCH_MODES:
+        raise ValueError(
+            f"unknown dispatch mode {mode!r}: expected one of "
+            f"{DISPATCH_MODES} (DESIGN.md §8)")
+
+
 def choose_dispatch(mode: str | None, batch_size: int, max_deg: int,
                     sliced_slots: int) -> str:
     """Resolve a dispatch mode to ``"bucket"`` or ``"batch"`` (DESIGN.md §8).
@@ -508,6 +526,10 @@ class ExecutorCore:
 
     # -- strategy interface -------------------------------------------
     n_phases: int = dataclasses.field(init=False, default=1)
+
+    def __post_init__(self):
+        # subclasses with their own __post_init__ chain back via super()
+        validate_dispatch(self.dispatch)
 
     def prepare(self, state: EngineState):
         """Once-per-superstep selection context (e.g. top-k ids)."""

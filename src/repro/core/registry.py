@@ -1,0 +1,186 @@
+"""String-keyed engine registry: scheduler names -> execution strategies.
+
+The paper's C++ API selects execution strategy by *configuration*, not
+by type: ``set_scheduler_type("priority")`` / ``set_scope_type("edge")``
+/ ``start()`` (§3.4-3.5).  After PRs 1-4 this repo had grown six engine
+classes with divergent constructor kwargs, and every caller hand-wired
+its own — the opposite of the paper's one-surface claim.  This module
+restores the configuration form:
+
+* every engine module **self-registers** its strategy here at import
+  time (``register_scheduler`` for the single-device strategy,
+  ``register_distributed`` for its ``shard_map`` variant), declaring
+  the keyword arguments it accepts: the *shared* set every strategy
+  understands plus its declared per-strategy *extras* (``k_select``,
+  ``max_pending``, ...);
+* ``repro.api`` (DESIGN.md §9) resolves a scheduler name through
+  ``get_scheduler``/``get_distributed`` and validates user kwargs
+  against the entry in one place, so a kwarg an engine would silently
+  ignore (``max_pending`` on the chromatic engine, a typo'd
+  ``dispatch=`` string) raises a ``ValueError`` naming the legal set
+  instead of being dropped.
+
+The registry holds no engine imports of its own — engine modules import
+*it*, never the reverse — so import order between strategies and their
+distributed variants is free (the two halves are joined at lookup).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+# Keyword arguments every registered single-device strategy understands
+# (the normalized constructor surface the facade validates against).
+SHARED_KWARGS = ("max_supersteps", "use_kernel", "kernel_interpret",
+                 "dispatch")
+# The distributed variants additionally understand the shard-plan knobs.
+SHARED_DIST_KWARGS = SHARED_KWARGS + ("exchange_edges", "axis")
+
+
+@dataclasses.dataclass(frozen=True)
+class SchedulerEntry:
+    """One registered scheduling strategy.
+
+    ``factory(graph, update_fn, syncs=..., **kwargs)`` builds a runner
+    exposing ``run(active=None, priority=None, num_supersteps=None)``.
+    ``shared + extras`` is the exact keyword surface the facade will
+    accept for this scheduler; anything else is a ``ValueError``.
+    ``stepping`` says the runner is an ``ExecutorCore`` (EngineState /
+    ``_step_jit``), which is what ``until=`` / ``trace=`` stepping
+    needs; the sequential oracle sets it False.
+    """
+    name: str
+    factory: Callable[..., Any]
+    shared: tuple[str, ...] = SHARED_KWARGS
+    extras: tuple[str, ...] = ()
+    needs_colors: bool = False
+    stepping: bool = True
+    description: str = ""
+
+    @property
+    def allowed(self) -> frozenset:
+        return frozenset(self.shared) | frozenset(self.extras)
+
+
+@dataclasses.dataclass(frozen=True)
+class DistributedEntry:
+    """The shard_map variant of a scheduler: ``factory(graph, plan,
+    update_fn, syncs=..., **kwargs)`` over a prebuilt ``ShardPlan``."""
+    name: str
+    factory: Callable[..., Any]
+    shared: tuple[str, ...] = SHARED_DIST_KWARGS
+    extras: tuple[str, ...] = ()
+
+    @property
+    def allowed(self) -> frozenset:
+        return frozenset(self.shared) | frozenset(self.extras)
+
+
+_SCHEDULERS: dict[str, SchedulerEntry] = {}
+_DISTRIBUTED: dict[str, DistributedEntry] = {}
+
+
+def _same_factory(a, b) -> bool:
+    """Identity, or same (module, qualname): ``importlib.reload`` of an
+    engine module re-executes its ``register_*`` call with a *new*
+    class object for the same strategy — that must stay idempotent.
+    Lambdas and nested functions all share qualnames like ``<lambda>``,
+    so for those only identity counts (two different lambdas in one
+    module are different factories)."""
+    if a is b:
+        return True
+    key = lambda f: (getattr(f, "__module__", None),
+                     getattr(f, "__qualname__", None))
+    (ma, qa), (mb, qb) = key(a), key(b)
+    if ma is None or qa is None or "<" in qa:
+        return False
+    return (ma, qa) == (mb, qb)
+
+
+def _guard_duplicate(table: dict, name: str, factory):
+    """Re-registering the same strategy is idempotent and returns the
+    existing entry untouched (so sparse re-registration cannot clobber
+    its metadata); a *different* factory under a taken name is a silent
+    engine swap — exactly the fail-quietly class this registry exists
+    to kill."""
+    prior = table.get(name)
+    if prior is None:
+        return None
+    if _same_factory(prior.factory, factory):
+        return prior
+    raise ValueError(
+        f"scheduler name {name!r} is already registered to "
+        f"{prior.factory!r}; pick a different name")
+
+
+def register_scheduler(name: str, factory: Callable[..., Any], *,
+                       shared: tuple[str, ...] = SHARED_KWARGS,
+                       extras: tuple[str, ...] = (),
+                       needs_colors: bool = False,
+                       stepping: bool = True,
+                       description: str = "") -> SchedulerEntry:
+    prior = _guard_duplicate(_SCHEDULERS, name, factory)
+    if prior is not None:
+        return prior
+    entry = SchedulerEntry(name=name, factory=factory, shared=shared,
+                           extras=extras, needs_colors=needs_colors,
+                           stepping=stepping, description=description)
+    _SCHEDULERS[name] = entry
+    return entry
+
+
+def register_distributed(name: str, factory: Callable[..., Any], *,
+                         shared: tuple[str, ...] = SHARED_DIST_KWARGS,
+                         extras: tuple[str, ...] = ()) -> DistributedEntry:
+    prior = _guard_duplicate(_DISTRIBUTED, name, factory)
+    if prior is not None:
+        return prior
+    entry = DistributedEntry(name=name, factory=factory, shared=shared,
+                             extras=extras)
+    _DISTRIBUTED[name] = entry
+    return entry
+
+
+def _ensure_registered() -> None:
+    """Import the engine modules so their registrations have run.
+
+    Harmless if they are already imported (the common case: anything
+    that touched ``repro.core`` pulled them in); makes a bare
+    ``from repro.core import registry`` self-sufficient.
+    """
+    import repro.core  # noqa: F401  (imports every engine module)
+
+
+def get_scheduler(name: str) -> SchedulerEntry:
+    _ensure_registered()
+    try:
+        return _SCHEDULERS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown scheduler {name!r}; registered schedulers: "
+            f"{', '.join(list_schedulers())}") from None
+
+
+def get_distributed(name: str) -> DistributedEntry:
+    _ensure_registered()
+    if name not in _SCHEDULERS:
+        # same error text as get_scheduler: unknown beats undistributable
+        get_scheduler(name)
+    try:
+        return _DISTRIBUTED[name]
+    except KeyError:
+        raise ValueError(
+            f"scheduler {name!r} has no distributed (n_shards > 1) "
+            f"engine; distributed schedulers: "
+            f"{', '.join(sorted(_DISTRIBUTED))}") from None
+
+
+def list_schedulers() -> list[str]:
+    """Registered scheduler names, sorted (the paper's §3.4 menu)."""
+    _ensure_registered()
+    return sorted(_SCHEDULERS)
+
+
+def describe_schedulers() -> dict[str, str]:
+    _ensure_registered()
+    return {n: _SCHEDULERS[n].description for n in sorted(_SCHEDULERS)}

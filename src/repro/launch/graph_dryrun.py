@@ -23,9 +23,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import api
 from repro.apps import pagerank
-from repro.core import (DistributedChromaticEngine, ShardPlan,
-                        two_phase_partition)
+from repro.core import two_phase_partition
 from repro.roofline import analysis, hlo_parse
 
 
@@ -51,15 +51,14 @@ def main() -> None:
     t0 = time.time()
     g = pagerank.make_graph(edges, nv, max_deg=None)
     asg = two_phase_partition(nv, edges, args.shards, seed=0)
-    plan = ShardPlan.build(g, asg, args.shards)
+    eng = api.build_engine(
+        g, pagerank.make_update(1e-4), scheduler="chromatic",
+        syncs=[pagerank.total_rank_sync()], n_shards=args.shards,
+        partition=asg, max_supersteps=args.supersteps)
+    plan = eng.plan
     print(f"plan: {args.shards} shards, R={plan.R} rows/shard, "
           f"Hv={plan.Hv}, colors={plan.n_colors} "
           f"({time.time() - t0:.1f}s host-side)")
-
-    eng = DistributedChromaticEngine(
-        g, plan, pagerank.make_update(1e-4),
-        syncs=[pagerank.total_rank_sync()],
-        max_supersteps=args.supersteps)
 
     # lower + compile the full run (fixed superstep count)
     t0 = time.time()

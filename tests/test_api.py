@@ -1,0 +1,489 @@
+"""The ``repro.api`` facade (DESIGN.md §9): one paper-shaped entry point.
+
+Three contracts are asserted here:
+
+1. **Facade == direct construction, bit for bit.**  ``api.run(...,
+   scheduler=s)`` must produce byte-identical ``EngineState`` contents
+   to constructing the engine class by hand — for every registered
+   scheduler single-device, and for chromatic + locking on an 8-virtual-
+   device mesh (subprocess, like ``test_locking.py``, because XLA's
+   device count must be set before jax initializes).  The facade is a
+   *router*, never a different execution path.
+2. **Registry round-trip**: every paper scheduler is registered,
+   unknown names raise ``ValueError`` naming the menu, and the shared
+   kwarg validator rejects knobs a strategy would silently ignore
+   (``max_pending`` on chromatic, a typo'd ``dispatch=``).
+3. **Termination-by-sync**: ``until=`` stops the stepping loop exactly
+   where an explicit ``num_supersteps=`` run of the same length lands —
+   superstep boundaries are consistent cuts (§8), so the two are
+   bit-identical.
+"""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro import api
+from repro.apps import pagerank
+from repro.core import (ChromaticEngine, LockingEngine, PriorityEngine,
+                        bsp_engine, run_sequential)
+from conftest import random_graph
+
+
+def _setup(nv=40, ne=90, seed=3, eps=1e-5):
+    g = pagerank.make_graph(random_graph(nv, ne, seed=seed), nv)
+    return g, pagerank.make_update(eps), [pagerank.total_rank_sync()]
+
+
+def _assert_same(res, st):
+    assert np.array_equal(np.asarray(res.vertex_data["rank"]),
+                          np.asarray(st.vertex_data["rank"]))
+    assert res.n_updates == int(st.n_updates)
+    assert res.superstep == int(st.superstep)
+    assert np.array_equal(np.asarray(res.globals["total_rank"]),
+                          np.asarray(st.globals["total_rank"]))
+
+
+# ----------------------------------------------------------------------
+# 1. facade == direct construction (single device)
+# ----------------------------------------------------------------------
+
+def test_facade_chromatic_bitwise_equals_direct():
+    g, upd, syncs = _setup()
+    res = api.run(g, upd, syncs=syncs, scheduler="chromatic",
+                  max_supersteps=200)
+    st = ChromaticEngine(g, upd, syncs=syncs, max_supersteps=200).run()
+    _assert_same(res, st)
+
+
+def test_facade_priority_bitwise_equals_direct():
+    g, upd, syncs = _setup(eps=1e-6)
+    res = api.run(g, upd, syncs=syncs, scheduler="priority", k_select=8,
+                  max_supersteps=5000)
+    st = PriorityEngine(g, upd, syncs=syncs, k_select=8,
+                        max_supersteps=5000).run()
+    _assert_same(res, st)
+
+
+def test_facade_bsp_bitwise_equals_direct():
+    g, upd, syncs = _setup(eps=-1.0)     # always-reschedule: fixed sweeps
+    res = api.run(g, upd, syncs=syncs, scheduler="bsp", num_supersteps=6)
+    st = bsp_engine(g, upd, syncs=syncs).run(num_supersteps=6)
+    _assert_same(res, st)
+
+
+def test_facade_locking_bitwise_equals_direct():
+    g, upd, syncs = _setup(eps=1e-6)
+    res = api.run(g, upd, syncs=syncs, scheduler="locking", max_pending=8,
+                  max_supersteps=5000)
+    st = LockingEngine(g, upd, syncs=syncs, max_pending=8,
+                       max_supersteps=5000).run()
+    _assert_same(res, st)
+
+
+def test_facade_sequential_equals_oracle_function():
+    g, upd, syncs = _setup()
+    res = api.run(g, upd, syncs=syncs, scheduler="sequential",
+                  max_supersteps=60)
+    vd, ed, gl, n = run_sequential(g, upd, syncs=syncs, max_supersteps=60)
+    assert np.array_equal(np.asarray(res.vertex_data["rank"]),
+                          np.asarray(vd["rank"]))
+    assert res.n_updates == n
+    assert res.superstep is None       # the oracle does not count steps
+    assert res.active_any is False     # drained, like the engines report
+    np.testing.assert_array_equal(np.asarray(res.globals["total_rank"]),
+                                  np.asarray(gl["total_rank"]))
+    # an unconverged budget reports a live task set, not a vacuous None
+    res1 = api.run(g, upd, syncs=syncs, scheduler="sequential",
+                   max_supersteps=1)
+    assert res1.active_any is True
+
+
+def test_facade_sequential_replays_locking_window():
+    """scheduler="sequential" + max_pending replays the locking engine's
+    RemoveNext with the *same* kwarg name the engine uses."""
+    g, upd, syncs = _setup()
+    res = api.run(g, upd, syncs=syncs, scheduler="sequential",
+                  max_pending=8, max_supersteps=200)
+    vd, *_rest, n = run_sequential(g, upd, syncs=syncs, max_supersteps=200,
+                                   locking_pending=8)
+    assert np.array_equal(np.asarray(res.vertex_data["rank"]),
+                          np.asarray(vd["rank"]))
+    assert res.n_updates == n
+
+
+def test_engine_spec_build_matches_run():
+    """EngineSpec is the resolved configuration object behind run()."""
+    g, upd, syncs = _setup()
+    spec = api.EngineSpec(scheduler="priority", max_supersteps=5000,
+                          options={"k_select": 8})
+    eng = spec.build(g, upd, syncs)
+    assert isinstance(eng, PriorityEngine)
+    st = eng.run()
+    res = api.run(g, upd, syncs=syncs, scheduler="priority", k_select=8,
+                  max_supersteps=5000)
+    _assert_same(res, st)
+
+
+# ----------------------------------------------------------------------
+# 2. registry round-trip + the shared kwarg validator
+# ----------------------------------------------------------------------
+
+def test_registry_lists_all_paper_schedulers():
+    names = api.list_schedulers()
+    assert names == sorted(names)
+    for s in ("chromatic", "priority", "bsp", "locking", "sequential"):
+        assert s in names
+    desc = api.describe_schedulers()
+    assert all(desc[n] for n in names), "every entry documents itself"
+
+
+def test_unknown_scheduler_raises_with_menu():
+    g, upd, syncs = _setup()
+    with pytest.raises(ValueError, match="chromatic"):
+        api.run(g, upd, scheduler="chromatik")
+
+
+def test_undistributable_scheduler_raises():
+    g, upd, syncs = _setup()
+    with pytest.raises(ValueError, match="no distributed"):
+        api.run(g, upd, scheduler="priority", n_shards=2, k_select=8)
+
+
+@pytest.mark.parametrize("kwargs,match", [
+    (dict(scheduler="chromatic", max_pending=8), "max_pending"),
+    (dict(scheduler="priority", max_pending=8, k_select=8), "max_pending"),
+    (dict(scheduler="bsp", k_select=8), "k_select"),
+    (dict(scheduler="locking", k_select=8), "k_select"),
+    (dict(scheduler="sequential", use_kernel=False), "use_kernel"),
+    (dict(scheduler="chromatic", bogus_knob=1), "bogus_knob"),
+    (dict(scheduler="chromatic", exchange_edges=True), "exchange_edges"),
+])
+def test_inapplicable_kwargs_raise(kwargs, match):
+    """Knobs an engine would silently ignore must fail loudly (the
+    kwarg-drift class the normalization surfaced)."""
+    g, upd, syncs = _setup()
+    with pytest.raises(ValueError, match=match):
+        api.run(g, upd, syncs=syncs, **kwargs)
+
+
+def test_invalid_dispatch_rejected_everywhere():
+    g, upd, syncs = _setup()
+    with pytest.raises(ValueError, match="dispatch"):
+        api.run(g, upd, dispatch="wide")
+    # ... and at direct engine construction (shared validator)
+    with pytest.raises(ValueError, match="dispatch"):
+        ChromaticEngine(g, upd, dispatch="wide")
+    with pytest.raises(ValueError, match="dispatch"):
+        LockingEngine(g, upd, dispatch="wide")
+
+
+def test_invalid_scalar_knobs_rejected():
+    g, upd, syncs = _setup()
+    with pytest.raises(ValueError, match="max_pending"):
+        api.run(g, upd, scheduler="locking", max_pending=0)
+    with pytest.raises(ValueError, match="k_select"):
+        api.run(g, upd, scheduler="priority", k_select=-1)
+    with pytest.raises(ValueError, match="n_shards"):
+        api.run(g, upd, n_shards=0)
+    # bool is an int subclass: a flag must not become a window of 1
+    with pytest.raises(ValueError, match="k_select"):
+        api.run(g, upd, scheduler="priority", k_select=True)
+
+
+def test_registry_rejects_hijacking_a_taken_name():
+    """Re-registering the same strategy is idempotent and keeps the
+    existing entry's metadata; a different factory under a taken name
+    would be a silent engine swap."""
+    from repro.core import ChromaticEngine, register_scheduler
+    # idempotent: what a module reload does — sparse metadata must NOT
+    # clobber the existing entry (description etc. survive)
+    entry = register_scheduler("chromatic", ChromaticEngine)
+    assert entry.description, "prior entry returned untouched"
+    assert api.describe_schedulers()["chromatic"]
+    with pytest.raises(ValueError, match="already registered"):
+        register_scheduler("chromatic", lambda *a, **k: None)
+    # two distinct lambdas share a qualname — identity only, no
+    # silent swap through the reload-idempotency hole
+    register_scheduler("_lambda_probe", lambda *a, **k: "A")
+    try:
+        with pytest.raises(ValueError, match="already registered"):
+            register_scheduler("_lambda_probe", lambda *a, **k: "B")
+    finally:
+        from repro.core.registry import _SCHEDULERS
+        _SCHEDULERS.pop("_lambda_probe", None)
+
+
+def test_explicit_partition_builds_degenerate_distributed_engine():
+    """partition= at n_shards=1 selects the shard_map variant on the
+    M=1 plan (bit-identical to the single-device strategy, asserted in
+    test_locking.py) — how graph_dryrun reaches the distributed code
+    path on one device."""
+    from repro.core import DistributedLockingEngine
+    g, upd, syncs = _setup()
+    eng = api.build_engine(g, upd, scheduler="locking", max_pending=8,
+                           partition=np.zeros(g.n_vertices, np.int64))
+    assert isinstance(eng, DistributedLockingEngine)
+    assert eng.plan.M == 1
+    # a prebuilt plan passes through verbatim (no second ShardPlan.build)
+    eng2 = api.build_engine(g, upd, scheduler="locking", max_pending=8,
+                            partition=eng.plan)
+    assert eng2.plan is eng.plan
+    # ... but a plan whose M contradicts n_shards is rejected
+    with pytest.raises(ValueError, match="n_shards"):
+        api.build_engine(g, upd, scheduler="locking", n_shards=4,
+                         partition=eng.plan)
+
+
+def test_colorless_graph_rejected_early_for_color_schedulers():
+    """needs_colors registry metadata gives the uniform early error."""
+    from repro.core.graph import DataGraph
+    from repro.core import Consistency, UpdateFn, UpdateResult
+    edges = random_graph(20, 40, seed=2)
+    g = DataGraph.from_edges(20, edges, {"x": np.zeros(20, np.float32)})
+    upd = UpdateFn(lambda s: UpdateResult(v_data=s.v_data),
+                   Consistency.VERTEX)
+    for sched in ("chromatic", "priority"):
+        with pytest.raises(ValueError, match="colors"):
+            api.build_engine(g, upd, scheduler=sched)
+    # the sequential oracle's default mode replays color order, so it
+    # too must fail loudly without colors ...
+    with pytest.raises(ValueError, match="color"):
+        api.run(g, upd, scheduler="sequential", max_supersteps=2)
+    # ... while its colorless locking replay works, like the engine
+    api.run(g, upd, scheduler="sequential", max_pending=4,
+            max_supersteps=2)
+    # the locking engine is the documented colorless path
+    api.build_engine(g, upd, scheduler="locking", max_pending=4)
+
+
+def test_facade_dispatch_override_still_bitwise():
+    """Forcing a launch shape through the facade routes to the same
+    dispatch= the engine accepts (cross-path parity, DESIGN.md §8)."""
+    g, upd, syncs = _setup(eps=-1.0)
+    res_bucket = api.run(g, upd, scheduler="bsp", dispatch="bucket",
+                         num_supersteps=4)
+    res_batch = api.run(g, upd, scheduler="bsp", dispatch="batch",
+                        num_supersteps=4)
+    assert np.array_equal(np.asarray(res_bucket.vertex_data["rank"]),
+                          np.asarray(res_batch.vertex_data["rank"]))
+
+
+def test_consistency_override():
+    """consistency= is the paper's set_scope_type: it rewrites the
+    update's declared scope model before the engine sees it."""
+    g, upd, syncs = _setup()
+    res = api.run(g, upd, scheduler="locking", consistency="vertex",
+                  max_pending=4, max_supersteps=10, num_supersteps=1)
+    from repro.core import Consistency
+    assert res.engine.update_fn.consistency == Consistency.VERTEX
+    with pytest.raises(ValueError, match="consistency"):
+        api.run(g, upd, consistency="sorta-safe")
+
+
+# ----------------------------------------------------------------------
+# 3. until= / trace=: the uniform run loop
+# ----------------------------------------------------------------------
+
+def test_until_matches_explicit_superstep_run():
+    """Termination-by-sync lands on a superstep boundary; rerunning the
+    same number of explicit supersteps is bit-identical (§8: superstep
+    boundaries are consistent cuts)."""
+    g, upd, syncs = _setup()
+    full = api.run(g, upd, syncs=syncs, scheduler="chromatic",
+                   max_supersteps=200)
+    # ranks start at 1.0, so total_rank starts at Nv and relaxes toward
+    # the (smaller) fixed point: the halfway mark binds strictly mid-run
+    target = (g.n_vertices + float(full.globals["total_rank"])) / 2
+    pred = lambda gl: float(gl["total_rank"]) < target
+    res_u = api.run(g, upd, syncs=syncs, scheduler="chromatic",
+                    max_supersteps=200, until=pred)
+    assert 0 < res_u.superstep < full.superstep, "predicate binds mid-run"
+    assert float(res_u.globals["total_rank"]) < target
+    res_e = api.run(g, upd, syncs=syncs, scheduler="chromatic",
+                    num_supersteps=res_u.superstep)
+    assert np.array_equal(np.asarray(res_u.vertex_data["rank"]),
+                          np.asarray(res_e.vertex_data["rank"]))
+    assert res_u.n_updates == res_e.n_updates
+    # the previous superstep must NOT satisfy the predicate
+    res_p = api.run(g, upd, syncs=syncs, scheduler="chromatic",
+                    num_supersteps=res_u.superstep - 1)
+    assert float(res_p.globals["total_rank"]) >= target
+
+
+def test_until_matches_locking_engine_run():
+    g, upd, syncs = _setup(eps=1e-6)
+    full = api.run(g, upd, syncs=syncs, scheduler="locking", max_pending=8,
+                   max_supersteps=5000)
+    target = (g.n_vertices + float(full.globals["total_rank"])) / 2
+    pred = lambda gl: float(gl["total_rank"]) < target
+    res_u = api.run(g, upd, syncs=syncs, scheduler="locking", max_pending=8,
+                    max_supersteps=5000, until=pred)
+    assert 0 < res_u.superstep < full.superstep
+    res_e = api.run(g, upd, syncs=syncs, scheduler="locking", max_pending=8,
+                    num_supersteps=res_u.superstep)
+    assert np.array_equal(np.asarray(res_u.vertex_data["rank"]),
+                          np.asarray(res_e.vertex_data["rank"]))
+    assert res_u.n_updates == res_e.n_updates
+
+
+def test_until_respects_drain_and_max_supersteps():
+    g, upd, syncs = _setup()
+    never = lambda gl: False
+    res = api.run(g, upd, syncs=syncs, until=never, max_supersteps=200)
+    st = ChromaticEngine(g, upd, syncs=syncs, max_supersteps=200).run()
+    _assert_same(res, st)          # stepping loop == fused while-loop
+    assert not res.active_any
+
+
+def test_trace_records_every_superstep():
+    g, upd, syncs = _setup()
+    res = api.run(g, upd, syncs=syncs, trace=True, max_supersteps=200)
+    assert len(res.trace) == res.superstep
+    steps = [r["superstep"] for r in res.trace]
+    assert steps == list(range(1, res.superstep + 1))
+    assert res.trace[-1]["active"] == 0
+    # custom trace callables see the EngineState
+    res_c = api.run(g, upd, syncs=syncs, num_supersteps=3,
+                    trace=lambda st: float(st.vertex_data["rank"][0]))
+    assert len(res_c.trace) == 3
+
+
+def test_until_rejected_for_distributed_and_sequential_trace():
+    g, upd, syncs = _setup()
+    with pytest.raises(ValueError, match="single-device"):
+        api.run(g, upd, n_shards=2, until=lambda gl: True)
+    with pytest.raises(ValueError, match="trace"):
+        api.run(g, upd, scheduler="sequential", trace=True)
+
+
+def test_until_on_sequential_oracle():
+    """The oracle honors the same termination-by-sync contract,
+    including pre-step evaluation: a predicate already true on the
+    initial sync results executes nothing, exactly like the engines."""
+    g, upd, syncs = _setup()
+    res = api.run(g, upd, syncs=syncs, scheduler="sequential",
+                  max_supersteps=200,
+                  until=lambda gl: float(gl["total_rank"]) < 48.0)
+    assert float(res.globals["total_rank"]) < 48.0
+    always = lambda gl: True
+    res_s = api.run(g, upd, syncs=syncs, scheduler="sequential",
+                    max_supersteps=200, until=always)
+    res_e = api.run(g, upd, syncs=syncs, scheduler="chromatic",
+                    max_supersteps=200, until=always)
+    assert res_s.n_updates == res_e.n_updates == 0
+
+
+def test_trace_false_means_off():
+    g, upd, syncs = _setup()
+    res = api.run(g, upd, syncs=syncs, trace=False, num_supersteps=2)
+    assert res.trace is None
+    # ... including where an active trace would be rejected
+    res_s = api.run(g, upd, syncs=syncs, scheduler="sequential",
+                    trace=False, max_supersteps=2)
+    assert res_s.trace is None
+
+
+# ----------------------------------------------------------------------
+# facade == direct on an 8-virtual-device mesh (subprocess: XLA_FLAGS
+# must be set before jax initializes; reuses test_locking's harness
+# shape)
+# ----------------------------------------------------------------------
+
+_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import json
+    import numpy as np
+    from repro import api
+    from repro.apps import pagerank
+    from repro.core import (DistributedChromaticEngine,
+                            DistributedLockingEngine, ShardPlan,
+                            two_phase_partition)
+    from repro.core.graph import zipf_edges
+
+    nv = 80
+    edges = zipf_edges(nv, alpha=2.0, max_deg=24, seed=7)
+    g = pagerank.make_graph(edges, nv)
+    upd = pagerank.make_update(1e-4)
+    syncs = [pagerank.total_rank_sync()]
+    asg = two_phase_partition(nv, edges, 8, seed=0)
+    plan = ShardPlan.build(g, asg, 8)
+    out = {}
+
+    # --- chromatic, 8 shards: facade vs direct ---
+    direct = DistributedChromaticEngine(g, plan, upd, syncs=syncs,
+                                        max_supersteps=300).run()
+    res = api.run(g, upd, syncs=syncs, scheduler="chromatic", n_shards=8,
+                  partition=asg, max_supersteps=300)
+    out["chrom_equal"] = bool(np.array_equal(
+        np.asarray(direct["vertex_data"]["rank"]),
+        np.asarray(res.vertex_data["rank"])))
+    out["chrom_counts"] = [direct["n_updates"], res.n_updates,
+                           direct["supersteps"], res.superstep]
+
+    # --- locking, 8 shards: facade vs direct (binding window) ---
+    directl = DistributedLockingEngine(g, plan, upd, syncs=syncs,
+                                       max_pending=8,
+                                       max_supersteps=20000).run()
+    resl = api.run(g, upd, syncs=syncs, scheduler="locking", n_shards=8,
+                   partition=asg, max_pending=8, max_supersteps=20000)
+    out["lock_equal"] = bool(np.array_equal(
+        np.asarray(directl["vertex_data"]["rank"]),
+        np.asarray(resl.vertex_data["rank"])))
+    out["lock_counts"] = [directl["n_updates"], resl.n_updates,
+                          directl["supersteps"], resl.superstep]
+    out["lock_stats"] = [directl["ghost_rows_sent"],
+                         resl.stats["ghost_rows_sent"],
+                         directl["ghost_rows_full"],
+                         resl.stats["ghost_rows_full"]]
+
+    # --- default partition is two_phase_partition over the graph's
+    # stored (bucket-major) edge order, asserted at the plan level:
+    # chromatic *results* are partition-invariant, so comparing ranks
+    # would be vacuous ---
+    eng_dp = api.build_engine(g, upd, syncs=syncs, scheduler="chromatic",
+                              n_shards=8, max_supersteps=300)
+    out["default_partition_matches"] = bool(np.array_equal(
+        np.asarray(eng_dp.plan.assignment),
+        np.asarray(two_phase_partition(nv, g.edges_np, 8, seed=0))))
+
+    print("RESULT:" + json.dumps(out))
+""")
+
+
+@pytest.fixture(scope="module")
+def api_dist_results():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    proc = subprocess.run([sys.executable, "-c", _SCRIPT], env=env,
+                          capture_output=True, text=True, timeout=900)
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    line = [l for l in proc.stdout.splitlines()
+            if l.startswith("RESULT:")][0]
+    return json.loads(line[len("RESULT:"):])
+
+
+@pytest.mark.distributed
+def test_facade_distributed_chromatic_bitwise_equal(api_dist_results):
+    r = api_dist_results
+    assert r["chrom_equal"]
+    du, fu, ds, fs = r["chrom_counts"]
+    assert du == fu and ds == fs
+    assert r["default_partition_matches"], \
+        "facade default must be two_phase_partition(edges_np, seed=0)"
+
+
+@pytest.mark.distributed
+def test_facade_distributed_locking_bitwise_equal(api_dist_results):
+    r = api_dist_results
+    assert r["lock_equal"]
+    du, fu, ds, fs = r["lock_counts"]
+    assert du == fu and ds == fs
+    d_sent, f_sent, d_full, f_full = r["lock_stats"]
+    assert d_sent == f_sent and d_full == f_full, \
+        "RunResult.stats must surface the versioned ghost-sync counts"

@@ -2,19 +2,23 @@
 sequential execution of the same update tasks.
 
 All engines are thin scheduling strategies over the shared executor core
-(``repro.core.exec``); the oracle replays each strategy's RemoveNext —
-(superstep, color, vertex id) for chromatic, top-k priority order for
-the priority engine, phase-snapshot (Jacobi) semantics for BSP.  Results
+(``repro.core.exec``), reached here exclusively through the ``repro.api``
+facade — engine choice and its ground-truth replay are both one
+``scheduler=`` string (DESIGN.md §9).  The ``"sequential"`` scheduler is
+the oracle, replaying each strategy's RemoveNext — (superstep, color,
+vertex id) for chromatic, top-k priority order (``k_select``) for the
+priority engine, the min-id claim pass (``max_pending``) for locking,
+phase-snapshot Jacobi semantics (``snapshot_phases``) for BSP.  Results
 must agree up to float associativity of batched vs single-row arithmetic
-(asserted at 1e-5 rtol; update counts match exactly)."""
+(asserted at 1e-5 rtol; update counts match exactly where the schedule
+is deterministic)."""
 import numpy as np
 import jax.numpy as jnp
 import pytest
 
+from repro import api
 from repro.apps import coem, pagerank
-from repro.core import (ChromaticEngine, Consistency, LockingEngine,
-                        PriorityEngine, UpdateFn, UpdateResult, bsp_engine,
-                        run_sequential)
+from repro.core import Consistency, UpdateFn, UpdateResult
 from repro.core.coloring import distance2_coloring, greedy_coloring
 from repro.core.graph import DataGraph
 from conftest import random_graph
@@ -22,7 +26,7 @@ from conftest import random_graph
 
 @pytest.mark.parametrize("mode", ["chromatic", "priority", "bsp", "locking"])
 def test_engines_match_sequential_oracle(mode):
-    """One oracle, four strategies over the shared executor core."""
+    """One oracle, four strategies — all five through the one facade."""
     edges = random_graph(50, 120, seed=3)
     g = pagerank.make_graph(edges, 50)
     syncs = [pagerank.total_rank_sync()]
@@ -31,61 +35,62 @@ def test_engines_match_sequential_oracle(mode):
         # ties, so the fixed points must be pinned tighter than the
         # shared 1e-5 value assertion below
         upd = pagerank.make_update(1e-6)
-        eng = LockingEngine(g, upd, syncs=syncs, max_pending=8,
-                            max_supersteps=5000)
-        st = eng.run()
-        assert not bool(st.active.any()), "engine must drain tasks"
-        vd, _, gl, n_seq = run_sequential(g, upd, syncs=syncs,
-                                          max_supersteps=5000,
-                                          locking_pending=8)
-        assert n_seq > 0
+        st = api.run(g, upd, syncs=syncs, scheduler="locking",
+                     max_pending=8, max_supersteps=5000)
+        assert not st.active_any, "engine must drain tasks"
+        ref = api.run(g, upd, syncs=syncs, scheduler="sequential",
+                      max_pending=8, max_supersteps=5000)
+        assert ref.n_updates > 0
         # like the priority engine, the adaptive window is order-
         # sensitive to batched-vs-single-row float noise near priority
         # ties; the trajectory still converges identically.
-        assert abs(int(st.n_updates) - n_seq) <= max(8, n_seq // 50)
+        assert abs(st.n_updates - ref.n_updates) \
+            <= max(8, ref.n_updates // 50)
     elif mode == "chromatic":
         upd = pagerank.make_update(1e-5)
-        eng = ChromaticEngine(g, upd, syncs=syncs, max_supersteps=60)
-        st = eng.run()
-        assert not bool(st.active.any()), "engine must drain tasks"
-        vd, _, gl, n_seq = run_sequential(g, upd, syncs=syncs,
-                                          max_supersteps=60)
-        assert int(st.n_updates) == n_seq
+        st = api.run(g, upd, syncs=syncs, scheduler="chromatic",
+                     max_supersteps=60)
+        assert not st.active_any, "engine must drain tasks"
+        ref = api.run(g, upd, syncs=syncs, scheduler="sequential",
+                      max_supersteps=60)
+        assert st.n_updates == ref.n_updates
     elif mode == "priority":
         # eps=1e-6 like the locking mode: legal priority schedules may
         # diverge near ties, so the fixed points must be pinned tighter
         # than the shared 1e-5 value assertion below
         upd = pagerank.make_update(1e-6)
-        eng = PriorityEngine(g, upd, syncs=syncs, k_select=8,
-                             max_supersteps=5000)
-        st = eng.run()
-        assert not bool(st.active.any()), "engine must drain tasks"
-        vd, _, gl, n_seq = run_sequential(g, upd, syncs=syncs,
-                                          max_supersteps=5000, k_select=8)
+        st = api.run(g, upd, syncs=syncs, scheduler="priority",
+                     k_select=8, max_supersteps=5000)
+        assert not st.active_any, "engine must drain tasks"
+        ref = api.run(g, upd, syncs=syncs, scheduler="sequential",
+                      k_select=8, max_supersteps=5000)
         # the adaptive priority schedule is order-sensitive to batched-vs-
         # single-row float noise in the residuals (the engine reduces at
         # bucket widths, the oracle row by row), so the replayed schedule
         # may diverge by a couple percent of tasks near ties; the data
         # graph still converges to the same trajectory.
-        assert abs(int(st.n_updates) - n_seq) <= max(8, n_seq // 50)
+        assert abs(st.n_updates - ref.n_updates) \
+            <= max(8, ref.n_updates // 50)
     else:
         # BSP is *not* sequentially consistent: its ground truth is the
         # phase-snapshot (Jacobi) oracle.  A negative threshold (always
         # reschedule) + fixed sweeps keeps the schedule deterministic
-        # (every vertex, every superstep).
+        # (every vertex, every superstep).  The oracle replays on the
+        # engine's own (single-colored) graph.
         upd = pagerank.make_update(-1.0)
-        eng = bsp_engine(g, upd, syncs=syncs, max_supersteps=30)
-        st = eng.run(num_supersteps=30)
-        vd, _, gl, n_seq = run_sequential(
-            eng.graph, upd, syncs=syncs, max_supersteps=30,
-            snapshot_phases=True)
+        st = api.run(g, upd, syncs=syncs, scheduler="bsp",
+                     num_supersteps=30)
+        ref = api.run(st.engine.graph, upd, syncs=syncs,
+                      scheduler="sequential", snapshot_phases=True,
+                      max_supersteps=30)
         # exact count parity (isolated vertices execute once and are
         # never rescheduled, so this is < 50 * 30)
-        assert int(st.n_updates) == n_seq
+        assert st.n_updates == ref.n_updates
     np.testing.assert_allclose(np.asarray(st.vertex_data["rank"]),
-                               np.asarray(vd["rank"]), rtol=1e-5)
+                               np.asarray(ref.vertex_data["rank"]),
+                               rtol=1e-5)
     np.testing.assert_allclose(float(st.globals["total_rank"]),
-                               float(gl["total_rank"]), rtol=1e-5)
+                               float(ref.globals["total_rank"]), rtol=1e-5)
 
 
 def test_zipf_graph_matches_sequential_oracle():
@@ -101,22 +106,24 @@ def test_zipf_graph_matches_sequential_oracle():
     g = pagerank.make_graph(edges, 120)
     assert g.ell.n_buckets >= 3
     upd = pagerank.make_update(-1.0)
-    st = ChromaticEngine(g, upd, max_supersteps=12).run(num_supersteps=12)
-    vd, _, _, n_seq = run_sequential(g, upd, max_supersteps=12)
+    st = api.run(g, upd, scheduler="chromatic", num_supersteps=12)
+    ref = api.run(g, upd, scheduler="sequential", max_supersteps=12)
     np.testing.assert_allclose(np.asarray(st.vertex_data["rank"]),
-                               np.asarray(vd["rank"]), rtol=1e-5)
-    assert int(st.n_updates) == n_seq
+                               np.asarray(ref.vertex_data["rank"]),
+                               rtol=1e-5)
+    assert st.n_updates == ref.n_updates
 
 
 def test_coem_engine_matches_sequential():
     prob = coem.synthetic_ner(30, 20, 3, seed=2)
     upd = coem.make_update(1e-4)
-    eng = ChromaticEngine(prob.graph, upd, max_supersteps=30)
-    st = eng.run()
-    vd, _, _, n_seq = run_sequential(prob.graph, upd, max_supersteps=30)
+    st = api.run(prob.graph, upd, scheduler="chromatic", max_supersteps=30)
+    ref = api.run(prob.graph, upd, scheduler="sequential",
+                  max_supersteps=30)
     np.testing.assert_allclose(np.asarray(st.vertex_data["p"]),
-                               np.asarray(vd["p"]), rtol=1e-4, atol=1e-6)
-    assert int(st.n_updates) == n_seq
+                               np.asarray(ref.vertex_data["p"]),
+                               rtol=1e-4, atol=1e-6)
+    assert st.n_updates == ref.n_updates
 
 
 def _neighbor_writer():
@@ -139,10 +146,10 @@ def test_full_consistency_needs_distance2_coloring():
 
     def run_with(colors):
         g = DataGraph.from_edges(20, edges, {"x": x0}).with_colors(colors)
-        eng = ChromaticEngine(g, upd, max_supersteps=1)
-        st = eng.run(num_supersteps=1)
-        vd, *_ = run_sequential(g, upd, max_supersteps=1)
-        return (np.asarray(st.vertex_data["x"]), np.asarray(vd["x"]))
+        st = api.run(g, upd, scheduler="chromatic", num_supersteps=1)
+        ref = api.run(g, upd, scheduler="sequential", max_supersteps=1)
+        return (np.asarray(st.vertex_data["x"]),
+                np.asarray(ref.vertex_data["x"]))
 
     # distance-2 coloring: parallel == sequential (full consistency holds)
     got2, want2 = run_with(distance2_coloring(20, edges))
@@ -160,8 +167,7 @@ def test_bsp_engine_is_jacobi():
     edges = np.asarray([[0, 1], [1, 2]])
     g = pagerank.make_graph(edges, 3)
     upd = pagerank.make_update(0.0)
-    eng = bsp_engine(g, upd, max_supersteps=1)
-    st = eng.run(num_supersteps=1)
+    st = api.run(g, upd, scheduler="bsp", num_supersteps=1)
     # Jacobi: every vertex computed from ALL-ones neighbor ranks
     w = np.asarray(g.edge_data["w"])[:-1]
     deg_w = {0: w[0], 1: w[0] + w[1], 2: w[1]}
@@ -171,13 +177,13 @@ def test_bsp_engine_is_jacobi():
 
 
 def test_priority_engine_converges_to_same_fixed_point():
-    from repro.core import PriorityEngine
     edges = random_graph(40, 90, seed=5)
     g = pagerank.make_graph(edges, 40)
     upd = pagerank.make_update(1e-6)
-    chrom = ChromaticEngine(g, upd, max_supersteps=200).run()
-    prio = PriorityEngine(g, upd, k_select=8, max_supersteps=5000).run()
-    assert not bool(prio.active.any()), "priority engine must drain tasks"
+    chrom = api.run(g, upd, scheduler="chromatic", max_supersteps=200)
+    prio = api.run(g, upd, scheduler="priority", k_select=8,
+                   max_supersteps=5000)
+    assert not prio.active_any, "priority engine must drain tasks"
     np.testing.assert_allclose(np.asarray(prio.vertex_data["rank"]),
                                np.asarray(chrom.vertex_data["rank"]),
                                atol=2e-5)
