@@ -14,6 +14,10 @@ import jax
 # BENCH_*.json artifacts in a few minutes.
 SMOKE = False
 
+# Set by ``--w-cap=16,32,64``: hub-splitting cap widths for the graph /
+# dispatch sweeps (None -> each benchmark's default ladder).
+W_CAPS: list[int] | None = None
+
 
 def time_fn(fn, *args, warmup: int = 1, iters: int = 3) -> float:
     """Median wall time per call in microseconds (blocks on device)."""

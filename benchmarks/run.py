@@ -16,6 +16,8 @@ Prints ``name,us_per_call,derived`` CSV rows.
 
 ``--smoke`` runs tiny sizes (CI artifact job); without an explicit
 module it restricts to the BENCH_*.json producers (fig8, kernels).
+``--w-cap=16,32,64`` overrides the hub-splitting caps swept by the
+graph / dispatch benchmarks.
 """
 import sys
 
@@ -27,6 +29,13 @@ def main() -> None:
     args = sys.argv[1:]
     common.SMOKE = "--smoke" in args
     args = [a for a in args if a != "--smoke"]
+    for a in list(args):
+        if a.startswith("--w-cap"):
+            val = a.split("=", 1)[1] if "=" in a else args[args.index(a) + 1]
+            common.W_CAPS = [int(v) for v in val.split(",")]
+            args.remove(a)
+            if "=" not in a:
+                args.remove(val)
     only = args[0] if args else None
     mods = {
         "fig1": fig1_consistency, "fig6ab": fig6_scaling,

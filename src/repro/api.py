@@ -132,6 +132,14 @@ class EngineSpec:
             kwargs["dispatch"] = self.dispatch
         unknown = set(kwargs) - entry.allowed
         if unknown:
+            storage = unknown & {"hub_split", "w_cap", "edge_locality",
+                                 "bucket_widths"}
+            if storage:
+                raise ValueError(
+                    f"{sorted(storage)} are graph-*storage* options, not "
+                    "engine options: pass them to DataGraph.from_edges "
+                    "(or an app builder such as pagerank.build) so the "
+                    "graph is stored split before handing it to run()")
             dist = isinstance(entry, registry.DistributedEntry)
             raise ValueError(
                 f"scheduler {self.scheduler!r}"

@@ -50,7 +50,9 @@ def make_update(eps: float = 1e-4) -> UpdateFn:
 
 
 def make_graph(edges: np.ndarray, n_vertices: int, seed: int = 0,
-               max_deg: int | None = None) -> DataGraph:
+               max_deg: int | None = None, hub_split: bool = False,
+               w_cap: int | None = None,
+               edge_locality: bool = False) -> DataGraph:
     """Build a PageRank data graph with out-degree-normalized weights."""
     rng = np.random.default_rng(seed)
     deg = np.zeros(n_vertices)
@@ -66,18 +68,28 @@ def make_graph(edges: np.ndarray, n_vertices: int, seed: int = 0,
         vertex_data={"rank": np.ones(n_vertices, np.float32)},
         edge_data={"w": w},
         max_deg=max_deg,
+        hub_split=hub_split,
+        w_cap=w_cap,
+        edge_locality=edge_locality,
     )
     return g.with_colors(greedy_coloring(n_vertices, edges))
 
 
 def build(edges: np.ndarray, n_vertices: int, *, eps: float = 1e-4,
-          seed: int = 0, max_deg: int | None = None, tau: int = 1):
+          seed: int = 0, max_deg: int | None = None, tau: int = 1,
+          hub_split: bool = False, w_cap: int | None = None,
+          edge_locality: bool = False):
     """Uniform facade triple: ``(graph, update, syncs)``.
 
     The syncs are the paper's §3.3 examples (second most popular page +
     total rank); feed the triple straight to ``repro.api.run``.
+    ``hub_split=True`` (or an explicit ``w_cap=``) stores the graph with
+    rows wider than ``w_cap`` decomposed into virtual rows; illegal
+    ``w_cap`` values raise ``ValueError`` from ``DataGraph.from_edges``.
     """
-    graph = make_graph(edges, n_vertices, seed=seed, max_deg=max_deg)
+    graph = make_graph(edges, n_vertices, seed=seed, max_deg=max_deg,
+                       hub_split=hub_split, w_cap=w_cap,
+                       edge_locality=edge_locality)
     syncs = (second_most_popular_sync(tau), total_rank_sync(tau))
     return graph, make_update(eps), syncs
 

@@ -50,8 +50,9 @@ from repro.core.exec import (NO_CLAIM, apply_batch, choose_dispatch,
                              validate_dispatch)
 from repro.core.registry import register_distributed
 from repro.core.graph import (DataGraph, EllRows, SlicedEll, bucket_index,
-                              build_sliced_ell, default_bucket_widths,
-                              sliced_slot_count)
+                              build_sliced_ell, build_split_ell,
+                              default_bucket_widths, sliced_slot_count,
+                              split_hub_rows)
 from repro.core.sync import SyncOp
 from repro.core.update import UpdateFn
 
@@ -121,6 +122,17 @@ class ShardPlan:
     local_to_global: np.ndarray  # [M, R] global vertex id or -1
     ledge_to_global: np.ndarray  # [M, E_loc] global edge id or -1
     assignment: np.ndarray       # [Nv]
+    # ---- hub splitting (mirrors SlicedEll; None/defaults unsplit) ----
+    # Virtual rows are shard-local: a hub's chunks never cross a shard
+    # boundary, so every ghost-sync / claim / backflow schedule above
+    # stays in owner-row space, untouched.  Shapes are shard-uniform
+    # (NVirt, chunk count and bucket sizes maxed over shards; dummy
+    # virtual rows are empty and owned by the R sentinel).
+    ell_max_deg: int | None = None       # owner-space width (== D)
+    ell_w_cap: int | None = None
+    ell_n_chunks_max: int = 1
+    ell_owner_of_vrow: jax.Array | None = None   # [M, NVirt]
+    ell_vrow_offset: jax.Array | None = None     # [M, R + 1]
 
     # ------------------------------------------------------------------
     @staticmethod
@@ -295,19 +307,50 @@ class ShardPlan:
         # Bucket shapes must be uniform across shards (SPMD), so each
         # bucket is padded to its max row count over shards; ghost and
         # padding rows carry no slots and land in the first bucket.
-        widths_all = default_bucket_widths(D)
-        slot_cnt = mask_l.sum(axis=-1)                       # [M, R]
-        bidx = bucket_index(widths_all, slot_cnt)
-        counts = np.stack([(bidx == b).sum(axis=1)
-                           for b in range(len(widths_all))], axis=1)
-        sizes_all = counts.max(axis=0)                       # [n_buckets]
-        keep = [b for b in range(len(widths_all)) if sizes_all[b] > 0]
-        kwidths = tuple(widths_all[b] for b in keep)
-        ksizes = [int(sizes_all[b]) for b in keep]
-        ells = [build_sliced_ell(nbrs_l[i], mask_l[i], eids_l[i],
-                                 issrc_l[i], pad_edge=E_loc,
-                                 widths=kwidths, bucket_sizes=ksizes)
-                for i in range(M)]
+        # A hub-split source graph (DESIGN.md §10) splits each shard's
+        # local rows the same way: virtual rows are shard-local (hub
+        # chunks never cross a shard boundary), NVirt / chunk count /
+        # bucket sizes are maxed over shards, and dummy virtual rows
+        # (empty, owned by the R sentinel) pad the difference.
+        w_cap = graph.ell.w_cap
+        if w_cap is not None:
+            splits = [split_hub_rows(nbrs_l[i], mask_l[i], eids_l[i],
+                                     issrc_l[i], E_loc, w_cap)
+                      for i in range(M)]
+            NVirt = max(s[4].shape[0] for s in splits)
+            n_chunks_max = max(int((s[5][1:] - s[5][:-1]).max())
+                               for s in splits)
+            widths_all = default_bucket_widths(w_cap)
+            counts = np.zeros((M, len(widths_all)), np.int64)
+            for i, s in enumerate(splits):
+                cnt = s[1].sum(axis=1)            # chunk slot counts
+                counts[i] = np.bincount(bucket_index(widths_all, cnt),
+                                        minlength=len(widths_all))
+                counts[i, 0] += NVirt - len(cnt)  # dummy virtual rows
+            sizes_all = counts.max(axis=0)
+            keep = [b for b in range(len(widths_all)) if sizes_all[b] > 0]
+            kwidths = tuple(widths_all[b] for b in keep)
+            ksizes = [int(sizes_all[b]) for b in keep]
+            ells = [build_split_ell(nbrs_l[i], mask_l[i], eids_l[i],
+                                    issrc_l[i], pad_edge=E_loc,
+                                    w_cap=w_cap, widths=kwidths,
+                                    bucket_sizes=ksizes, n_virtual=NVirt)
+                    for i in range(M)]
+        else:
+            n_chunks_max = 1
+            widths_all = default_bucket_widths(D)
+            slot_cnt = mask_l.sum(axis=-1)                   # [M, R]
+            bidx = bucket_index(widths_all, slot_cnt)
+            counts = np.stack([(bidx == b).sum(axis=1)
+                               for b in range(len(widths_all))], axis=1)
+            sizes_all = counts.max(axis=0)                   # [n_buckets]
+            keep = [b for b in range(len(widths_all)) if sizes_all[b] > 0]
+            kwidths = tuple(widths_all[b] for b in keep)
+            ksizes = [int(sizes_all[b]) for b in keep]
+            ells = [build_sliced_ell(nbrs_l[i], mask_l[i], eids_l[i],
+                                     issrc_l[i], pad_edge=E_loc,
+                                     widths=kwidths, bucket_sizes=ksizes)
+                    for i in range(M)]
         stack = lambda field: tuple(
             jnp.stack([getattr(ells[i], field)[b] for i in range(M)])
             for b in range(len(kwidths)))
@@ -334,6 +377,13 @@ class ShardPlan:
             trecv_idx=jnp.asarray(trecv_idx),
             local_to_global=local_to_global, ledge_to_global=ledge_to_global,
             assignment=assignment,
+            ell_max_deg=int(D) if w_cap is not None else None,
+            ell_w_cap=int(w_cap) if w_cap is not None else None,
+            ell_n_chunks_max=n_chunks_max,
+            ell_owner_of_vrow=(jnp.stack([e.owner_of_vrow for e in ells])
+                               if w_cap is not None else None),
+            ell_vrow_offset=(jnp.stack([e.vrow_offset for e in ells])
+                             if w_cap is not None else None),
         )
 
     # ------------------------------------------------------------------
@@ -345,21 +395,33 @@ class ShardPlan:
 
     def ell_arrays(self) -> dict:
         """The sliced-ELL device arrays, keyed for a shard_map plan dict."""
-        return dict(
+        out = dict(
             ell_nbrs=self.ell_nbrs, ell_nbr_mask=self.ell_nbr_mask,
             ell_edge_ids=self.ell_edge_ids, ell_is_src=self.ell_is_src,
             ell_perm=self.ell_perm, ell_inv_perm=self.ell_inv_perm)
+        if self.ell_w_cap is not None:
+            out.update(ell_owner_of_vrow=self.ell_owner_of_vrow,
+                       ell_vrow_offset=self.ell_vrow_offset)
+        return out
 
     def local_ell(self, plan_b: dict) -> SlicedEll:
         """Rebuild one shard's ``SlicedEll`` from squeezed plan blocks
-        (inside ``shard_map``, leading M dim removed)."""
+        (inside ``shard_map``, leading M dim removed).  Unsplit, the
+        owner width is the widest stored bucket (bit-compat with the
+        pre-split engine traces); split, it is the explicit owner-space
+        ``ell_max_deg`` — the widest stored bucket is only ``w_cap``."""
         return SlicedEll(
             widths=self.ell_widths, starts=self.ell_starts,
-            n_rows=self.R, max_deg=self.ell_widths[-1],
+            n_rows=self.R,
+            max_deg=(self.ell_widths[-1] if self.ell_max_deg is None
+                     else self.ell_max_deg),
             pad_edge=self.E_loc,
             nbrs=plan_b["ell_nbrs"], nbr_mask=plan_b["ell_nbr_mask"],
             edge_ids=plan_b["ell_edge_ids"], is_src=plan_b["ell_is_src"],
-            perm=plan_b["ell_perm"], inv_perm=plan_b["ell_inv_perm"])
+            perm=plan_b["ell_perm"], inv_perm=plan_b["ell_inv_perm"],
+            w_cap=self.ell_w_cap, n_chunks_max=self.ell_n_chunks_max,
+            owner_of_vrow=plan_b.get("ell_owner_of_vrow"),
+            vrow_offset=plan_b.get("ell_vrow_offset"))
 
     def local_struct(self, plan_b: dict) -> LocalStruct:
         return LocalStruct(self.local_ell(plan_b), plan_b["degree"], self.R)

@@ -186,7 +186,7 @@ class LockingEngine(ExecutorCore):
         _, cand = jax.lax.top_k(score, p)           # [P] pending window
         cand_sel = state.active[cand]
         ell = self.graph.ell
-        mode = choose_dispatch(self.dispatch, p, ell.max_deg,
+        mode = choose_dispatch(self.dispatch, p, ell.widths[-1],
                                ell.padded_slots)
         if mode == "batch":
             win = conflict_winners_windowed(self.graph, cand, cand_sel,

@@ -48,7 +48,7 @@ from repro.core.graph import DataGraph
 from repro.core.sync import SyncOp
 from repro.core.update import UpdateFn, gather_scopes, scatter_result
 from repro.kernels.ell_spmv import (ell_fold, ell_spmv_batched,
-                                    ell_spmv_bucketed)
+                                    ell_spmv_bucketed, segment_combine)
 from repro.kernels.ops import default_interpret
 
 PyTree = Any
@@ -263,13 +263,17 @@ def choose_dispatch(mode: str | None, batch_size: int, max_deg: int,
     launches once at ``[B, W]`` — cost ``B * W``, the right shape for
     the dynamic engines' small scheduler windows (k << Nv).
 
-    ``"auto"`` is the static cost model: the batch path's worst case
-    (every window touches the widest bucket, ``W = max_deg``) against
-    the bucket path's fixed slot count.  Both sides are trace-time
-    constants — batch width ``B`` is the engine's static window size —
-    so the choice never retraces and, because the runtime width only
-    ever undercuts the estimate, "auto" never picks a batch launch
-    costlier than the bucket launch it replaced.
+    ``"auto"`` is the static cost model: the batch path's typical-case
+    worst width (every window touches the widest stored *bucket* —
+    callers pass ``ell.widths[-1]``, which hub splitting bounds by
+    ``W_cap`` instead of ``max_deg``) against the bucket path's fixed
+    slot count.  Both sides are trace-time constants — batch width
+    ``B`` is the engine's static window size — so the choice never
+    retraces.  On a split graph a window that does contain a hub runs
+    its batch launch at ``B * s * W_cap`` chunk slots, costlier than
+    this estimate but still bounded by the window's actual slot work;
+    hub-free windows (the common case on power-law graphs, where hubs
+    are few) only ever undercut the estimate.
     """
     if mode in ("bucket", "batch"):
         return mode
@@ -289,8 +293,36 @@ def route_batch_to_buckets(ell, ids, sel, w, vals=None):
     dispatch paths build their launch inputs this way, so weight
     evaluation happens once, on the batch scope, at batch cost —
     never per graph row.
+
+    On a split graph the batch's owner-space slot arrays are first
+    reshaped into ``[B * n_chunks_max, w_cap]`` chunk pseudo-rows (slot
+    ``j`` of owner row ``i`` is slot ``j % w_cap`` of pseudo-row
+    ``i * n_chunks_max + j // w_cap``) whose positions come from the
+    owner's virtual rows — still one scatter per bucket, landing each
+    hub chunk on its own virtual row.
     """
-    pos = jnp.where(sel, ell.inv_perm[ids], ell.total_rows)
+    if ell.w_cap is not None:
+        wc, S = ell.w_cap, ell.n_chunks_max
+        off = ell.vrow_offset
+        nch = off[ids + 1] - off[ids]
+        k = jnp.arange(S, dtype=jnp.int32)
+        vid = off[ids][:, None] + k
+        ok = sel[:, None] & (k < nch[:, None])
+        pos = jnp.where(
+            ok, ell.inv_perm[jnp.minimum(vid, ell.n_virtual - 1)],
+            ell.total_rows).reshape(-1)                     # [B*S]
+        t, d = S * wc, w.shape[1]
+        if d < t:       # pre-masked: slots past d (and past t) are 0
+            w = jnp.zeros((w.shape[0], t), jnp.float32).at[:, :d].set(w)
+            if vals is not None:
+                vals = jnp.zeros((vals.shape[0], t) + vals.shape[2:],
+                                 jnp.float32).at[:, :d].set(vals)
+        w = w[:, :t].reshape(-1, wc)                        # [B*S, wc]
+        if vals is not None:
+            vals = vals[:, :t].reshape((-1, wc) + vals.shape[2:])
+        sel = ok.reshape(-1)
+    else:
+        pos = jnp.where(sel, ell.inv_perm[ids], ell.total_rows)
     w_blocks, v_blocks = [], []
     for b in range(ell.n_buckets):
         s, e, wb = ell.starts[b], ell.starts[b + 1], ell.widths[b]
@@ -326,7 +358,24 @@ def bucketed_dense_fold(ell, ids, sel, w, vals, interpret: bool):
     ys = [ell_fold(wbuf, vbuf, row_mask=rm, interpret=interpret)
           for wbuf, vbuf, rm in zip(w_blocks, v_blocks, row_masks)]
     y_rows = jnp.concatenate(ys, axis=0)
-    return jnp.where(sel[:, None], y_rows[ell.inv_perm[ids]], 0.0)
+    return _owner_rows(ell, y_rows, ids, sel)
+
+
+def _owner_rows(ell, y_rows, ids, sel):
+    """Bucketed-order stage-1 partials -> ``[B, F]`` owner-row results.
+
+    Unsplit this is the inverse-permutation gather; on a split graph
+    the virtual-row partials first pass through ``segment_combine`` —
+    stage 2 of the hub split (DESIGN.md §10).  Both dispatch paths
+    (kernel and dense fold) exit through this identical op on
+    bitwise-equal stage-1 inputs, which is what carries the bitwise
+    parity invariant across the split.
+    """
+    if ell.w_cap is None:
+        return jnp.where(sel[:, None], y_rows[ell.inv_perm[ids]], 0.0)
+    y_own = segment_combine(y_rows[ell.inv_perm], ell.owner_of_vrow,
+                            ell.n_rows)
+    return jnp.where(sel[:, None], y_own[ids], 0.0)
 
 
 def dispatch_update(struct, update_fn: UpdateFn, vertex_data, edge_data,
@@ -362,21 +411,51 @@ def dispatch_update(struct, update_fn: UpdateFn, vertex_data, edge_data,
         return scope, update_fn(scope)
     if batch_shaped:
         assert rows is not None, "batch-shaped dispatch needs window rows"
+        ell = struct.ell
+        win_w = rows.nbrs.shape[1]
+        # Split graphs: windows snapped past w_cap (they contain a hub)
+        # launch at [B*s, w_cap] chunk pseudo-rows — stage 1 over the
+        # window's virtual rows — then segment_combine chunks back onto
+        # their batch slot (stage 2).  Dense and kernel arms share the
+        # reshape and the combine, so parity is per-shape as ever.
+        n_chunk = (win_w // ell.w_cap
+                   if ell.w_cap is not None and win_w > ell.w_cap else 1)
+
+        def _chunk_rows(a):
+            return a.reshape((-1, win_w // n_chunk) + a.shape[2:])
+
+        def _combine_chunks(y_part, b):
+            seg = jnp.repeat(jnp.arange(b, dtype=jnp.int32), n_chunk)
+            return segment_combine(y_part, seg, b)
+
         if not use_kernel:
             scope = gather_scopes(struct, vertex_data, edge_data, ids,
                                   globals_, rows=rows)
             w = jnp.where(scope.nbr_mask, agg.weight(scope),
                           0.0).astype(jnp.float32)
             vals = agg.feature(scope.nbr_data).astype(jnp.float32)
-            y = ell_fold(w, vals, row_mask=sel, interpret=interpret)
+            if n_chunk == 1:
+                y = ell_fold(w, vals, row_mask=sel, interpret=interpret)
+            else:
+                y_part = ell_fold(_chunk_rows(w), _chunk_rows(vals),
+                                  row_mask=jnp.repeat(sel, n_chunk),
+                                  interpret=interpret)
+                y = _combine_chunks(y_part, w.shape[0])
             return scope, agg.combine(scope, y)
         scope = gather_scopes(struct, vertex_data, edge_data, ids, globals_,
                               with_nbr_data=False, rows=rows)
         x = agg.feature(vertex_data).astype(jnp.float32)
         w = jnp.where(scope.nbr_mask, agg.weight(scope),
                       0.0).astype(jnp.float32)
-        y = ell_spmv_batched(rows.nbrs, w, x, row_mask=sel,
-                             interpret=interpret)
+        if n_chunk == 1:
+            y = ell_spmv_batched(rows.nbrs, w, x, row_mask=sel,
+                                 interpret=interpret)
+        else:
+            y_part = ell_spmv_batched(_chunk_rows(rows.nbrs),
+                                      _chunk_rows(w), x,
+                                      row_mask=jnp.repeat(sel, n_chunk),
+                                      interpret=interpret)
+            y = _combine_chunks(y_part, w.shape[0])
         return scope, agg.combine(scope, y)
     if not use_kernel:
         scope = gather_scopes(struct, vertex_data, edge_data, ids, globals_,
@@ -395,7 +474,7 @@ def dispatch_update(struct, update_fn: UpdateFn, vertex_data, edge_data,
     row_masks = ell.bucket_slices(ell.row_activation(ids, sel))
     y_rows = ell_spmv_bucketed(ell.nbrs, w_blocks, x, row_masks=row_masks,
                                interpret=interpret)
-    y = jnp.where(sel[:, None], y_rows[ell.inv_perm[ids]], 0.0)
+    y = _owner_rows(ell, y_rows, ids, sel)
     return scope, agg.combine(scope, y)
 
 
@@ -422,17 +501,20 @@ def switch_on_window_width(ell, ids, sel, width_fn, operand):
 
     The batch-shaped dispatch trick (DESIGN.md §8): ``lax.switch`` on
     the runtime ``window_bucket`` index over one statically-traced
-    branch per bucket width, so a hub-free window pays ``[B, W]``-shaped
-    gathers and launches instead of ``[B, max_deg]``.  Branch outputs
-    must be width-independent shapes (engine carries, claim arrays,
-    winner masks all are).  Branches contain no collectives, so shards
-    of a distributed engine may resolve different widths independently.
+    branch per scope width (bucket widths, plus chunk-count multiples
+    of ``w_cap`` on a split graph), so a hub-free window pays
+    ``[B, W]``-shaped gathers and launches instead of ``[B, max_deg]``.
+    Branch outputs must be width-independent shapes (engine carries,
+    claim arrays, winner masks all are).  Branches contain no
+    collectives, so shards of a distributed engine may resolve
+    different widths independently.
     """
-    if ell.n_buckets == 1:
-        return width_fn(ell.widths[0])(operand)
+    scope_widths = ell.scope_widths
+    if len(scope_widths) == 1:
+        return width_fn(scope_widths[0])(operand)
     bidx = ell.window_bucket(ids, sel)
     return jax.lax.switch(
-        bidx, [width_fn(w) for w in ell.widths], operand)
+        bidx, [width_fn(w) for w in scope_widths], operand)
 
 
 def apply_batch(struct, update_fn: UpdateFn, carry, ids, valid, globals_,
@@ -564,7 +646,7 @@ class ExecutorCore:
             ids, valid = self.select(c, ctx)
             ell = self.graph.ell
             mode = choose_dispatch(self.dispatch, ids.shape[0],
-                                   ell.max_deg, ell.padded_slots)
+                                   ell.widths[-1], ell.padded_slots)
             return apply_batch(
                 self.graph, self.update_fn, carry, ids, valid,
                 state.globals, sentinel=self.graph.n_vertices,

@@ -98,21 +98,63 @@ class SlicedEll:
     widths: tuple[int, ...]        # ascending bucket widths
     starts: tuple[int, ...]        # len n_buckets+1 position offsets
     n_rows: int                    # addressable rows (Nv or R)
-    max_deg: int                   # widths[-1]
+    max_deg: int                   # widths[-1] (owner max degree if split)
     pad_edge: int                  # edge id stored in padded slots
     # --- per-bucket device blocks ---
     nbrs: tuple[jax.Array, ...]        # [Nv_b, W_b] int32
     nbr_mask: tuple[jax.Array, ...]    # [Nv_b, W_b] bool
     edge_ids: tuple[jax.Array, ...]    # [Nv_b, W_b] int32
     is_src: tuple[jax.Array, ...]      # [Nv_b, W_b] bool
-    # --- the permutation ---
+    # --- the permutation (virtual-row space when split) ---
     perm: jax.Array                # [total_rows] int32 (pad -> n_rows)
     inv_perm: jax.Array            # [n_rows] int32
+    # --- hub splitting (DESIGN.md §10); None/defaults when unsplit ---
+    # Rows wider than ``w_cap`` are chunked into virtual rows of width
+    # <= w_cap; blocks/perm/inv_perm then live in *virtual-row* space
+    # while ``n_rows``/``max_deg`` keep describing owner rows.  Virtual
+    # row v holds owner slots [k*w_cap, (k+1)*w_cap) for its chunk
+    # index k = v - vrow_offset[owner]; a row's virtual rows are the
+    # contiguous id range [vrow_offset[r], vrow_offset[r+1]).
+    w_cap: int | None = None           # chunk width cap (power of two)
+    n_chunks_max: int = 1              # max virtual rows of any owner
+    owner_of_vrow: jax.Array | None = None   # [n_virtual] int32 (pad->n_rows)
+    vrow_offset: jax.Array | None = None     # [n_rows + 1] int32
 
     # ------------------------------------------------------------------
     @property
     def n_buckets(self) -> int:
         return len(self.widths)
+
+    @property
+    def is_split(self) -> bool:
+        return self.w_cap is not None
+
+    @property
+    def n_virtual(self) -> int:
+        """Virtual rows (== addressable rows when unsplit)."""
+        return (self.n_rows if self.owner_of_vrow is None
+                else self.owner_of_vrow.shape[0])
+
+    @property
+    def scope_widths(self) -> tuple[int, ...]:
+        """Owner-space width classes for batch-shaped gathers.
+
+        Unsplit these are the bucket widths.  When split, owner rows
+        wider than ``w_cap`` need multi-chunk gathers, so the ladder
+        continues past the bucket widths with power-of-two chunk
+        multiples ``2*w_cap, 4*w_cap, ...`` up to the first one
+        covering ``max_deg`` — the static widths the window dispatch
+        switch (DESIGN.md §8) compiles against.
+        """
+        if self.w_cap is None:
+            return self.widths
+        ws = list(self.widths)
+        w = self.w_cap * 2
+        while w < self.max_deg:
+            ws.append(w)
+            w *= 2
+        ws.append(w)
+        return tuple(ws)
 
     @property
     def total_rows(self) -> int:
@@ -132,28 +174,45 @@ class SlicedEll:
     def snap_width(self, width: int) -> int:
         """Snap a requested scope width up to the nearest bucket width.
 
-        Width-specialized gathers compile one jit variant per *bucket*
+        Width-specialized gathers compile one jit variant per *scope*
         width (a handful of power-of-two values) instead of one per
         requested window width — the shape-caching contract of the
         batch-shaped dispatch path (DESIGN.md §8).
         """
-        for w in self.widths:
+        for w in self.scope_widths:
             if w >= width:
                 return w
-        return self.widths[-1]
+        return self.scope_widths[-1]
 
     def window_bucket(self, ids: jax.Array, sel: jax.Array) -> jax.Array:
-        """Runtime index of the widest bucket a selected row lives in.
+        """Runtime index (into ``scope_widths``) of the widest width
+        class a selected row needs.
 
         The batch-shaped dispatch path branches on this scalar
-        (``lax.switch`` over the static bucket widths) so a hub-free
+        (``lax.switch`` over the static scope widths) so a hub-free
         window gathers and launches at its own snapped width instead of
-        the global ``max_deg``.  An empty selection reports bucket 0.
+        the global ``max_deg``.  An empty selection reports class 0.
+        When split, single-chunk rows report their virtual-row bucket
+        and multi-chunk (hub) rows report the power-of-two chunk-count
+        class ``n_buckets + log2ceil(n_chunks) - 1``.
         """
-        pos = self.inv_perm[ids]
         bounds = jnp.asarray(self.starts[1:], jnp.int32)
-        b = jnp.searchsorted(bounds, pos, side="right").astype(jnp.int32)
-        return jnp.max(jnp.where(sel, b, 0)).astype(jnp.int32)
+        if self.w_cap is None:
+            pos = self.inv_perm[ids]
+            b = jnp.searchsorted(bounds, pos, side="right").astype(jnp.int32)
+            return jnp.max(jnp.where(sel, b, 0)).astype(jnp.int32)
+        off = self.vrow_offset
+        nch = off[ids + 1] - off[ids]
+        pos0 = self.inv_perm[off[ids]]
+        b_single = jnp.searchsorted(bounds, pos0,
+                                    side="right").astype(jnp.int32)
+        n_wide = len(self.scope_widths) - self.n_buckets
+        chunk_bounds = jnp.asarray([2 << j for j in range(n_wide)],
+                                   jnp.int32)
+        b_wide = self.n_buckets + jnp.searchsorted(
+            chunk_bounds, nch, side="left").astype(jnp.int32)
+        cls = jnp.where(nch > 1, b_wide, b_single)
+        return jnp.max(jnp.where(sel, cls, 0)).astype(jnp.int32)
 
     def rows(self, ids: jax.Array, width: int | None = None) -> EllRows:
         """Materialize ``[B, W]`` adjacency rows (default ``W=max_deg``).
@@ -165,17 +224,54 @@ class SlicedEll:
         padding (mask False, edge id ``pad_edge``).
 
         ``width`` (static) truncates the materialization to the snapped
-        bucket width: buckets wider than ``W`` are skipped entirely, so
-        their rows read as *empty* — callers must guarantee every row
-        they act on sits in a bucket of width <= ``W`` (the
-        ``window_bucket`` switch of the batch dispatch path does).
+        scope width: rows needing wider gathers are skipped entirely,
+        so they read as *empty* — callers must guarantee every row
+        they act on fits a scope width <= ``W`` (the ``window_bucket``
+        switch of the batch dispatch path does).
+
+        When split, rows wider than ``w_cap`` are reassembled from
+        their virtual-row chunks: ``s = W / w_cap`` per-chunk gathers
+        concatenated along the slot axis, so the owner-space view is
+        bitwise the unsplit padded row (the round-trip property in
+        ``tests/test_graph_properties.py``).
         """
-        d = self.max_deg if width is None else self.snap_width(width)
-        pos = self.inv_perm[ids]                       # [B]
-        out_n = jnp.zeros(ids.shape + (d,), jnp.int32)
-        out_m = jnp.zeros(ids.shape + (d,), bool)
-        out_e = jnp.full(ids.shape + (d,), self.pad_edge, jnp.int32)
-        out_s = jnp.zeros(ids.shape + (d,), bool)
+        if self.w_cap is None:
+            d = self.max_deg if width is None else self.snap_width(width)
+            return self._gather_rows(self.inv_perm[ids], d)
+        off = self.vrow_offset
+        nch = off[ids + 1] - off[ids]
+        first = off[ids]
+        if width is not None:
+            d = self.snap_width(width)
+            if d <= self.w_cap:
+                # single-chunk class: hubs (nch > 1) read as empty
+                pos = jnp.where(nch == 1, self.inv_perm[first],
+                                self.total_rows)
+                return self._gather_rows(pos, d)
+            s = d // self.w_cap
+        else:
+            s = -(-self.max_deg // self.w_cap)
+        nv_last = self.n_virtual - 1
+        chunks = []
+        for k in range(s):
+            ok = (k < nch) & (nch <= s)
+            pos = jnp.where(ok,
+                            self.inv_perm[jnp.minimum(first + k, nv_last)],
+                            self.total_rows)
+            chunks.append(self._gather_rows(pos, self.w_cap))
+        out = EllRows(*(jnp.concatenate(fs, axis=-1) for fs in zip(*chunks)))
+        if width is None and s * self.w_cap != self.max_deg:
+            out = EllRows(*(a[..., : self.max_deg] for a in out))
+        return out
+
+    def _gather_rows(self, pos: jax.Array, d: int) -> EllRows:
+        """One gather per bucket of width <= ``d``, selected per row by
+        bucketed-position membership; out-of-range positions (including
+        the ``total_rows`` sentinel) read as padding."""
+        out_n = jnp.zeros(pos.shape + (d,), jnp.int32)
+        out_m = jnp.zeros(pos.shape + (d,), bool)
+        out_e = jnp.full(pos.shape + (d,), self.pad_edge, jnp.int32)
+        out_s = jnp.zeros(pos.shape + (d,), bool)
         for b in range(self.n_buckets):
             s, e, w = self.starts[b], self.starts[b + 1], self.widths[b]
             if w > d:
@@ -198,11 +294,23 @@ class SlicedEll:
         The OOB-sentinel scatter of the task-set algebra: unselected /
         padded batch slots go to the out-of-bounds position so
         ``mode="drop"`` makes the scatter exact even though padded slots
-        alias row 0.
+        alias row 0.  When split, a selected owner activates *all* of
+        its virtual rows (every chunk holds a slice of its scope).
         """
-        pos = jnp.where(sel, self.inv_perm[ids], self.total_rows)
+        if self.w_cap is None:
+            pos = jnp.where(sel, self.inv_perm[ids], self.total_rows)
+            act = jnp.zeros((self.total_rows,), bool)
+            return act.at[pos].set(True, mode="drop")
+        off = self.vrow_offset
+        nch = off[ids + 1] - off[ids]
+        k = jnp.arange(self.n_chunks_max, dtype=jnp.int32)
+        vid = off[ids][..., None] + k
+        ok = sel[..., None] & (k < nch[..., None])
+        pos = jnp.where(ok,
+                        self.inv_perm[jnp.minimum(vid, self.n_virtual - 1)],
+                        self.total_rows)
         act = jnp.zeros((self.total_rows,), bool)
-        return act.at[pos].set(True, mode="drop")
+        return act.at[pos.reshape(-1)].set(True, mode="drop")
 
     def to_padded(self) -> EllRows:
         """The monolithic ``[n_rows, max_deg]`` view — the escape hatch
@@ -213,8 +321,9 @@ class SlicedEll:
 jax.tree_util.register_dataclass(
     SlicedEll,
     data_fields=["nbrs", "nbr_mask", "edge_ids", "is_src", "perm",
-                 "inv_perm"],
-    meta_fields=["widths", "starts", "n_rows", "max_deg", "pad_edge"])
+                 "inv_perm", "owner_of_vrow", "vrow_offset"],
+    meta_fields=["widths", "starts", "n_rows", "max_deg", "pad_edge",
+                 "w_cap", "n_chunks_max"])
 
 
 def bucket_major_edge_order(ell: SlicedEll, n_edges: int) -> np.ndarray:
@@ -324,6 +433,93 @@ def build_sliced_ell(nbrs: np.ndarray, nbr_mask: np.ndarray,
         nbrs=tuple(bn), nbr_mask=tuple(bm), edge_ids=tuple(be),
         is_src=tuple(bs),
         perm=jnp.asarray(perm), inv_perm=jnp.asarray(inv_perm))
+
+
+# ----------------------------------------------------------------------
+# Hub splitting (DESIGN.md §10): virtual rows of width <= w_cap
+# ----------------------------------------------------------------------
+
+def default_w_cap(degrees) -> int:
+    """``W_cap`` heuristic (DESIGN.md §10): the smallest power of two
+    covering the 99th-percentile degree, clamped to [2, 64] — rows past
+    the p99 knee split into chunks, the bulk stay single-chunk."""
+    deg = np.asarray(degrees, dtype=np.int64)
+    target = int(np.quantile(deg, 0.99)) if deg.size else 2
+    w = 2
+    while w < min(max(target, 2), 64):
+        w *= 2
+    return w
+
+
+def split_hub_rows(nbrs: np.ndarray, nbr_mask: np.ndarray,
+                   edge_ids: np.ndarray, is_src: np.ndarray,
+                   pad_edge: int, w_cap: int):
+    """Chunk padded-ELL rows into ``[n_virtual, w_cap]`` virtual rows.
+
+    Row ``r`` with ``c`` real slots (slots are filled contiguously, so
+    the mask is prefix-true) becomes ``ceil(c / w_cap)`` virtual rows —
+    at least one — where chunk ``k`` holds owner slots
+    ``[k*w_cap, (k+1)*w_cap)``.  Concatenating a row's chunks in order
+    (and trimming to the owner width) restores the padded row bitwise:
+    out-of-range columns carry the standard padding values.  Host-side,
+    build-time only.  Returns ``(nbrs, mask, edge_ids, is_src, owner,
+    vrow_offset)`` with ``owner`` int64 ``[n_virtual]`` and
+    ``vrow_offset`` int64 ``[n + 1]``.
+    """
+    n, d = nbrs.shape
+    slot_cnt = nbr_mask.sum(axis=1).astype(np.int64)
+    nchunks = np.maximum(1, -(-slot_cnt // w_cap))
+    vrow_offset = np.zeros(n + 1, dtype=np.int64)
+    np.cumsum(nchunks, out=vrow_offset[1:])
+    owner = np.repeat(np.arange(n, dtype=np.int64), nchunks)
+    chunk = np.arange(len(owner), dtype=np.int64) - vrow_offset[owner]
+    cols = chunk[:, None] * w_cap + np.arange(w_cap, dtype=np.int64)
+    valid = cols < d
+    safe = np.minimum(cols, max(d - 1, 0))
+    rows = owner[:, None]
+    vn = np.where(valid, nbrs[rows, safe], 0).astype(np.int32)
+    vm = valid & nbr_mask[rows, safe]
+    ve = np.where(valid, edge_ids[rows, safe], pad_edge).astype(np.int32)
+    vs = valid & is_src[rows, safe]
+    return vn, vm, ve, vs, owner, vrow_offset
+
+
+def build_split_ell(nbrs: np.ndarray, nbr_mask: np.ndarray,
+                    edge_ids: np.ndarray, is_src: np.ndarray,
+                    pad_edge: int, w_cap: int,
+                    widths: Sequence[int] | None = None,
+                    bucket_sizes: Sequence[int] | None = None,
+                    n_virtual: int | None = None) -> SlicedEll:
+    """Hub-split a padded ELL and bucket the virtual rows.
+
+    The bucket ladder is ``default_bucket_widths(w_cap)`` — every full
+    chunk is exactly ``w_cap`` wide, remainders land in their covering
+    bucket — so the widest stored (and compiled) block is ``w_cap``
+    regardless of skew.  ``bucket_sizes`` / ``n_virtual`` force uniform
+    shapes across shards (``ShardPlan``): dummy virtual rows are empty,
+    owned by the ``n`` sentinel, and land in bucket 0.
+    """
+    n, d = nbrs.shape
+    vn, vm, ve, vs, owner, off = split_hub_rows(
+        nbrs, nbr_mask, edge_ids, is_src, pad_edge, w_cap)
+    if n_virtual is not None:
+        extra = n_virtual - len(owner)
+        assert extra >= 0, "n_virtual below actual virtual-row count"
+        vn = np.concatenate([vn, np.zeros((extra, w_cap), np.int32)])
+        vm = np.concatenate([vm, np.zeros((extra, w_cap), bool)])
+        ve = np.concatenate([ve, np.full((extra, w_cap), pad_edge,
+                                         np.int32)])
+        vs = np.concatenate([vs, np.zeros((extra, w_cap), bool)])
+        owner = np.concatenate([owner, np.full(extra, n, np.int64)])
+    ell = build_sliced_ell(vn, vm, ve, vs, pad_edge=pad_edge,
+                           widths=(default_bucket_widths(w_cap)
+                                   if widths is None else widths),
+                           bucket_sizes=bucket_sizes)
+    return dataclasses.replace(
+        ell, n_rows=n, max_deg=int(d), w_cap=int(w_cap),
+        n_chunks_max=int((off[1:] - off[:-1]).max()) if n else 1,
+        owner_of_vrow=jnp.asarray(owner, jnp.int32),
+        vrow_offset=jnp.asarray(off, jnp.int32))
 
 
 # ----------------------------------------------------------------------
@@ -439,6 +635,8 @@ class DataGraph:
         max_deg: int | None = None,
         bucket_widths: Sequence[int] | None = None,
         edge_locality: bool = True,
+        hub_split: bool = False,
+        w_cap: int | None = None,
     ) -> "DataGraph":
         """Build the sliced-ELL structure from an undirected edge list.
 
@@ -455,7 +653,26 @@ class DataGraph:
         (``edge_perm`` maps back).  Slot order within every adjacency
         row is untouched, so the renumbering is bitwise inert for any
         engine (asserted in ``tests/test_dispatch.py``).
+
+        ``hub_split`` / ``w_cap`` enable hub splitting (DESIGN.md §10):
+        rows wider than ``w_cap`` (a power of two >= 2; default
+        ``default_w_cap`` of the degree distribution) are chunked into
+        virtual rows so no stored block — and no compiled kernel — is
+        wider than ``w_cap``.  Passing ``w_cap`` implies ``hub_split``.
+        A graph whose max degree already fits ``w_cap`` stays unsplit.
         """
+        if w_cap is not None:
+            legal = "a power of two >= 2 (e.g. 2, 4, ..., 64)"
+            if not isinstance(w_cap, (int, np.integer)) or w_cap < 2 \
+                    or (w_cap & (w_cap - 1)):
+                raise ValueError(
+                    f"w_cap={w_cap!r}: legal values are {legal}")
+            hub_split = True
+        if hub_split and bucket_widths is not None:
+            raise ValueError(
+                "hub_split uses the default_bucket_widths(w_cap) ladder; "
+                "legal combinations: bucket_widths alone, or "
+                "hub_split/w_cap alone")
         edges = np.asarray(edges, dtype=np.int64)
         if edges.size == 0:
             edges = edges.reshape(0, 2)
@@ -472,8 +689,14 @@ class DataGraph:
 
         nbrs, mask, eids, is_src = _build_ell_vectorized(
             n_vertices, edges, md)
-        ell = build_sliced_ell(nbrs, mask, eids, is_src, pad_edge=ne,
-                               widths=bucket_widths)
+        if hub_split and w_cap is None:
+            w_cap = default_w_cap(np.maximum(deg, 1))
+        if hub_split and md > w_cap:
+            ell = build_split_ell(nbrs, mask, eids, is_src, pad_edge=ne,
+                                  w_cap=int(w_cap))
+        else:
+            ell = build_sliced_ell(nbrs, mask, eids, is_src, pad_edge=ne,
+                                   widths=bucket_widths)
 
         edge_data = {} if edge_data is None else edge_data
         if edge_locality and ne:

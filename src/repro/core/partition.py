@@ -120,6 +120,29 @@ def two_phase_partition(n_vertices: int, edges: np.ndarray, n_machines: int,
     return machine_of_atom[atom_of]
 
 
+def split_slot_weight(degrees: np.ndarray, w_cap: int) -> np.ndarray:
+    """Per-vertex slot cost under hub splitting, for ``vertex_weight=``.
+
+    With rows wider than ``w_cap`` chunked into virtual rows
+    (``graph.split_hub_rows``), a vertex's storage/compute footprint on
+    its shard is the padded slots of its chunks — full chunks cost
+    exactly ``w_cap``, the remainder rounds up to its covering
+    power-of-two bucket — not its raw degree.  Feeding this to
+    ``two_phase_partition`` balances shards by post-split work, so one
+    hub no longer forces its whole ``max_deg`` onto a single machine's
+    load estimate.
+    """
+    deg = np.maximum(np.asarray(degrees, dtype=np.int64), 1)
+    if w_cap < 2 or (w_cap & (w_cap - 1)):
+        raise ValueError(
+            f"w_cap={w_cap!r}: legal values are a power of two >= 2 "
+            "(e.g. 2, 4, ..., 64)")
+    full, rem = deg // w_cap, deg % w_cap
+    # smallest power of two covering the remainder (0 -> no extra chunk)
+    rem_pad = np.where(rem > 0, 2 ** np.ceil(np.log2(np.maximum(rem, 2))), 0)
+    return (full * w_cap + rem_pad.astype(np.int64)).astype(np.int64)
+
+
 def random_partition(n_vertices: int, n_machines: int, seed: int = 0) -> np.ndarray:
     """The paper's baseline for dense bipartite graphs (Netflix, NER)."""
     rng = np.random.default_rng(seed)

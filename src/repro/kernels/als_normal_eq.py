@@ -50,6 +50,13 @@ def als_normal_eq_bucketed(nbrs_blocks, mask_blocks, ratings_blocks,
     accumulation work is the sliced slot count instead of
     ``Nv * max_deg``.  Returns ``(A [sum Nv_b, d, d], b [sum Nv_b, d])``
     in bucketed row order.
+
+    Under hub splitting the blocks are *virtual-row* slices and this
+    function needs no change: the A/b accumulations are linear in the
+    occupied slots, so summing each hub's chunk partials with
+    ``segment_combine(A, owner_of_vrow, n_rows)`` (and likewise for b)
+    reproduces the unsplit row accumulation exactly — same adds in the
+    same per-chunk order as an unsplit slot unroll.
     """
     d = x.shape[1]
     As, bs = [], []

@@ -182,6 +182,26 @@ def ell_spmv_batched(nbrs: jax.Array, w: jax.Array, x: jax.Array,
     return ell_spmv(nbrs, w, x, row_mask=row_mask, interpret=interpret)
 
 
+def segment_combine(y: jax.Array, seg_ids: jax.Array,
+                    n_rows: int) -> jax.Array:
+    """Hub-splitting stage 2 (DESIGN.md §10): sum virtual-row partials
+    onto their owner rows, ``out[r] = sum_{v: seg_ids[v]==r} y[v]``.
+
+    ``y`` is ``[n_virtual, ...]`` stage-1 partials (SpMV rows, or the
+    ALS ``[n_virtual, d, d]`` normal-equation blocks — anything whose
+    accumulation is linear in slots), ``seg_ids`` the owner map with
+    the out-of-range ``n_rows`` sentinel on dummy/padding virtual rows,
+    which ``mode="drop"`` discards.  One XLA scatter-add, deliberately
+    *not* a Pallas kernel: the segment axis is tiny (``n_virtual`` is
+    within 2x of ``n_rows``) and both dispatch paths — kernel and dense
+    fallback — call this identical op on bitwise-equal stage-1 inputs,
+    so same-shape bitwise parity is inherited for free (§10's parity
+    argument).
+    """
+    out = jnp.zeros((n_rows,) + y.shape[1:], y.dtype)
+    return out.at[seg_ids].add(y, mode="drop")
+
+
 def ell_fold(w: jax.Array, vals: jax.Array,
              row_mask: jax.Array | None = None,
              interpret: bool = False) -> jax.Array:

@@ -14,6 +14,7 @@ from repro.kernels import ref
 from repro.kernels.ell_spmv import ell_spmv as _ell_spmv_kernel
 from repro.kernels.ell_spmv import ell_spmv_batched as _ell_spmv_batched
 from repro.kernels.ell_spmv import ell_spmv_bucketed as _ell_spmv_bucketed
+from repro.kernels.ell_spmv import segment_combine as _segment_combine
 from repro.kernels.als_normal_eq import als_normal_eq as _als_kernel
 from repro.kernels.als_normal_eq import (
     als_normal_eq_batched as _als_batched)
@@ -47,6 +48,12 @@ def ell_spmv_batched(nbrs, w, x, row_mask=None):
     """Window-shaped SpMV: one [B, W] launch over a gathered scope."""
     return _ell_spmv_batched(nbrs, w, x, row_mask=row_mask,
                              interpret=_interpret())
+
+
+def segment_combine(y, seg_ids, n_rows: int):
+    """Hub-splitting stage 2: virtual-row partials -> owner rows
+    (identical op on both dispatch paths; see kernels/ell_spmv.py)."""
+    return _segment_combine(y, seg_ids, n_rows)
 
 
 def als_normal_eq(nbrs, mask, ratings, x, use_pallas: bool = True):

@@ -171,6 +171,29 @@ def test_inapplicable_kwargs_raise(kwargs, match):
         api.run(g, upd, syncs=syncs, **kwargs)
 
 
+@pytest.mark.split
+def test_storage_kwargs_redirect_to_from_edges():
+    """``w_cap=``/``hub_split=`` are graph-storage choices: the facade
+    rejects them with a pointer to ``from_edges`` (where the legal-set
+    validation lives), and a split graph runs through ``api.run``
+    bitwise-equal to its direct-engine construction."""
+    g, upd, syncs = _setup()
+    for kw in (dict(w_cap=8), dict(hub_split=True)):
+        with pytest.raises(ValueError, match="from_edges"):
+            api.run(g, upd, **kw)
+    with pytest.raises(ValueError, match="power of two"):
+        pagerank.make_graph(g.edges_np, g.n_vertices, w_cap=12)
+    from repro.core.graph import zipf_edges
+    edges = zipf_edges(120, alpha=2.0, max_deg=32, seed=3)
+    gs = pagerank.make_graph(edges, 120, w_cap=8)
+    assert gs.ell.is_split
+    res = api.run(gs, upd, scheduler="chromatic", max_supersteps=60)
+    direct = ChromaticEngine(gs, upd, max_supersteps=60).run()
+    assert np.array_equal(np.asarray(res.vertex_data["rank"]),
+                          np.asarray(direct.vertex_data["rank"]))
+    assert res.n_updates == int(direct.n_updates)
+
+
 def test_invalid_dispatch_rejected_everywhere():
     g, upd, syncs = _setup()
     with pytest.raises(ValueError, match="dispatch"):

@@ -27,9 +27,9 @@ from repro.core.coloring import greedy_coloring
 from repro.core.graph import DataGraph, zipf_edges
 
 
-def _zipf_setup(nv=150, max_deg=48, seed=9):
+def _zipf_setup(nv=150, max_deg=48, seed=9, w_cap=None):
     edges = zipf_edges(nv, alpha=2.0, max_deg=max_deg, seed=seed)
-    g = pagerank.make_graph(edges, nv)
+    g = pagerank.make_graph(edges, nv, w_cap=w_cap)
     assert g.ell.n_buckets >= 3          # several width branches in play
     return g, pagerank.make_update(1e-6)
 
@@ -101,6 +101,70 @@ def test_auto_threshold_selects_by_window_size(monkeypatch):
     assert calls["bucketed"] and not calls["batched"]
 
 
+@pytest.mark.split
+def test_auto_threshold_on_split_graph(monkeypatch):
+    """Post-split cost model: the batch path's worst case is
+    ``B * W_cap``, not ``B * max_deg``.  On a split graph the engines
+    feed ``ell.widths[-1]`` (== W_cap) to ``choose_dispatch``, so the
+    same k=8 / k=Nv pinning holds even though ``max_deg`` would have
+    flipped the k=8 window to bucket under the old model."""
+    g, upd = _zipf_setup(w_cap=8)
+    ell = g.ell
+    assert ell.is_split and ell.widths[-1] == 8 < ell.max_deg
+    # the width the engines actually pass post-split
+    assert choose_dispatch("auto", 8, ell.widths[-1],
+                           ell.padded_slots) == "batch"
+    assert choose_dispatch("auto", g.n_vertices, ell.widths[-1],
+                           ell.padded_slots) == "bucket"
+    # the old max_deg-based estimate misprices a mid-size window: at
+    # B=32 the true batch cost (B * W_cap) undercuts the slot count but
+    # B * max_deg would have flipped it to bucket
+    assert choose_dispatch("auto", 32, ell.widths[-1],
+                           ell.padded_slots) == "batch"
+    assert choose_dispatch("auto", 32, ell.max_deg,
+                           ell.padded_slots) == "bucket"
+
+    calls = {"batched": 0, "bucketed": 0}
+    real_b, real_r = exec_mod.ell_spmv_batched, exec_mod.ell_spmv_bucketed
+    monkeypatch.setattr(exec_mod, "ell_spmv_batched",
+                        lambda *a, **k: (calls.__setitem__(
+                            "batched", calls["batched"] + 1),
+                            real_b(*a, **k))[1])
+    monkeypatch.setattr(exec_mod, "ell_spmv_bucketed",
+                        lambda *a, **k: (calls.__setitem__(
+                            "bucketed", calls["bucketed"] + 1),
+                            real_r(*a, **k))[1])
+    PriorityEngine(g, upd, k_select=8, dispatch="auto",
+                   max_supersteps=10).run(num_supersteps=1)
+    assert calls["batched"] and not calls["bucketed"]
+    calls.update(batched=0, bucketed=0)
+    PriorityEngine(g, upd, k_select=g.n_vertices, dispatch="auto",
+                   max_supersteps=10).run(num_supersteps=1)
+    assert calls["bucketed"] and not calls["batched"]
+
+
+@pytest.mark.split
+@pytest.mark.parametrize("mode", ["chromatic", "priority", "bsp", "locking"])
+def test_split_dispatch_paths_bitwise_identical(mode):
+    """The PR-4 acceptance invariant survives hub splitting: with rows
+    chunked at W_cap=8, {batch, bucket} x {kernel, dense} still produce
+    four bit-identical runs per engine (stage-1 partials are combined
+    by the same ``segment_combine`` op on every path)."""
+    g, upd = _zipf_setup(w_cap=8)
+    assert g.ell.is_split
+    ref = _run(mode, g, upd, "bucket", use_kernel=True)
+    for dispatch in ("batch", "bucket"):
+        for use_kernel in (True, False):
+            st = _run(mode, g, upd, dispatch, use_kernel)
+            assert np.array_equal(np.asarray(st.vertex_data["rank"]),
+                                  np.asarray(ref.vertex_data["rank"])), \
+                (dispatch, use_kernel)
+            assert np.array_equal(np.asarray(st.active),
+                                  np.asarray(ref.active))
+            assert int(st.n_updates) == int(ref.n_updates)
+            assert int(st.superstep) == int(ref.superstep)
+
+
 def test_locking_windowed_claim_pass_matches_full_width():
     """The batch-shaped claim pass (snapped-width candidate gathers)
     grants exactly the same winner batches as the full-width pass —
@@ -154,6 +218,39 @@ def test_edge_locality_reorder_is_bitwise_inert(mode):
     np.testing.assert_array_equal(
         np.asarray(st_on.edge_data["w"])[:-1][g_on.edge_inv_perm],
         np.asarray(st_off.edge_data["w"])[:-1])
+
+
+@pytest.mark.split
+@pytest.mark.parametrize("mode", ["chromatic", "priority", "bsp", "locking"])
+def test_edge_locality_composes_with_split(mode):
+    """Bucket-major edge renumbering walks the *virtual-row* blocks on
+    a split graph — a hub's chunks get contiguous edge slots — and is
+    still bitwise inert for every engine."""
+    nv = 100
+    edges = zipf_edges(nv, alpha=2.0, max_deg=32, seed=5)
+    w = _normalized_weights(nv, edges)
+    colors = greedy_coloring(nv, edges)   # shared: coloring sees one order
+    upd = pagerank.make_update(1e-6)
+
+    def build(locality):
+        g = DataGraph.from_edges(
+            nv, edges, {"rank": np.ones(nv, np.float32)}, {"w": w},
+            w_cap=8, edge_locality=locality)
+        assert g.ell.is_split
+        return g.with_colors(colors)
+
+    g_on, g_off = build(True), build(False)
+    assert not np.array_equal(g_on.edge_perm, g_off.edge_perm)
+    for dispatch in ("batch", "bucket"):
+        st_on = _run(mode, g_on, upd, dispatch)
+        st_off = _run(mode, g_off, upd, dispatch)
+        assert np.array_equal(np.asarray(st_on.vertex_data["rank"]),
+                              np.asarray(st_off.vertex_data["rank"])), dispatch
+        assert int(st_on.n_updates) == int(st_off.n_updates)
+        # edge rows correspond through the stored permutation
+        np.testing.assert_array_equal(
+            np.asarray(st_on.edge_data["w"])[:-1][g_on.edge_inv_perm],
+            np.asarray(st_off.edge_data["w"])[:-1])
 
 
 # The hypothesis property ("the dispatcher's choice never changes

@@ -80,16 +80,71 @@ _SCRIPT = textwrap.dedent("""
 """)
 
 
-@pytest.fixture(scope="module")
-def dist_results():
+_SPLIT_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import json
+    import numpy as np
+    from repro.apps import pagerank
+    from repro.core import (ChromaticEngine, ShardPlan,
+                            DistributedChromaticEngine, two_phase_partition)
+    from repro.core.engine_locking import (LockingEngine,
+                                           DistributedLockingEngine)
+    from repro.core.graph import zipf_edges
+
+    out = {}
+    nv = 80
+    edges = zipf_edges(nv, alpha=2.0, max_deg=32, seed=7)
+    g = pagerank.make_graph(edges, nv, w_cap=8)
+    assert g.ell.is_split
+    upd = pagerank.make_update(1e-4)
+
+    asg = two_phase_partition(nv, edges, 8, seed=0)
+    plan = ShardPlan.build(g, asg, 8)
+    out["plan_split"] = plan.ell_w_cap == 8 and plan.ell_max_deg is not None
+
+    # chromatic: the per-shard virtual rows are invisible — bitwise
+    st = ChromaticEngine(g, upd, max_supersteps=80).run()
+    res = DistributedChromaticEngine(g, plan, upd, max_supersteps=80).run()
+    out["chrom_equal"] = bool(np.array_equal(
+        np.asarray(st.vertex_data["rank"]),
+        np.asarray(res["vertex_data"]["rank"])))
+    out["chrom_updates"] = [int(st.n_updates), res["n_updates"]]
+
+    # locking: bitwise under the saturating-window contract
+    # (tests/test_locking.py) — single max_pending=nv vs distributed
+    # max_pending=plan.R schedule every runnable vertex each superstep
+    sl = LockingEngine(g, upd, max_pending=nv, max_supersteps=3000).run()
+    dl = DistributedLockingEngine(g, plan, upd, max_pending=plan.R,
+                                  max_supersteps=3000).run()
+    out["lock_equal"] = bool(np.array_equal(
+        np.asarray(sl.vertex_data["rank"]),
+        np.asarray(dl["vertex_data"]["rank"])))
+    out["lock_updates"] = [int(sl.n_updates), dl["n_updates"]]
+
+    print("RESULT:" + json.dumps(out))
+""")
+
+
+def _run_subprocess(script):
     env = dict(os.environ)
     env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
-    proc = subprocess.run([sys.executable, "-c", _SCRIPT], env=env,
+    proc = subprocess.run([sys.executable, "-c", script], env=env,
                           capture_output=True, text=True, timeout=900)
     assert proc.returncode == 0, proc.stderr[-3000:]
     line = [l for l in proc.stdout.splitlines()
             if l.startswith("RESULT:")][0]
     return json.loads(line[len("RESULT:"):])
+
+
+@pytest.fixture(scope="module")
+def dist_results():
+    return _run_subprocess(_SCRIPT)
+
+
+@pytest.fixture(scope="module")
+def dist_split_results():
+    return _run_subprocess(_SPLIT_SCRIPT)
 
 
 def test_distributed_pagerank_bitwise_equal(dist_results):
@@ -106,3 +161,25 @@ def test_distributed_coem_equal(dist_results):
 def test_distributed_lbp_with_edge_exchange(dist_results):
     assert dist_results["lbp_maxdiff"] < 1e-4
     assert dist_results["lbp_updates"][0] == dist_results["lbp_updates"][1]
+
+
+@pytest.mark.split
+def test_distributed_split_chromatic_bitwise(dist_split_results):
+    """8 shards over a split Zipf graph: each shard rebuilds its hub
+    chunks locally (ghost rows are one empty vrow), so the chromatic
+    run is bitwise equal to single-device, update counts included."""
+    assert dist_split_results["plan_split"]
+    assert dist_split_results["chrom_equal"]
+    assert (dist_split_results["chrom_updates"][0]
+            == dist_split_results["chrom_updates"][1])
+
+
+@pytest.mark.split
+def test_distributed_split_locking_bitwise(dist_split_results):
+    """Locking on the split plan under the saturating-window contract
+    (single max_pending=nv vs distributed max_pending=plan.R — the
+    bitwise regime test_locking.py pins): the claim pass runs in owner
+    space, untouched by virtual rows."""
+    assert dist_split_results["lock_equal"]
+    assert (dist_split_results["lock_updates"][0]
+            == dist_split_results["lock_updates"][1])

@@ -74,6 +74,49 @@ def test_sliced_ell_roundtrip_property(g):
     assert sorted(perm[perm < nv].tolist()) == list(range(nv))
 
 
+@pytest.mark.split
+@given(graphs(), st.sampled_from([2, 4, 8]))
+@settings(max_examples=40, deadline=None)
+def test_split_unsplit_roundtrip_property(g, w_cap):
+    """Hub splitting is storage-only (DESIGN.md §10): for arbitrary
+    random graphs and caps, the split layout's ``to_padded()`` is
+    bit-identical to the unsplit layout's, and summing each owner's
+    virtual-row slot aggregates reproduces the per-row aggregate
+    bit-identically (same adds, same order)."""
+    nv, edges = g
+    if len(edges) == 0:
+        return
+    vd = {"x": np.zeros(nv, np.float32)}
+    g0 = DataGraph.from_edges(nv, edges, vd, edge_locality=False)
+    gs = DataGraph.from_edges(nv, edges, vd, w_cap=w_cap,
+                              edge_locality=False)
+    for a, b in zip(gs.to_padded(), g0.to_padded()):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    if not gs.ell.is_split:
+        return                      # max_deg <= cap: stored unsplit
+    # per-row aggregate parity: sum of x[nbr]*w over each vrow's slots,
+    # combined per owner, equals the unsplit per-row reduction exactly
+    from repro.kernels.ell_spmv import segment_combine
+    rng = np.random.default_rng(nv * 1000 + len(edges))
+    # small-integer features: every partial and total sum is exactly
+    # representable in float32, so reassociating chunk partials is
+    # bitwise-exact, not merely allclose
+    x = jnp.asarray(rng.integers(-8, 8, size=(nv + 1, 1)), jnp.float32)
+    ell = gs.ell
+    parts = []
+    for b in range(ell.n_buckets):
+        nb = jnp.minimum(ell.nbrs[b], nv)
+        wts = jnp.where(ell.nbr_mask[b], 1.0, 0.0)
+        parts.append((x[nb][..., 0] * wts).sum(axis=1))
+    y_pos = jnp.concatenate(parts)                 # bucketed row order
+    y_vrow = y_pos[jnp.asarray(ell.inv_perm)]      # virtual-row order
+    y_own = segment_combine(y_vrow, ell.owner_of_vrow, nv)
+    p0 = g0.to_padded()
+    w0 = jnp.where(p0.nbr_mask, 1.0, 0.0)
+    y0 = (x[jnp.minimum(p0.nbrs, nv)][..., 0] * w0).sum(axis=1)
+    np.testing.assert_array_equal(np.asarray(y_own), np.asarray(y0))
+
+
 def test_bipartite_and_grid_helpers():
     nv, edges = bipartite_edges(3, 4, np.asarray([[0, 0], [2, 3]]))
     assert nv == 7

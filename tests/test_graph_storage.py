@@ -182,6 +182,127 @@ def test_width_specialized_rows_and_window_bucket():
     assert int(ell.window_bucket(sel_ids, jnp.zeros_like(sel))) == 0
 
 
+@pytest.mark.split
+def test_split_storage_roundtrip_and_metadata():
+    """Hub splitting (DESIGN.md §10): rows wider than W_cap decompose
+    into virtual rows; the adjacency round-trips bit-identically to the
+    unsplit layout and the owner map is exact."""
+    edges = zipf_edges(400, alpha=2.0, max_deg=48, seed=6)
+    vd = {"x": np.zeros(400, np.float32)}
+    g0 = DataGraph.from_edges(400, edges, vd, edge_locality=False)
+    gs = DataGraph.from_edges(400, edges, vd, w_cap=8, edge_locality=False)
+    ell = gs.ell
+    assert ell.is_split and ell.w_cap == 8
+    assert ell.widths[-1] == 8 < ell.max_deg == g0.max_deg
+    # w_cap implies hub_split; hub_split alone picks the p99 default
+    assert DataGraph.from_edges(400, edges, vd, hub_split=True).ell.w_cap
+    with pytest.raises(ValueError, match="power of two"):
+        DataGraph.from_edges(400, edges, vd, w_cap=6)
+    with pytest.raises(ValueError, match="bucket_widths"):
+        DataGraph.from_edges(400, edges, vd, w_cap=8, bucket_widths=(2, 8))
+    # owner map: vrow_offset[r]:vrow_offset[r+1] all owned by r, chunk
+    # count is ceil(deg / W_cap) (empty rows still get one vrow)
+    off = np.asarray(ell.vrow_offset)
+    owner = np.asarray(ell.owner_of_vrow)
+    deg = np.asarray(gs.degree)
+    np.testing.assert_array_equal(off[1:] - off[:-1],
+                                  np.maximum(1, -(-deg // 8)))
+    for r in (0, 1, 399):
+        assert np.all(owner[off[r]:off[r + 1]] == r)
+    assert ell.n_virtual == off[-1]
+    # adjacency round-trip is bit-identical to the unsplit layout
+    for a, b in zip(gs.to_padded(), g0.to_padded()):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # scope widths: stored buckets then 2*W_cap, 4*W_cap, ... >= max_deg
+    sw = ell.scope_widths
+    assert sw[:ell.n_buckets] == ell.widths
+    assert all(w % 8 == 0 for w in sw[ell.n_buckets:])
+    assert sw[-1] >= ell.max_deg and sw[-2] < ell.max_deg
+
+
+@pytest.mark.split
+def test_split_rows_row_activation_and_window_bucket():
+    """The dispatch contracts survive splitting: width-specialized
+    gathers truncate/blank exactly as unsplit (hubs materialize through
+    chunk concatenation at wide widths), ``row_activation`` lights every
+    virtual row of a selected owner, and ``window_bucket`` reports wide
+    classes for hub selections."""
+    edges = zipf_edges(400, alpha=2.0, max_deg=48, seed=6)
+    gs = DataGraph.from_edges(400, edges, {"x": np.zeros(400, np.float32)},
+                              w_cap=8, edge_locality=False)
+    ell = gs.ell
+    deg = np.asarray(gs.degree)
+    ids = jnp.arange(400, dtype=jnp.int32)
+    full = ell.rows(ids)
+    assert full.nbrs.shape == (400, ell.max_deg)
+    for w in ell.scope_widths:
+        part = ell.rows(ids, width=w)
+        assert part.nbrs.shape == (400, w)
+        fits = deg <= w
+        wc = min(w, ell.max_deg)     # widest class may exceed max_deg
+        for f_arr, p_arr in [(full.nbrs, part.nbrs),
+                             (full.nbr_mask, part.nbr_mask),
+                             (full.edge_ids, part.edge_ids),
+                             (full.is_src, part.is_src)]:
+            np.testing.assert_array_equal(
+                np.asarray(f_arr)[fits, :wc],
+                np.asarray(p_arr)[fits, :wc])
+        assert not np.asarray(part.nbr_mask)[:, wc:].any()
+        assert not np.asarray(part.nbr_mask)[~fits].any()
+    # row_activation: all the owner's vrows, nothing else
+    hub = int(np.argmax(deg))
+    low = int(np.argmin(np.where(deg <= 8, deg, deg.max() + 1)))
+    sel_ids = jnp.asarray([hub, low], jnp.int32)
+    act = np.asarray(ell.row_activation(sel_ids, jnp.ones(2, bool)))
+    off = np.asarray(ell.vrow_offset)
+    inv = np.asarray(ell.inv_perm)
+    want = np.zeros(ell.total_rows, bool)
+    for r in (hub, low):
+        want[inv[off[r]:off[r + 1]]] = True
+    np.testing.assert_array_equal(act, want)
+    # window_bucket: hub selection lands in a wide class whose width
+    # covers the hub; a low-degree-only selection stays in the buckets
+    wb = int(ell.window_bucket(sel_ids, jnp.ones(2, bool)))
+    assert wb >= ell.n_buckets and ell.scope_widths[wb] >= deg[hub]
+    wb_low = int(ell.window_bucket(sel_ids, jnp.asarray([False, True])))
+    assert wb_low < ell.n_buckets and ell.scope_widths[wb_low] >= deg[low]
+    assert int(ell.window_bucket(sel_ids, jnp.zeros(2, bool))) == 0
+
+
+@pytest.mark.split
+def test_split_eliminates_tail_bucket():
+    """The acceptance shape bound: with splitting on, the widest stored
+    (= compiled) bucket is W_cap regardless of skew, and the slot count
+    never exceeds the unsplit bucketed layout's."""
+    edges = zipf_edges(2000, alpha=2.0, max_deg=64, seed=1)
+    vd = {"x": np.zeros(2000, np.float32)}
+    g0 = DataGraph.from_edges(2000, edges, vd)
+    gs = DataGraph.from_edges(2000, edges, vd, w_cap=16)
+    assert g0.ell.widths[-1] > 16          # unsplit ladder has a tail
+    assert gs.ell.widths[-1] == 16         # split ladder is capped
+    assert gs.ell.padded_slots <= g0.ell.padded_slots
+
+
+@pytest.mark.split
+def test_split_slot_weight_is_post_split_cost():
+    """Partitioner vertex weights under splitting: full chunks cost
+    W_cap, the remainder its covering power-of-two bucket."""
+    from repro.core.partition import split_slot_weight
+    deg = np.asarray([0, 1, 3, 8, 9, 16, 20, 100])
+    np.testing.assert_array_equal(
+        split_slot_weight(deg, 8),
+        #          0/1 deg pay the min bucket; 9 = 8 + pad(1)->2;
+        #          20 = 2 full chunks + pad(4)->4; 100 = 12*8 + 4
+        np.asarray([2, 2, 4, 8, 10, 16, 20, 100]))
+    with pytest.raises(ValueError, match="power of two"):
+        split_slot_weight(deg, 6)
+
+
+# Engine-level split parity (4 schedulers x {batch,bucket} x
+# {kernel,dense}, bitwise) lives with the dispatch invariants in
+# tests/test_dispatch.py::test_split_dispatch_paths_bitwise_identical.
+
+
 def test_zipf_edges_are_skewed_and_simple():
     edges = zipf_edges(3000, alpha=2.0, max_deg=128, seed=0)
     assert len(edges)

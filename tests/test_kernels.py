@@ -110,6 +110,47 @@ def test_als_normal_eq_bucketed_sweep():
         ofs += n
 
 
+@pytest.mark.split
+def test_als_normal_eq_split_vrows_segment_combine():
+    """Hub splitting at the kernel layer (DESIGN.md §10): accumulate
+    normal equations over W_cap-wide virtual-row chunks, then
+    ``segment_combine`` the [n_virtual, d, d] / [n_virtual, d] partials
+    per owner — equals the whole-row accumulation, since A/b are linear
+    in the occupied slots.  Dummy virtual rows carry the ``n_rows``
+    owner sentinel and are dropped."""
+    rng = np.random.default_rng(11)
+    nv, deg, rows, d, wc = 9, 13, 40, 4, 4
+    nbrs = rng.integers(0, rows, (nv, deg)).astype(np.int32)
+    mask = rng.random((nv, deg)) < 0.7
+    rat = rng.normal(size=(nv, deg)).astype(np.float32)
+    x = jnp.asarray(rng.normal(size=(rows, d)), jnp.float32)
+    ar, br = ref.als_normal_eq_ref(jnp.asarray(nbrs), jnp.asarray(mask),
+                                   jnp.asarray(rat), x)
+    s = -(-deg // wc)                      # chunks per row
+    pad = s * wc - deg
+
+    def chunk(a, fill):
+        a = np.concatenate([a, np.full((nv, pad), fill, a.dtype)], axis=1)
+        return a.reshape(nv * s, wc)
+
+    vn, vm, vr = chunk(nbrs, 0), chunk(mask, False), chunk(rat, 0.0)
+    # one dummy vrow with live-looking slots: the sentinel must drop it
+    vn = np.concatenate([vn, np.ones((1, wc), np.int32)])
+    vm = np.concatenate([vm, np.ones((1, wc), bool)])
+    vr = np.concatenate([vr, np.ones((1, wc), np.float32)])
+    owner = jnp.asarray(np.append(np.repeat(np.arange(nv), s), nv),
+                        jnp.int32)
+    a_v, b_v = ops.als_normal_eq(jnp.asarray(vn), jnp.asarray(vm),
+                                 jnp.asarray(vr), x)
+    a_c = ops.segment_combine(a_v, owner, nv)
+    b_c = ops.segment_combine(b_v, owner, nv)
+    assert a_c.shape == (nv, d, d) and b_c.shape == (nv, d)
+    np.testing.assert_allclose(np.asarray(a_c), np.asarray(ar),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(b_c), np.asarray(br),
+                               rtol=1e-4, atol=1e-4)
+
+
 @pytest.mark.parametrize("bh,w,dh", [
     (1, 8, 16),
     (4, 100, 32),
