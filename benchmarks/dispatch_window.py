@@ -9,14 +9,23 @@ or kernel launch, update, scatter, task bookkeeping — per combination:
 
 * **bucket**  — the per-bucket row launches (PR 3's path),
 * **batch**   — the window-shaped ``[B, W]`` launch pair,
-* **adaptive** — ``choose_dispatch("auto", ...)``'s pick.
+* **adaptive** — ``choose_dispatch("auto", ...)``'s pick, recorded for
+  both the static slot-count rule (``auto_static``) and the fitted
+  trace cost model (``auto_calibrated``, DESIGN.md §11; loaded from
+  ``results/COSTMODEL_<device>.json`` or bootstrapped inline).
 
-Acceptance (enforced at record time, full sizes): adaptive is >= 5x
-faster than bucket-row for k <= 64 and within +-10% of it at k = Nv,
-with dense-vs-kernel bitwise parity asserted on both paths.  The
-``zipf_split`` section repeats the sweep with hub splitting enabled
-(``--w-cap`` overrides the cap): the cost model prices windows at
-``B * W_cap`` and the same gates must hold with no tail bucket.
+Acceptance (enforced at record time, full sizes): static adaptive is
+>= 5x faster than bucket-row for k <= 64 and within +-10% of it at
+k = Nv, with dense-vs-kernel bitwise parity asserted on both paths;
+the calibrated pick matches or beats the static pick at EVERY k (in
+particular no regression at k = Nv, where mispicking batch costs
+~10x).  The ``zipf_split`` section repeats the sweep with hub
+splitting enabled (``--w-cap`` overrides the cap): the cost model
+prices windows at ``B * W_cap`` and the same gates must hold with no
+tail bucket.  A ``partition_scoring`` section then scores >= 8
+partitions of the Zipf graph with the model's predicted step time
+(shard-uniform bucket launches + ghost sync) against a measured step
+at the same shapes, asserting Spearman >= 0.8.
 
 Appends ``results/BENCH_dispatch.json``; wired into ``benchmarks.run
 --smoke`` for the CI artifact job (tiny sizes).
@@ -81,7 +90,25 @@ def _dispatch_fn(g, upd, ids, mode: str, use_kernel: bool):
     return jax.jit(run)
 
 
-def _bench_graph(name: str, nv: int, cap: int, ks,
+def _get_model():
+    """The device's fitted cost model: the persisted calibration when
+    one exists (CI runs ``repro.profile.calibrate --smoke`` first),
+    else a quick inline calibration, persisted for the next run."""
+    from repro.profile import calibrate as cal
+    from repro.profile.model import load_cost_model
+    model = load_cost_model()
+    if model is None:
+        sizes = (dict(cal.SMOKE_SIZES) if common.SMOKE
+                 else dict(nv=2000, cap=64, batch_sizes=(8, 64, 512),
+                           iters=3))
+        recorder, model = cal.calibrate(
+            with_hlo=False, emit=lambda *_: None, **sizes)
+        recorder.save()
+        model.save()
+    return model
+
+
+def _bench_graph(name: str, nv: int, cap: int, ks, model,
                  w_cap: int | None = None) -> dict:
     from repro.apps import pagerank
     g = pagerank.make_graph(zipf_edges(nv, alpha=2.0, max_deg=cap, seed=0),
@@ -100,7 +127,11 @@ def _bench_graph(name: str, nv: int, cap: int, ks,
         # post-split the batch path's worst case is B * W_cap, so the
         # cost model prices the widest *stored* bucket, not max_deg
         auto = choose_dispatch("auto", k, ell.widths[-1], ell.padded_slots)
-        row = {"k": int(k), "auto_picks": auto}
+        auto_cal = choose_dispatch(
+            "auto", k, ell.widths[-1], ell.padded_slots, cost_model=model,
+            bucket_launches=ell.bucket_launches)
+        row = {"k": int(k), "auto_picks": auto, "auto_static": auto,
+               "auto_calibrated": auto_cal}
         outs = {}
         for mode in ("bucket", "batch"):
             fn = _dispatch_fn(g, upd, ids, mode, use_kernel=True)
@@ -124,11 +155,13 @@ def _bench_graph(name: str, nv: int, cap: int, ks,
             assert np.array_equal(outs["bucket"], outs["batch"]), \
                 f"batch/bucket parity broke: {name} k={k}"
         # "auto" resolves at *trace* time (choose_dispatch compares two
-        # static integers), so the adaptive program IS the picked
-        # path's program — its cost is that path's measurement, exactly
-        # (re-timing the same executable would only record CPU noise;
-        # at k = Nv this is what makes adaptive match bucket-row)
-        row["adaptive_us"] = row[f"{auto}_us"]
+        # static numbers — slot counts or predicted microseconds), so
+        # an adaptive program IS the picked path's program — its cost
+        # is that path's measurement, exactly (re-timing the same
+        # executable would only record CPU noise; at k = Nv this is
+        # what makes adaptive match bucket-row)
+        row["adaptive_us"] = row["adaptive_static_us"] = row[f"{auto}_us"]
+        row["adaptive_calibrated_us"] = row[f"{auto_cal}_us"]
         row["speedup_vs_bucket"] = round(
             row["bucket_us"] / max(row["adaptive_us"], 1e-9), 2)
         entry["windows"].append(row)
@@ -138,7 +171,85 @@ def _bench_graph(name: str, nv: int, cap: int, ks,
              f"W<=B*{ell.widths[-1]}={k * ell.widths[-1]}")
         emit(f"dispatch_{name}_k{k}_adaptive", row["adaptive_us"],
              f"picks={auto};x{row['speedup_vs_bucket']}")
+        emit(f"dispatch_{name}_k{k}_calibrated",
+             row["adaptive_calibrated_us"], f"picks={auto_cal}")
     return entry
+
+
+def _spearman(x, y) -> float:
+    """Spearman rank correlation, numpy-only (scipy is not assumed)."""
+    rx = np.argsort(np.argsort(np.asarray(x))).astype(float)
+    ry = np.argsort(np.argsort(np.asarray(y))).astype(float)
+    rx -= rx.mean()
+    ry -= ry.mean()
+    denom = np.sqrt((rx ** 2).sum() * (ry ** 2).sum())
+    return float((rx * ry).sum() / denom) if denom else 0.0
+
+
+def _measured_step_us(launches, n_ghosts: int, nv: int) -> float:
+    """Wall-clock one distributed-superstep-shaped workload: a real
+    bucketed SpMV at the shard-uniform ``(W, rows)`` launch shapes plus
+    a ghost-row-sized scatter — the same two terms the model predicts,
+    measured instead of priced."""
+    from repro.kernels.ell_spmv import ell_spmv_bucketed
+    rng = np.random.default_rng(0)
+    nbrs = tuple(jnp.asarray(rng.integers(0, nv, size=(r, w)), jnp.int32)
+                 for w, r in launches)
+    w_blocks = tuple(jnp.ones((r, w), jnp.float32) for w, r in launches)
+    x = jnp.ones((nv, 1), jnp.float32)
+    fn = jax.jit(lambda xv: ell_spmv_bucketed(nbrs, w_blocks, xv,
+                                              interpret=True))
+    compute = _time_us(fn, x)
+    h = max(int(n_ghosts), 1)
+    arr = jnp.zeros((nv, 1), jnp.float32)
+    idx = jnp.asarray(np.arange(h) % nv, jnp.int32)
+    vals = jnp.ones((h, 1), jnp.float32)
+    sfn = jax.jit(lambda a, i, v: a.at[i].set(v))
+    return compute + _time_us(sfn, arr, idx, vals)
+
+
+def _partition_scoring(model, nv: int, cap: int, n_machines: int = 4) -> dict:
+    """Predicted vs measured step time over >= 8 partitions of the Zipf
+    graph, spanning good (two-phase) to bad (skewed random) quality."""
+    from repro.core.partition import (ghost_rows, predicted_step_time,
+                                      random_partition,
+                                      shard_bucket_launches,
+                                      two_phase_partition)
+    edges = zipf_edges(nv, alpha=2.0, max_deg=cap, seed=0)
+    degrees = np.zeros(nv, dtype=np.int64)
+    for col in (0, 1):
+        np.add.at(degrees, edges[:, col], 1)
+    rng = np.random.default_rng(7)
+    candidates = [("two_phase_s0",
+                   two_phase_partition(nv, edges, n_machines, seed=0)),
+                  ("two_phase_s1",
+                   two_phase_partition(nv, edges, n_machines, seed=1))]
+    candidates += [(f"random_s{s}", random_partition(nv, n_machines, seed=s))
+                   for s in (0, 1, 2)]
+    # skewed draws: deliberately imbalanced machines -> inflated uniform
+    # bucket shapes and ghost counts, the "bad partition" end of the axis
+    for i, probs in enumerate([(0.4, 0.3, 0.2, 0.1),
+                               (0.55, 0.25, 0.15, 0.05),
+                               (0.7, 0.15, 0.1, 0.05)]):
+        candidates.append(
+            (f"skewed_{i}", rng.choice(n_machines, size=nv, p=probs)))
+    out = {"n_machines": n_machines, "partitions": []}
+    pred, meas = [], []
+    for pname, assignment in candidates:
+        launches = shard_bucket_launches(assignment, degrees, n_machines)
+        ghosts = int(ghost_rows(assignment, edges, n_machines).max())
+        p = predicted_step_time(assignment, degrees, edges, n_machines,
+                                model)
+        m = _measured_step_us(launches, ghosts, nv)
+        pred.append(p)
+        meas.append(m)
+        out["partitions"].append(
+            {"partition": pname, "predicted_us": round(p, 1),
+             "measured_us": round(m, 1), "max_ghosts": ghosts})
+        emit(f"partition_{pname}", m, f"predicted={p:.1f}")
+    out["spearman"] = round(_spearman(pred, meas), 3)
+    emit("partition_scoring_spearman", 0.0, f"rho={out['spearman']}")
+    return out
 
 
 def run() -> None:
@@ -148,13 +259,19 @@ def run() -> None:
         nv, cap, w_cap = 10_000, 192, 64
     if common.W_CAPS:
         w_cap = max(common.W_CAPS)
+    model = _get_model()
     ks = sorted({min(k, nv) for k in (8, 64, 512, nv)})
     entry = {
         "bench": "dispatch_window",
         "smoke": common.SMOKE,
         "recorded_at": time.strftime("%Y-%m-%dT%H:%M:%S"),
-        "zipf": _bench_graph("zipf", nv, cap, ks),
-        "zipf_split": _bench_graph("zipf_split", nv, cap, ks, w_cap=w_cap),
+        "cost_model": {"device": model.device,
+                       "n_records": model.n_records,
+                       "widths": sorted(model.coef)},
+        "zipf": _bench_graph("zipf", nv, cap, ks, model),
+        "zipf_split": _bench_graph("zipf_split", nv, cap, ks, model,
+                                   w_cap=w_cap),
+        "partition_scoring": _partition_scoring(model, nv, cap),
     }
     assert entry["zipf_split"]["bucket_widths"][-1] == w_cap  # no tail
     if not common.SMOKE:
@@ -175,6 +292,19 @@ def run() -> None:
                     assert row["speedup_vs_bucket"] >= 5.0, (section, row)
                 if row["k"] == nv:
                     assert row["auto_picks"] == "bucket", (section, row)
+                # calibrated auto must match or beat the static pick at
+                # every k (5% timing-noise allowance; when both resolve
+                # to the same mode the two sides are the same number)
+                assert (row["adaptive_calibrated_us"]
+                        <= row["adaptive_static_us"] * 1.05), (section, row)
+                if row["k"] == nv:
+                    # the expensive mispick: batch at a graph-sized
+                    # window costs ~10x — the calibrated pick must not
+                    # regress the full-window case
+                    assert (row["adaptive_calibrated_us"]
+                            <= row["bucket_us"] * 1.10), (section, row)
+        rho = entry["partition_scoring"]["spearman"]
+        assert rho >= 0.8, f"partition scoring decorrelated: rho={rho}"
     _RESULTS.mkdir(exist_ok=True)
     path = _RESULTS / "BENCH_dispatch.json"
     history = json.loads(path.read_text()) if path.exists() else []

@@ -72,7 +72,9 @@ class RunResult:
     ``stats`` carries strategy-specific extras (the distributed
     engines' ``ghost_rows_sent`` / ``ghost_rows_full`` traffic counts,
     local shard blocks); ``trace`` the per-superstep records when
-    tracing was requested.
+    tracing was requested; ``profile`` the ``TraceRecorder`` of timed
+    launch records when ``profile=True`` (save it and fit a cost model
+    with ``repro.profile.fit_cost_model``, DESIGN.md §11).
     """
     vertex_data: PyTree
     edge_data: PyTree | None
@@ -83,6 +85,7 @@ class RunResult:
     state: EngineState | None = None
     engine: Any = None
     trace: list | None = None
+    profile: Any = None
     stats: dict = dataclasses.field(default_factory=dict)
 
 
@@ -211,7 +214,28 @@ class EngineSpec:
                     f"n_shards={self.n_shards}")
             plan = partition
         else:
-            if callable(partition):
+            if isinstance(partition, str):
+                if partition != "measured":
+                    raise ValueError(
+                        f"unknown partition {partition!r}: the only "
+                        "string form is 'measured' (cost-model-scored "
+                        "two_phase_partition, DESIGN.md §11); otherwise "
+                        "pass an assignment, a callable, or a ShardPlan")
+                from repro.core.partition import two_phase_partition
+                from repro.profile.model import (load_cost_model,
+                                                 resolve_cost_model)
+                model = self.options.get("cost_model")
+                model = (resolve_cost_model(model) if model is not None
+                         else load_cost_model())
+                if model is None:
+                    raise ValueError(
+                        "partition='measured' needs a cost model: pass "
+                        "cost_model=, or calibrate this device first "
+                        "(python -m repro.profile.calibrate)")
+                assignment = two_phase_partition(
+                    graph.n_vertices, graph.edges_np, self.n_shards,
+                    seed=0, cost_model=model, w_cap=graph.ell.w_cap)
+            elif callable(partition):
                 assignment = partition(graph, self.n_shards)
             elif partition is None:
                 from repro.core.partition import two_phase_partition
@@ -241,7 +265,7 @@ def build_engine(graph, update: UpdateFn, *, scheduler: str = "chromatic",
                  n_shards: int = 1, dispatch: str | None = "auto",
                  max_pending: int | None = None,
                  max_supersteps: int | None = None, partition=None,
-                 **options):
+                 cost_model=None, **options):
     """Construct (but do not run) the engine ``run`` would drive.
 
     For callers that reuse one engine across invocations — benchmarks
@@ -250,10 +274,21 @@ def build_engine(graph, update: UpdateFn, *, scheduler: str = "chromatic",
     """
     if max_pending is not None:
         options["max_pending"] = max_pending
+    if cost_model is not None:
+        options["cost_model"] = _resolve_cost_model_option(cost_model)
     spec = EngineSpec(scheduler=scheduler, n_shards=n_shards,
                       consistency=consistency, dispatch=dispatch,
                       max_supersteps=max_supersteps, options=options)
     return spec.build(graph, update, syncs, partition=partition)
+
+
+def _resolve_cost_model_option(cost_model):
+    """Normalize ``cost_model=`` once, at the facade: strings resolve
+    through ``repro.profile.resolve_cost_model`` ('measured', a model
+    path, or a plugin entry-point name) so engines only ever see a
+    model instance."""
+    from repro.profile.model import resolve_cost_model
+    return resolve_cost_model(cost_model)
 
 
 def run(graph, update: UpdateFn, *, scheduler: str = "chromatic",
@@ -262,7 +297,8 @@ def run(graph, update: UpdateFn, *, scheduler: str = "chromatic",
         max_supersteps: int | None = None,
         until: Callable[[dict], bool] | None = None,
         num_supersteps: int | None = None, active=None,
-        trace=None, partition=None, **options) -> RunResult:
+        trace=None, partition=None, profile: bool = False,
+        cost_model=None, **options) -> RunResult:
     """Run ``update`` over ``graph`` under the named scheduler.
 
     The paper's ``start()``: builds the engine from configuration and
@@ -279,6 +315,15 @@ def run(graph, update: UpdateFn, *, scheduler: str = "chromatic",
     while-loop run — superstep boundaries are consistent cuts, §8) and
     are single-device only.
 
+    ``profile=True`` runs the same stepping loop and additionally wall-
+    clocks every superstep, recording launch shapes into a
+    ``repro.profile.TraceRecorder`` returned as ``RunResult.profile``
+    — the raw material for a fitted cost model (DESIGN.md §11).
+    ``cost_model=`` hands such a model (or ``"measured"`` for this
+    device's persisted calibration, a ``COSTMODEL_*.json`` path, or a
+    plugin entry-point name) to ``dispatch="auto"``; it changes launch
+    shapes only, never results.
+
     Per-strategy extras (``k_select=``, ``fifo=``, ``max_pending=``,
     ``exchange_edges=``, ``snapshot_phases=``, ``use_kernel=``, ...)
     pass through ``**options`` and are validated against the registry
@@ -286,6 +331,8 @@ def run(graph, update: UpdateFn, *, scheduler: str = "chromatic",
     """
     if max_pending is not None:
         options["max_pending"] = max_pending
+    if cost_model is not None:
+        options["cost_model"] = _resolve_cost_model_option(cost_model)
     if trace is False:
         trace = None          # "tracing off", not a trace callable
     priority = options.pop("priority", None)
@@ -294,11 +341,12 @@ def run(graph, update: UpdateFn, *, scheduler: str = "chromatic",
                       max_supersteps=max_supersteps, options=options)
     entry = spec.entry
     if spec.distributed(partition):
-        if until is not None or trace is not None:
+        if until is not None or trace is not None or profile:
             raise ValueError(
-                "until=/trace= step the engine from the host and are "
-                "single-device only; distributed runs execute one fused "
-                "shard_map program (n_shards=1 supports both)")
+                "until=/trace=/profile= step the engine from the host "
+                "and are single-device only; distributed runs execute "
+                "one fused shard_map program (n_shards=1 supports all "
+                "three)")
         if priority is not None:
             raise ValueError("priority= initialization is single-device "
                              "only (shards derive priority from active)")
@@ -316,9 +364,9 @@ def run(graph, update: UpdateFn, *, scheduler: str = "chromatic",
     engine = spec.build(graph, update, syncs)
 
     if not entry.stepping:
-        if trace is not None:
-            raise ValueError("trace= needs a stepping engine; the "
-                             "sequential oracle does not support it")
+        if trace is not None or profile:
+            raise ValueError("trace=/profile= need a stepping engine; "
+                             "the sequential oracle supports neither")
         if priority is not None:
             raise ValueError("priority= initialization is engine-only; "
                              "the sequential oracle derives priorities "
@@ -332,11 +380,20 @@ def run(graph, update: UpdateFn, *, scheduler: str = "chromatic",
                          active_any=bool(np.asarray(act).any()),
                          engine=engine)
 
-    if until is None and trace is None:
+    if until is None and trace is None and not profile:
         state = engine.run(active=active, priority=priority,
                            num_supersteps=num_supersteps)
         return _result_from_state(state, engine, None)
 
+    recorder = None
+    if profile:
+        import time
+
+        import jax
+
+        from repro.profile.trace import TraceRecorder
+        recorder = TraceRecorder()
+        seen_shapes: set = set()
     trace_fn = _default_trace if trace is True else trace
     state = engine.init_state(active, priority)
     records = [] if trace is not None else None
@@ -350,20 +407,35 @@ def run(graph, update: UpdateFn, *, scheduler: str = "chromatic",
             break
         if until is not None and until(state.globals):
             break
-        state = engine._step_jit(state)
+        if recorder is not None:
+            # shape probe first (host-side, eager), then time the real
+            # jitted step; the first step at each launch shape compiles
+            # and is marked cold so fits skip it
+            probe = engine.profile_probe(state)
+            key = (probe["mode"], probe.get("width"), probe.get("rows"))
+            t0 = time.perf_counter()
+            state = jax.block_until_ready(engine._step_jit(state))
+            wall_us = (time.perf_counter() - t0) * 1e6
+            recorder.record_step(wall_us=wall_us,
+                                 cold=key not in seen_shapes,
+                                 superstep=steps, **probe)
+            seen_shapes.add(key)
+        else:
+            state = engine._step_jit(state)
         steps += 1
         if records is not None:
             records.append(trace_fn(state))
-    return _result_from_state(state, engine, records)
+    return _result_from_state(state, engine, records, recorder)
 
 
-def _result_from_state(state: EngineState, engine, trace) -> RunResult:
+def _result_from_state(state: EngineState, engine, trace,
+                       profile=None) -> RunResult:
     return RunResult(
         vertex_data=state.vertex_data, edge_data=state.edge_data,
         globals=state.globals, superstep=int(state.superstep),
         n_updates=int(state.n_updates),
         active_any=bool(state.active.any()), state=state, engine=engine,
-        trace=trace)
+        trace=trace, profile=profile)
 
 
 def _default_trace(state: EngineState) -> dict:

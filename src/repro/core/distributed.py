@@ -393,6 +393,16 @@ class ShardPlan:
         path's per-dispatch compute, the cost model's other arm."""
         return sliced_slot_count(self.ell_starts, self.ell_widths)
 
+    @property
+    def bucket_launches(self) -> tuple[tuple[int, int], ...]:
+        """Per-shard ``(width, rows)`` launch sequence of one
+        bucket-mode dispatch (shard-uniform shapes), for fitted
+        cost-model pricing — mirrors ``SlicedEll.bucket_launches``."""
+        return tuple(
+            (int(self.ell_widths[b]),
+             int(self.ell_starts[b + 1] - self.ell_starts[b]))
+            for b in range(len(self.ell_widths)))
+
     def ell_arrays(self) -> dict:
         """The sliced-ELL device arrays, keyed for a shard_map plan dict."""
         out = dict(
@@ -515,6 +525,8 @@ class DistributedChromaticEngine:
     kernel_interpret: bool | None = None    # None -> auto (off-TPU: True)
     # color phases sweep whole shards: per-bucket row launches
     dispatch: str = "bucket"
+    # fitted launch-time model for dispatch="auto" (DESIGN.md §11)
+    cost_model: Any = None
 
     def __post_init__(self):
         validate_dispatch(self.dispatch)
@@ -535,7 +547,9 @@ class DistributedChromaticEngine:
                      is not None else default_interpret())
         use_kernel = self.use_kernel
         mode = choose_dispatch(self.dispatch, plan.Cmax,
-                               plan.ell_widths[-1], plan.sliced_slots)
+                               plan.ell_widths[-1], plan.sliced_slots,
+                               cost_model=self.cost_model,
+                               bucket_launches=plan.bucket_launches)
 
         def color_phase(c, carry, struct, plan_b, globals_):
             ids = plan_b["color_ids"][c]

@@ -32,7 +32,8 @@ def bsp_engine(graph: DataGraph, update_fn: UpdateFn,
                syncs: Sequence[SyncOp] = (), max_supersteps: int = 100,
                use_kernel: bool = True,
                kernel_interpret: bool | None = None,
-               dispatch: str = "bucket") -> ChromaticEngine:
+               dispatch: str = "bucket",
+               cost_model=None) -> ChromaticEngine:
     """Strategy: one phase containing every active vertex (trivial color).
 
     The single phase batches the whole graph, so the per-bucket row
@@ -42,7 +43,7 @@ def bsp_engine(graph: DataGraph, update_fn: UpdateFn,
     return ChromaticEngine(g, update_fn, syncs, max_supersteps,
                            use_kernel=use_kernel,
                            kernel_interpret=kernel_interpret,
-                           dispatch=dispatch)
+                           dispatch=dispatch, cost_model=cost_model)
 
 
 register_scheduler(

@@ -185,9 +185,7 @@ class LockingEngine(ExecutorCore):
         score = jnp.where(state.active, state.priority, -jnp.inf)
         _, cand = jax.lax.top_k(score, p)           # [P] pending window
         cand_sel = state.active[cand]
-        ell = self.graph.ell
-        mode = choose_dispatch(self.dispatch, p, ell.widths[-1],
-                               ell.padded_slots)
+        mode = self.resolve_dispatch(p)
         if mode == "batch":
             win = conflict_winners_windowed(self.graph, cand, cand_sel,
                                             self.update_fn.consistency)
@@ -227,6 +225,8 @@ class DistributedLockingEngine:
     # batch-shaped claim pass and [P, W] launches; saturating windows
     # keep the per-bucket row launches
     dispatch: str = "auto"
+    # fitted launch-time model for dispatch="auto" (DESIGN.md §11)
+    cost_model: Any = None
 
     def __post_init__(self):
         validate_dispatch(self.dispatch)
@@ -257,7 +257,9 @@ class DistributedLockingEngine:
         syncs = self.syncs
         consistency = self.update_fn.consistency
         mode = choose_dispatch(self.dispatch, P_win,
-                               plan.ell_widths[-1], plan.sliced_slots)
+                               plan.ell_widths[-1], plan.sliced_slots,
+                               cost_model=self.cost_model,
+                               bucket_launches=plan.bucket_launches)
 
         def a2a(x):
             return jax.lax.all_to_all(x, axis, 0, 0, tiled=True)

@@ -253,7 +253,8 @@ def validate_dispatch(mode: str | None) -> None:
 
 
 def choose_dispatch(mode: str | None, batch_size: int, max_deg: int,
-                    sliced_slots: int) -> str:
+                    sliced_slots: int, cost_model=None,
+                    bucket_launches=None) -> str:
     """Resolve a dispatch mode to ``"bucket"`` or ``"batch"`` (DESIGN.md §8).
 
     ``"bucket"`` launches the full per-bucket row set — per-dispatch
@@ -263,22 +264,40 @@ def choose_dispatch(mode: str | None, batch_size: int, max_deg: int,
     launches once at ``[B, W]`` — cost ``B * W``, the right shape for
     the dynamic engines' small scheduler windows (k << Nv).
 
-    ``"auto"`` is the static cost model: the batch path's typical-case
-    worst width (every window touches the widest stored *bucket* —
-    callers pass ``ell.widths[-1]``, which hub splitting bounds by
-    ``W_cap`` instead of ``max_deg``) against the bucket path's fixed
-    slot count.  Both sides are trace-time constants — batch width
-    ``B`` is the engine's static window size — so the choice never
-    retraces.  On a split graph a window that does contain a hub runs
-    its batch launch at ``B * s * W_cap`` chunk slots, costlier than
-    this estimate but still bounded by the window's actual slot work;
+    ``"auto"`` without a model is the static cost rule: the batch
+    path's typical-case worst width (every window touches the widest
+    stored *bucket* — callers pass ``ell.widths[-1]``, which hub
+    splitting bounds by ``W_cap`` instead of ``max_deg``) against the
+    bucket path's fixed slot count.  With a fitted ``cost_model``
+    (DESIGN.md §11) the same two candidates are priced in measured
+    microseconds instead of slots: one ``[B, widths[-1]]`` batch
+    launch versus the bucket path's per-bucket launch sequence
+    (``bucket_launches``, e.g. ``ell.bucket_launches``).  Either side
+    predicting ``None`` (shape outside the trace) falls back to the
+    static rule, so a zero-trace model reproduces the static choices
+    exactly.  All inputs are trace-time constants — batch width ``B``
+    is the engine's static window size — so the choice never retraces,
+    and either answer is performance-only: both launch shapes are
+    bitwise-identical in results (tests/test_dispatch.py).
+
+    On a split graph a window that does contain a hub runs its batch
+    launch at ``B * s * W_cap`` chunk slots, costlier than either
+    estimate but still bounded by the window's actual slot work;
     hub-free windows (the common case on power-law graphs, where hubs
-    are few) only ever undercut the estimate.
+    are few) only ever undercut it.
     """
     if mode in ("bucket", "batch"):
         return mode
-    if mode not in (None, "auto"):
-        raise ValueError(f"unknown dispatch mode {mode!r}")
+    # same legal-set error text as construction-time validation
+    validate_dispatch(mode)
+    if cost_model is not None:
+        t_batch = cost_model.predict(max_deg, batch_size)
+        if bucket_launches is None:
+            t_bucket = None
+        else:
+            t_bucket = cost_model.predict_launches(bucket_launches)
+        if t_batch is not None and t_bucket is not None:
+            return "batch" if t_batch < t_bucket else "bucket"
     return "batch" if batch_size * max_deg < sliced_slots else "bucket"
 
 
@@ -605,6 +624,11 @@ class ExecutorCore:
     # their small windows down the batch path and graph-sized windows
     # back to the bucket launches.
     dispatch: str = "auto"
+    # fitted launch-time model consulted by dispatch="auto" (DESIGN.md
+    # §11): a repro.profile.CostModel (or anything with its predict
+    # surface).  None keeps the static slot-count rule.  Performance
+    # knob only — never changes results (dispatcher invisibility).
+    cost_model: Any = None
 
     # -- strategy interface -------------------------------------------
     n_phases: int = dataclasses.field(init=False, default=1)
@@ -631,6 +655,40 @@ class ExecutorCore:
             return self.kernel_interpret
         return default_interpret()
 
+    def resolve_dispatch(self, batch_size: int) -> str:
+        """This engine's ``choose_dispatch`` call, in one place: every
+        dispatch decision an ``ExecutorCore`` subclass makes routes
+        through here so the ``cost_model`` hook applies uniformly."""
+        ell = self.graph.ell
+        return choose_dispatch(self.dispatch, batch_size, ell.widths[-1],
+                               ell.padded_slots, cost_model=self.cost_model,
+                               bucket_launches=ell.bucket_launches)
+
+    def profile_probe(self, state: EngineState) -> dict:
+        """Launch shape of this state's first phase, for trace records.
+
+        Runs the strategy's selection host-side (eager — never inside
+        the jitted step) and reports what the step will launch: batch
+        mode resolves the window's snapped scope width, bucket mode
+        reports the full per-bucket launch sequence.  Used only by
+        ``api.run(..., profile=True)``; costs one extra selection pass
+        per profiled superstep, which is why profiling is opt-in.
+        """
+        ctx = self.prepare(state)
+        ids, valid = self.select(0, ctx)
+        batch = int(ids.shape[0])
+        mode = self.resolve_dispatch(batch)
+        rec = {"mode": mode, "phases": int(self.n_phases)}
+        ell = self.graph.ell
+        if mode == "batch":
+            sel = valid & state.active[ids]
+            rec["rows"] = batch
+            rec["width"] = int(
+                ell.scope_widths[int(ell.window_bucket(ids, sel))])
+        else:
+            rec["launches"] = list(ell.bucket_launches)
+        return rec
+
     def init_state(self, active: jax.Array | None = None,
                    priority: jax.Array | None = None) -> EngineState:
         return init_engine_state(
@@ -644,9 +702,7 @@ class ExecutorCore:
 
         def phase(c, carry):
             ids, valid = self.select(c, ctx)
-            ell = self.graph.ell
-            mode = choose_dispatch(self.dispatch, ids.shape[0],
-                                   ell.widths[-1], ell.padded_slots)
+            mode = self.resolve_dispatch(ids.shape[0])
             return apply_batch(
                 self.graph, self.update_fn, carry, ids, valid,
                 state.globals, sentinel=self.graph.n_vertices,

@@ -165,6 +165,16 @@ class SlicedEll:
         """Stored (= kernel-computed) neighbor slots, padding included."""
         return sliced_slot_count(self.starts, self.widths)
 
+    @property
+    def bucket_launches(self) -> tuple[tuple[int, int], ...]:
+        """The ``(width, rows)`` launch sequence of one bucket-mode
+        dispatch — the shape a fitted cost model prices when
+        ``choose_dispatch`` compares it against a batch launch
+        (DESIGN.md §11)."""
+        return tuple(
+            (int(self.widths[b]), int(self.starts[b + 1] - self.starts[b]))
+            for b in range(self.n_buckets))
+
     def bucket_slices(self, arr: jax.Array) -> tuple[jax.Array, ...]:
         """Split a ``[total_rows, ...]`` array into per-bucket slices."""
         return tuple(arr[self.starts[b]: self.starts[b + 1]]
@@ -451,6 +461,57 @@ def default_w_cap(degrees) -> int:
     return w
 
 
+def candidate_width_plans(slot_cnt, max_deg: int) -> list[dict]:
+    """Width-set candidates ``width_policy="measured"`` scores.
+
+    One unsplit pow2-ladder plan plus one hub-split plan per legal
+    ``w_cap`` in 4..64, each carrying the ``(width, rows)`` launch
+    sequence a full bucket sweep would run under that ladder — computed
+    from per-row real slot counts by the same chunking rule
+    ``split_hub_rows`` applies (full ``w_cap``-wide chunks land in the
+    top bucket, the remainder chunk in its covering bucket, zero-slot
+    rows in bucket 0), so the estimate matches what a build would
+    store.  Scoring-only: none of these plans is materialized.
+    """
+    cnt = np.maximum(np.asarray(slot_cnt, np.int64), 0)
+    md = max(int(max_deg), 1)
+
+    def launches(widths, counts):
+        return tuple((int(w), int(c)) for w, c in zip(widths, counts) if c)
+
+    widths = default_bucket_widths(md)
+    counts = np.bincount(bucket_index(widths, cnt), minlength=len(widths))
+    plans = [{"hub_split": False, "w_cap": None, "widths": widths,
+              "launches": launches(widths, counts)}]
+    cap = 4
+    while cap < md and cap <= 64:
+        wc = default_bucket_widths(cap)
+        full, rem = cnt // cap, cnt % cap
+        has_rem = (rem > 0) | (cnt == 0)
+        counts = np.bincount(bucket_index(wc, rem[has_rem]),
+                             minlength=len(wc))
+        counts[-1] += int(full.sum())
+        plans.append({"hub_split": True, "w_cap": cap, "widths": wc,
+                      "launches": launches(wc, counts)})
+        cap *= 2
+    return plans
+
+
+def choose_width_plan(slot_cnt, max_deg: int, cost_model) -> dict | None:
+    """Cheapest candidate plan under a fitted cost model's predicted
+    sweep time; ties keep the earlier candidate (the unsplit ladder
+    comes first).  ``None`` when no candidate is predictable — callers
+    fall back to the pow2 default, the zero-trace semantics."""
+    best = None
+    for plan in candidate_width_plans(slot_cnt, max_deg):
+        t = cost_model.predict_launches(plan["launches"])
+        if t is None:
+            continue
+        if best is None or t < best[0]:
+            best = (t, plan)
+    return None if best is None else best[1]
+
+
 def split_hub_rows(nbrs: np.ndarray, nbr_mask: np.ndarray,
                    edge_ids: np.ndarray, is_src: np.ndarray,
                    pad_edge: int, w_cap: int):
@@ -637,6 +698,8 @@ class DataGraph:
         edge_locality: bool = True,
         hub_split: bool = False,
         w_cap: int | None = None,
+        width_policy: str | None = None,
+        cost_model=None,
     ) -> "DataGraph":
         """Build the sliced-ELL structure from an undirected edge list.
 
@@ -660,7 +723,32 @@ class DataGraph:
         virtual rows so no stored block — and no compiled kernel — is
         wider than ``w_cap``.  Passing ``w_cap`` implies ``hub_split``.
         A graph whose max degree already fits ``w_cap`` stays unsplit.
+
+        ``width_policy`` selects the bucket ladder itself (DESIGN.md
+        §11): ``None``/``"pow2"`` is the default power-of-two ladder;
+        ``"measured"`` scores every candidate ladder (unsplit pow2 and
+        each hub-split ``w_cap`` variant) by a fitted cost model's
+        predicted full-sweep time and builds the cheapest.
+        ``cost_model`` is anything ``repro.profile.resolve_cost_model``
+        accepts; unset, the device's persisted calibration is used, and
+        with no calibration at all the policy degrades to the pow2
+        default (the zero-trace fallback).
         """
+        if width_policy not in (None, "pow2", "measured"):
+            raise ValueError(
+                f"unknown width_policy {width_policy!r}: expected one "
+                f"of (None, 'pow2', 'measured')")
+        if cost_model is not None and width_policy != "measured":
+            raise ValueError(
+                "cost_model= only applies to width_policy='measured' "
+                "(other policies never consult a model)")
+        if width_policy == "measured" and (
+                hub_split or w_cap is not None or bucket_widths is not None):
+            raise ValueError(
+                "width_policy='measured' chooses the bucket ladder "
+                "itself; legal combinations: width_policy='measured' "
+                "alone, or bucket_widths/hub_split/w_cap with the "
+                "default policy")
         if w_cap is not None:
             legal = "a power of two >= 2 (e.g. 2, 4, ..., 64)"
             if not isinstance(w_cap, (int, np.integer)) or w_cap < 2 \
@@ -689,6 +777,15 @@ class DataGraph:
 
         nbrs, mask, eids, is_src = _build_ell_vectorized(
             n_vertices, edges, md)
+        if width_policy == "measured":
+            from repro.profile.model import (load_cost_model,
+                                             resolve_cost_model)
+            model = (resolve_cost_model(cost_model)
+                     if cost_model is not None else load_cost_model())
+            plan = (choose_width_plan(mask.sum(axis=1), md, model)
+                    if model is not None else None)
+            if plan is not None and plan["hub_split"]:
+                hub_split, w_cap = True, plan["w_cap"]
         if hub_split and w_cap is None:
             w_cap = default_w_cap(np.maximum(deg, 1))
         if hub_split and md > w_cap:

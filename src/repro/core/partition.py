@@ -110,14 +110,45 @@ def balance_meta_graph(meta: MetaGraph, n_machines: int) -> np.ndarray:
 def two_phase_partition(n_vertices: int, edges: np.ndarray, n_machines: int,
                         k: int | None = None,
                         vertex_weight: np.ndarray | None = None,
-                        seed: int = 0) -> np.ndarray:
-    """Returns [Nv] machine assignment via atoms -> meta-graph -> LPT."""
+                        seed: int = 0,
+                        cost_model=None,
+                        n_candidates: int = 4,
+                        w_cap: int | None = None) -> np.ndarray:
+    """Returns [Nv] machine assignment via atoms -> meta-graph -> LPT.
+
+    With a fitted ``cost_model`` (DESIGN.md §11) the BFS seeding is no
+    longer trusted blindly: ``n_candidates`` over-partitionings (seeds
+    ``seed .. seed + n_candidates - 1``) are balanced and scored by
+    :func:`predicted_step_time` — the model's per-shard compute plus
+    ghost rows times the measured sync cost — and the cheapest wins.
+    The edge-cut-affinity heuristic still shapes every candidate; the
+    model only arbitrates between them, so ``cost_model=None`` (one
+    candidate, today's objective) is bit-identical to the pre-model
+    code.
+    """
     if k is None:
         k = min(max(4 * n_machines, 8), n_vertices)
-    atom_of = over_partition(n_vertices, edges, k, vertex_weight, seed)
-    meta = build_meta_graph(atom_of, edges, k, vertex_weight)
-    machine_of_atom = balance_meta_graph(meta, n_machines)
-    return machine_of_atom[atom_of]
+
+    def build(s):
+        atom_of = over_partition(n_vertices, edges, k, vertex_weight, s)
+        meta = build_meta_graph(atom_of, edges, k, vertex_weight)
+        return balance_meta_graph(meta, n_machines)[atom_of]
+
+    if cost_model is None or n_candidates <= 1:
+        return build(seed)
+    degrees = np.zeros(n_vertices, dtype=np.int64)
+    e = np.asarray(edges, dtype=np.int64).reshape(-1, 2)
+    for col in (0, 1):
+        np.add.at(degrees, e[:, col], 1)
+    best = None
+    for s in range(seed, seed + n_candidates):
+        assignment = build(s)
+        t = predicted_step_time(assignment, degrees, edges, n_machines,
+                                cost_model, w_cap=w_cap)
+        score = (np.inf if t is None else t, s)
+        if best is None or score < best[0]:
+            best = (score, assignment)
+    return best[1]
 
 
 def split_slot_weight(degrees: np.ndarray, w_cap: int) -> np.ndarray:
@@ -153,3 +184,83 @@ def cut_edges(assignment: np.ndarray, edges: np.ndarray) -> int:
     a = np.asarray(assignment)
     e = np.asarray(edges, dtype=np.int64)
     return int((a[e[:, 0]] != a[e[:, 1]]).sum())
+
+
+def ghost_rows(assignment: np.ndarray, edges: np.ndarray,
+               n_machines: int) -> np.ndarray:
+    """Ghost vertices per machine: distinct foreign-owned vertices
+    adjacent to each machine's owned set — the rows its every-superstep
+    ghost sync must receive (Distributed GraphLab's comm volume; edge
+    cut counts a shared vertex once per edge, ghosts count it once)."""
+    a = np.asarray(assignment, dtype=np.int64)
+    e = np.asarray(edges, dtype=np.int64).reshape(-1, 2)
+    # (reader machine, ghost vertex) pairs from both edge directions
+    pairs = np.concatenate([
+        np.stack([a[e[:, 0]], e[:, 1]], axis=1),
+        np.stack([a[e[:, 1]], e[:, 0]], axis=1)])
+    pairs = pairs[a[pairs[:, 1]] != pairs[:, 0]]
+    if len(pairs):
+        pairs = np.unique(pairs, axis=0)
+    counts = np.bincount(pairs[:, 0], minlength=n_machines) \
+        if len(pairs) else np.zeros(n_machines, dtype=np.int64)
+    return counts.astype(np.int64)
+
+
+def shard_bucket_launches(assignment: np.ndarray, degrees: np.ndarray,
+                          n_machines: int,
+                          w_cap: int | None = None) -> tuple:
+    """The uniform per-bucket ``(width, rows)`` launch sequence a
+    ``ShardPlan`` built from this assignment would run every superstep.
+
+    ``ShardPlan.build`` pads every shard's buckets to the max row count
+    over shards (shard-uniform shapes are what ``shard_map`` compiles),
+    so the compute cost of a partition is one bucket sweep at
+    ``rows_b = max_m count_m(b)`` — imbalance shows up as padded rows
+    every shard pays for.  ``w_cap`` applies the hub-split chunking
+    rule first (mirroring :func:`split_slot_weight`).
+    """
+    from repro.core.graph import bucket_index, default_bucket_widths
+    a = np.asarray(assignment, dtype=np.int64)
+    deg = np.maximum(np.asarray(degrees, dtype=np.int64), 0)
+    md = max(int(deg.max()) if deg.size else 1, 1)
+    if w_cap is not None and md > w_cap:
+        widths = default_bucket_widths(w_cap)
+    else:
+        widths = default_bucket_widths(md)
+        w_cap = None
+    counts = np.zeros((n_machines, len(widths)), dtype=np.int64)
+    for m in range(n_machines):
+        dm = deg[a == m]
+        if w_cap is not None:
+            full, rem = dm // w_cap, dm % w_cap
+            has_rem = (rem > 0) | (dm == 0)
+            c = np.bincount(bucket_index(widths, rem[has_rem]),
+                            minlength=len(widths))
+            c[-1] += int(full.sum())
+        else:
+            c = np.bincount(bucket_index(widths, dm), minlength=len(widths))
+        counts[m] = c
+    uniform = counts.max(axis=0)
+    return tuple((int(w), int(c)) for w, c in zip(widths, uniform) if c)
+
+
+def predicted_step_time(assignment: np.ndarray, degrees: np.ndarray,
+                        edges: np.ndarray, n_machines: int, cost_model,
+                        w_cap: int | None = None) -> float | None:
+    """Model-predicted distributed superstep microseconds (DESIGN.md §11).
+
+    Compute: the cost model priced over the shard-uniform bucket
+    launches (every shard runs the same padded shapes, so one sweep's
+    prediction is the per-shard compute).  Communication: the slowest
+    machine's ghost count times the measured per-row sync cost.
+    ``None`` when the model cannot price the launch shapes — callers
+    treat that as "no opinion" and keep the edge-cut objective.
+    """
+    launches = shard_bucket_launches(assignment, degrees, n_machines,
+                                     w_cap=w_cap)
+    compute = cost_model.predict_launches(launches)
+    if compute is None:
+        return None
+    ghosts = ghost_rows(assignment, edges, n_machines)
+    sync = float(getattr(cost_model, "sync_cost_us", 0.0))
+    return compute + sync * float(ghosts.max() if len(ghosts) else 0)

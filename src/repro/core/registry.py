@@ -27,12 +27,13 @@ distributed variants is free (the two halves are joined at lookup).
 from __future__ import annotations
 
 import dataclasses
+import importlib.metadata
 from typing import Any, Callable
 
 # Keyword arguments every registered single-device strategy understands
 # (the normalized constructor surface the facade validates against).
 SHARED_KWARGS = ("max_supersteps", "use_kernel", "kernel_interpret",
-                 "dispatch")
+                 "dispatch", "cost_model")
 # The distributed variants additionally understand the shard-plan knobs.
 SHARED_DIST_KWARGS = SHARED_KWARGS + ("exchange_edges", "axis")
 
@@ -151,11 +152,73 @@ def _ensure_registered() -> None:
     import repro.core  # noqa: F401  (imports every engine module)
 
 
+# ----------------------------------------------------------------------
+# Plugin discovery: out-of-tree strategies via package entry points
+# ----------------------------------------------------------------------
+#
+# A package declaring
+#
+#     [project.entry-points."repro.schedulers"]
+#     myengine = "mypkg.engine:register"
+#
+# makes ``api.run(..., scheduler="myengine")`` work without this repo
+# knowing the package exists: on a registry miss the entry point is
+# loaded, given a chance to self-register (the usual idiom: the loaded
+# object calls ``register_scheduler`` at import or call time), and the
+# lookup retried.  ``repro.cost_models`` entry points resolve the same
+# way for ``cost_model="..."`` strings (``repro/profile/model.py``).
+
+SCHEDULER_PLUGIN_GROUP = "repro.schedulers"
+
+
+def _iter_entry_points(group: str):
+    """All installed entry points in ``group`` (monkeypatch point for
+    tests — no fake package installation needed)."""
+    try:
+        return tuple(importlib.metadata.entry_points(group=group))
+    except Exception:
+        return ()
+
+
+def load_plugin(group: str, name: str):
+    """Load entry point ``name`` from ``group``; None if not installed."""
+    for ep in _iter_entry_points(group):
+        if ep.name == name:
+            return ep.load()
+    return None
+
+
+def _try_plugin_scheduler(name: str) -> bool:
+    """Resolve a registry miss through ``repro.schedulers`` entry points.
+
+    The loaded object may have self-registered as an import side effect;
+    failing that, a callable is treated as (called for) a factory and
+    registered under ``name`` with default metadata.  Returns whether
+    ``name`` is now registered.
+    """
+    obj = load_plugin(SCHEDULER_PLUGIN_GROUP, name)
+    if obj is None:
+        return False
+    if name not in _SCHEDULERS and callable(obj):
+        produced = obj()
+        if name not in _SCHEDULERS:
+            if not callable(produced):
+                raise ValueError(
+                    f"entry point {SCHEDULER_PLUGIN_GROUP!r}:{name!r} "
+                    f"neither registered a scheduler nor returned a "
+                    f"factory (got {produced!r})")
+            register_scheduler(name, produced,
+                               description=f"plugin ({obj.__module__})")
+    return name in _SCHEDULERS
+
+
 def get_scheduler(name: str) -> SchedulerEntry:
     _ensure_registered()
     try:
         return _SCHEDULERS[name]
     except KeyError:
+        if _try_plugin_scheduler(name):
+            return _SCHEDULERS[name]
         raise ValueError(
             f"unknown scheduler {name!r}; registered schedulers: "
             f"{', '.join(list_schedulers())}") from None

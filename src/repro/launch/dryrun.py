@@ -141,8 +141,9 @@ def dryrun_one(arch: str, shape_name: str, multi_pod: bool = False,
         model_flops=mf, bytes_per_chip=bytes_per_chip)
     row = rf.row()
     row.update({
-        "coll_breakdown": {k: v * chips for k, v in
-                           walked.coll_breakdown.items()},
+        # walker counts in the shared trace schema (flops / hbm_bytes /
+        # coll_bytes / coll_breakdown) — repro.profile.trace.hlo_counts
+        "hlo": walked.scaled(chips).counts(),
         "xla_cost_analysis": {
             "flops_body_once": float(cost.get("flops", 0.0)),
             "bytes_body_once": float(cost.get("bytes accessed", 0.0)),

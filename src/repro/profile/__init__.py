@@ -1,0 +1,16 @@
+"""Trace-driven cost modelling (DESIGN.md §11).
+
+``trace`` records per-launch wall times (and optional HLO op counts)
+from the host stepping loop; ``model`` fits the per-bucket-width linear
+cost model ``t(W, B) ~= a_W + b_W * B * W`` that ``choose_dispatch``,
+``from_edges(width_policy="measured")`` and ``two_phase_partition``
+consume; ``calibrate`` is the CLI that bootstraps a model from
+microbenchmarks when no run has been profiled yet.
+
+Only the light, numpy-only halves are re-exported here — importing
+``repro.profile`` must not pull in jax or the apps.
+"""
+from repro.profile.model import (CostModel, fit_cost_model,  # noqa: F401
+                                 load_cost_model, resolve_cost_model)
+from repro.profile.trace import (SCHEMA_VERSION, TraceRecorder,  # noqa: F401
+                                 hlo_counts, load_trace)

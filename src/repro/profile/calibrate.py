@@ -1,0 +1,171 @@
+"""Bootstrap a cost model from microbenchmarks: ``python -m
+repro.profile.calibrate [--smoke]``.
+
+Replays ``benchmarks/dispatch_window.py``-shaped launches with the
+shapes *controlled* instead of scheduler-chosen: for every bucket width
+``W`` of a Zipf graph's ladder, windows of ``B`` vertices are sampled
+from that bucket's rows (so ``window_bucket`` resolves the batch path
+to exactly ``W``) and one full jitted ``apply_batch`` is wall-clocked
+per ``(W, B)`` point — the same gather -> kernel -> update -> scatter
+-> bookkeeping pipeline a real engine step runs.  Ghost-sync cost is
+measured as the per-row slope of a jitted scatter at two sizes.
+Optionally each launch's lowered HLO is walked (``roofline/hlo_parse``)
+so the trace carries op counts in the shared schema.
+
+Writes ``results/TRACE_<device>.json`` and fits + writes
+``results/COSTMODEL_<device>.json`` (see ``repro.profile.model``).
+Calibration is strictly off the hot path: nothing here runs unless
+invoked, and consuming the model never re-times anything.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+from repro.profile.model import CostModel, fit_cost_model
+from repro.profile.trace import TraceRecorder, results_dir
+
+SMOKE_SIZES = dict(nv=400, cap=32, batch_sizes=(4, 16, 64), iters=3)
+FULL_SIZES = dict(nv=10_000, cap=192, batch_sizes=(8, 64, 512, 4096),
+                  iters=5)
+
+
+def _time_us(fn, *args, warmup: int = 1, iters: int = 5) -> float:
+    """Best-of-N microseconds (same statistic as dispatch_window)."""
+    import jax
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    best = float("inf")
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e6
+
+
+def _batch_fn(g, upd, ids, mode: str):
+    """One jitted conflict-free batch (dispatch_window's shape)."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.exec import apply_batch
+    nv = g.n_vertices
+    valid = jnp.ones(ids.shape, bool)
+
+    def run(vdata):
+        carry = (vdata, g.edge_data, jnp.ones((nv,), bool),
+                 jnp.ones((nv,), jnp.float32), jnp.int32(0))
+        out = apply_batch(g, upd, carry, ids, valid, {}, sentinel=nv,
+                          use_kernel=True, interpret=True, dispatch=mode)
+        return out[0]
+    return jax.jit(run)
+
+
+def _hlo_of(jfn, *args):
+    """HLO op counts of a jitted fn at these args; None on any failure
+    (interpret-mode lowerings may not expose a walkable module)."""
+    try:
+        from repro.roofline.hlo_parse import analyze
+        return analyze(jfn.lower(*args).compile().as_text())
+    except Exception:
+        return None
+
+
+def _bucket_windows(ell, b: int, batch_sizes, seed: int):
+    """Sorted id windows drawn from bucket ``b``'s owned rows (with
+    replacement past the bucket's row count, so every ``B`` is
+    reachable); all-bucket-``b`` windows pin the batch path's
+    ``window_bucket`` to width ``widths[b]``."""
+    import jax.numpy as jnp
+    s, e = int(ell.starts[b]), int(ell.starts[b + 1])
+    rows = np.asarray(ell.perm)[s:e]
+    if ell.is_split:
+        rows = rows[rows < ell.n_virtual]
+        rows = np.asarray(ell.owner_of_vrow)[rows]
+    owners = np.unique(rows[rows < ell.n_rows])
+    if owners.size == 0:
+        return []
+    rng = np.random.default_rng(seed + b)
+    out = []
+    for B in batch_sizes:
+        pick = (rng.choice(owners, size=B, replace=B > owners.size)
+                if B != owners.size else owners)
+        out.append((B, jnp.asarray(np.sort(pick), jnp.int32)))
+    return out
+
+
+def _measure_sync(nv: int, recorder: TraceRecorder, iters: int) -> None:
+    """Per-ghost-row sync cost: a jitted row scatter at two sizes."""
+    import jax
+    import jax.numpy as jnp
+    arr = jnp.zeros((nv, 4), jnp.float32)
+    fn = jax.jit(lambda a, i, v: a.at[i].set(v))
+    for rows in sorted({max(nv // 8, 1), max(nv // 2, 2)}):
+        idx = jnp.arange(rows, dtype=jnp.int32)
+        vals = jnp.ones((rows, 4), jnp.float32)
+        wall = _time_us(fn, arr, idx, vals, iters=iters)
+        recorder.record_sync(rows=rows, wall_us=wall)
+
+
+def calibrate(nv: int, cap: int, batch_sizes, iters: int = 5,
+              with_hlo: bool = True, seed: int = 0,
+              emit=print) -> tuple[TraceRecorder, CostModel]:
+    """Record the microbenchmark trace and fit a model (pure function
+    of sizes; callers decide whether to persist)."""
+    from repro.apps import pagerank
+    from repro.core.graph import zipf_edges
+    g = pagerank.make_graph(zipf_edges(nv, alpha=2.0, max_deg=cap,
+                                       seed=seed), nv)
+    upd = pagerank.make_update(1e-6)
+    ell = g.ell
+    recorder = TraceRecorder()
+    for b, w in enumerate(ell.widths):
+        for B, ids in _bucket_windows(ell, b, batch_sizes, seed):
+            fn = _batch_fn(g, upd, ids, "batch")
+            wall = _time_us(fn, g.vertex_data, iters=iters)
+            hlo = _hlo_of(fn, g.vertex_data) if with_hlo else None
+            recorder.record_launch(mode="batch", width=w, rows=B,
+                                   wall_us=wall, hlo=hlo)
+            emit(f"calibrate_w{w}_B{B},{wall:.1f},slots={B * w}")
+    # one full bucket sweep for replay/validation (not a fit point)
+    import jax.numpy as jnp
+    ids_all = jnp.arange(g.n_vertices, dtype=jnp.int32)
+    fn = _batch_fn(g, upd, ids_all, "bucket")
+    recorder.record_step(mode="bucket", wall_us=_time_us(
+        fn, g.vertex_data, iters=iters), launches=ell.bucket_launches)
+    _measure_sync(nv, recorder, iters)
+    model = fit_cost_model(recorder.records, device=recorder.device)
+    return recorder, model
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="record a launch-cost trace and fit "
+                    "results/COSTMODEL_<device>.json")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sizes for CI (seconds, not minutes)")
+    ap.add_argument("--nv", type=int, default=None)
+    ap.add_argument("--cap", type=int, default=None)
+    ap.add_argument("--iters", type=int, default=None)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--no-hlo", action="store_true",
+                    help="skip HLO op-count capture")
+    args = ap.parse_args(argv)
+    sizes = dict(SMOKE_SIZES if args.smoke else FULL_SIZES)
+    for key in ("nv", "cap", "iters"):
+        if getattr(args, key) is not None:
+            sizes[key] = getattr(args, key)
+    recorder, model = calibrate(with_hlo=not args.no_hlo,
+                                seed=args.seed, **sizes)
+    tpath = recorder.save()
+    mpath = model.save()
+    print(f"# {len(recorder.records)} records -> {tpath}")
+    print(f"# fitted {len(model.coef)} widths, "
+          f"sync={model.sync_cost_us:.4f} us/row -> {mpath}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,116 @@
+"""Per-launch timing traces: the raw material the cost model fits.
+
+A trace is a list of flat JSON records sharing one schema with the
+``results/hlo/`` artifacts (``roofline/reanalyze.py`` nests the same
+``hlo_counts`` dict under the same ``"hlo"`` key).  Three record kinds:
+
+* ``launch`` — one timed kernel launch at a known shape:
+  ``{"kind": "launch", "mode": "batch"|"bucket", "width": W,
+  "rows": B, "wall_us": t, "cold": bool, "hlo": {...}?}``.
+  ``width * rows`` is the padded slot count the model regresses on.
+* ``step`` — one engine superstep from ``api.run(profile=True)``:
+  same fields plus ``"phases"`` and, for bucket-mode steps, a
+  ``"launches": [[W_b, rows_b], ...]`` composite instead of a single
+  ``width``/``rows`` pair.  Only single-launch batch steps are usable
+  as fit points; composite steps are kept for replay/validation.
+* ``sync`` — one timed ghost-write-sized scatter:
+  ``{"kind": "sync", "rows": H, "wall_us": t}``; fits the per-ghost-row
+  ``sync_cost_us`` the partition objective charges.
+
+Recording happens only on the host stepping path (``api.run`` with
+``profile=True``), never inside the fused while-loop — see DESIGN.md
+§11 for why calibration lives off the hot path.
+"""
+from __future__ import annotations
+
+import json
+import os
+import pathlib
+
+SCHEMA_VERSION = 1
+
+#: Keys of the shared HLO-count schema (subset of roofline's ``Cost``).
+HLO_KEYS = ("flops", "hbm_bytes", "coll_bytes")
+
+
+def results_dir() -> pathlib.Path:
+    """Artifact directory: ``$REPRO_RESULTS_DIR`` or ``./results``."""
+    return pathlib.Path(os.environ.get("REPRO_RESULTS_DIR", "results"))
+
+
+def hlo_counts(cost) -> dict:
+    """Project a roofline ``Cost`` onto the shared trace schema.
+
+    Accepts anything with ``flops`` / ``bytes`` / ``coll_bytes``
+    attributes; both the timing traces here and the reanalyzed
+    ``results/hlo/`` rows carry this dict under an ``"hlo"`` key, so
+    one reader serves both artifact families.
+    """
+    d = {"flops": int(cost.flops), "hbm_bytes": int(cost.bytes),
+         "coll_bytes": int(cost.coll_bytes)}
+    br = getattr(cost, "coll_breakdown", None)
+    if br:
+        d["coll_breakdown"] = {k: int(v) for k, v in dict(br).items()}
+    return d
+
+
+class TraceRecorder:
+    """Append-only launch/step/sync record sink with JSON persistence."""
+
+    def __init__(self, device: str | None = None):
+        if device is None:
+            import jax
+            device = jax.devices()[0].platform
+        self.device = device
+        self.records: list[dict] = []
+
+    def record_launch(self, *, mode: str, width: int, rows: int,
+                      wall_us: float, cold: bool = False, hlo=None,
+                      **extra) -> dict:
+        rec = {"kind": "launch", "mode": mode, "width": int(width),
+               "rows": int(rows), "wall_us": float(wall_us),
+               "cold": bool(cold), **extra}
+        if hlo is not None:
+            rec["hlo"] = hlo_counts(hlo) if hasattr(hlo, "flops") else hlo
+        self.records.append(rec)
+        return rec
+
+    def record_step(self, *, mode: str, wall_us: float, rows=None,
+                    width=None, launches=None, phases: int = 1,
+                    cold: bool = False, **extra) -> dict:
+        rec = {"kind": "step", "mode": mode, "wall_us": float(wall_us),
+               "phases": int(phases), "cold": bool(cold), **extra}
+        if rows is not None:
+            rec["rows"] = int(rows)
+        if width is not None:
+            rec["width"] = int(width)
+        if launches is not None:
+            rec["launches"] = [[int(w), int(r)] for w, r in launches]
+        self.records.append(rec)
+        return rec
+
+    def record_sync(self, *, rows: int, wall_us: float,
+                    cold: bool = False, **extra) -> dict:
+        rec = {"kind": "sync", "rows": int(rows),
+               "wall_us": float(wall_us), "cold": bool(cold), **extra}
+        self.records.append(rec)
+        return rec
+
+    def to_json(self) -> dict:
+        return {"schema": SCHEMA_VERSION, "device": self.device,
+                "records": self.records}
+
+    def save(self, path: str | os.PathLike | None = None) -> pathlib.Path:
+        if path is None:
+            path = results_dir() / f"TRACE_{self.device}.json"
+        path = pathlib.Path(path)
+        path.parent.mkdir(parents=True, exist_ok=True)
+        path.write_text(json.dumps(self.to_json(), indent=1))
+        return path
+
+
+def load_trace(path: str | os.PathLike) -> TraceRecorder:
+    doc = json.loads(pathlib.Path(path).read_text())
+    rec = TraceRecorder(device=doc.get("device", "unknown"))
+    rec.records = list(doc.get("records", ()))
+    return rec

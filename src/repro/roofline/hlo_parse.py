@@ -188,6 +188,13 @@ class Cost:
             float, {kk: v * k for kk, v in self.bytes_by_op.items()})
         return c
 
+    def counts(self) -> dict:
+        """This cost in the shared trace schema (the ``"hlo"`` dict both
+        ``results/TRACE_*.json`` launch records and reanalyzed
+        ``results/hlo/`` rows carry — ``repro.profile.trace``)."""
+        from repro.profile.trace import hlo_counts
+        return hlo_counts(self)
+
 
 def _dot_flops(op: Op, comp: Computation) -> float:
     out_elems = _shape_list_elems(op.out_text)

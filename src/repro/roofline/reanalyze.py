@@ -5,6 +5,13 @@
 
 Rewrites the roofline rows for every cached (arch, shape, mesh) whose
 memory_analysis fields are merged from the existing JSONL if present.
+
+Output rows nest the walker's op counts under an ``"hlo"`` key in the
+shared trace schema (``repro.profile.trace.hlo_counts``) — the same
+dict ``results/TRACE_*.json`` launch records carry — so one reader
+serves both artifact families.  ``--merge-from`` accepts files in
+either layout: the pre-schema flat form (top-level ``coll_breakdown``)
+or this nested form.
 """
 from __future__ import annotations
 
@@ -17,6 +24,10 @@ import os
 from repro import configs
 from repro.configs.base import INPUT_SHAPES
 from repro.roofline import analysis, hlo_parse
+
+# row keys carried over verbatim from a --merge-from file (measured on
+# real hardware; a reanalysis cannot recompute them)
+_MERGE_KEYS = ("memory_analysis", "compile_s", "lower_s")
 
 
 def main() -> None:
@@ -54,9 +65,8 @@ def main() -> None:
             model_flops=analysis.model_flops(cfg, shape),
             bytes_per_chip=prev.get("hbm_per_chip_gb", 0) * 1e9)
         row = rf.row()
-        row["coll_breakdown"] = {k: v * chips for k, v in
-                                 walked.coll_breakdown.items()}
-        for key in ("memory_analysis", "compile_s", "lower_s"):
+        row["hlo"] = walked.scaled(chips).counts()
+        for key in _MERGE_KEYS:
             if key in prev:
                 row[key] = prev[key]
         rows.append(row)

@@ -1,0 +1,506 @@
+"""Trace-driven cost model (DESIGN.md §11).
+
+Contracts asserted here:
+
+1. **Fit correctness + monotonicity** — ``fit_cost_model`` recovers a
+   planted linear law exactly, and every fitted curve is monotone
+   non-decreasing in the padded slot count ``B * W`` (the clamp that
+   keeps a noisy trace from inverting the dispatch crossover).  The
+   hypothesis sweep of the same property lives in
+   ``test_profile_properties.py`` (optional dep, skips cleanly).
+2. **Zero-trace fallback is bitwise** — an empty model predicts
+   ``None`` everywhere and ``choose_dispatch`` with it reproduces the
+   static slot-count choices exactly, over a pinned grid.
+3. **The dispatcher stays invisible** — ``dispatch="auto"`` under ANY
+   cost model (including ones that force each pick) is bit-identical
+   to the forced modes; the model moves the crossover, never results.
+4. **One error surface** — ``choose_dispatch`` and ``validate_dispatch``
+   raise the same text for an unknown mode (satellite: engines and the
+   facade funnel through one validator).
+5. **Persistence + resolution** — COSTMODEL save/load roundtrip,
+   ``REPRO_RESULTS_DIR`` redirection, and every ``cost_model=`` spec
+   form ``resolve_cost_model`` accepts.
+6. **Calibration smoke** — a tiny ``repro.profile.calibrate`` run fits
+   real widths and carries HLO op counts in the shared trace schema.
+7. **Measured width policy** — ``width_policy="measured"`` picks a
+   hub-split ladder when the model prices wide launches out, and falls
+   back to the pow2 default (structurally unchanged) with no model.
+8. **Partition objective** — ``predicted_step_time`` ranks a balanced
+   partition ahead of degenerate ones, and candidate selection in
+   ``two_phase_partition`` never returns a worse-scoring assignment.
+9. **Plugin discovery** — ``repro.schedulers`` / ``repro.cost_models``
+   entry points resolve through the registry (monkeypatched iterator,
+   no package installation).
+"""
+import json
+import types
+
+import numpy as np
+import pytest
+
+from repro import api
+from repro.apps import pagerank
+from repro.core import ChromaticEngine, PriorityEngine
+from repro.core.exec import choose_dispatch, validate_dispatch
+from repro.core.graph import (DataGraph, candidate_width_plans,
+                              choose_width_plan, zipf_edges)
+from repro.core import registry
+from repro.core.partition import (ghost_rows, predicted_step_time,
+                                  random_partition, shard_bucket_launches,
+                                  two_phase_partition)
+from repro.profile import (CostModel, TraceRecorder, fit_cost_model,
+                           load_cost_model, load_trace, resolve_cost_model)
+from conftest import random_graph
+
+
+def _launch(width, rows, wall_us, **kw):
+    return {"kind": "launch", "mode": "batch", "width": width,
+            "rows": rows, "wall_us": wall_us, **kw}
+
+
+def _linear_records(coef, batch_sizes=(4, 16, 64, 256)):
+    """Noise-free records obeying ``t = a_W + b_W * B * W`` exactly."""
+    return [_launch(w, b, a + bb * b * w)
+            for w, (a, bb) in coef.items() for b in batch_sizes]
+
+
+# ----------------------------------------------------------------------
+# 1. fit correctness + monotonicity
+# ----------------------------------------------------------------------
+
+def test_fit_recovers_planted_linear_law():
+    planted = {4: (120.0, 0.02), 16: (150.0, 0.005), 64: (200.0, 0.001)}
+    model = fit_cost_model(_linear_records(planted), device="testdev")
+    assert sorted(model.coef) == [4, 16, 64]
+    for w, (a, b) in planted.items():
+        fa, fb = model.coef[w]
+        np.testing.assert_allclose([fa, fb], [a, b], rtol=1e-8)
+        np.testing.assert_allclose(model.predict(w, 32), a + b * 32 * w)
+    assert model.pooled is not None
+    # unmeasured width falls back to the pooled line, never None
+    assert model.predict(8, 10) is not None
+    assert model.n_records == len(_linear_records(planted))
+
+
+def test_fit_is_monotone_in_slots_even_under_noise():
+    """For ANY trace, fixed W: predict is non-decreasing in rows (the
+    clamp collapses negative slopes to flat means)."""
+    for seed in range(8):
+        rng = np.random.default_rng(seed)
+        records = []
+        for w in (2, 8, 32):
+            for b in (4, 16, 64, 256):
+                # adversarial: pure noise, no signal at all
+                records.append(_launch(w, b, float(rng.uniform(1, 1000))))
+        model = fit_cost_model(records)
+        for w in (2, 8, 32, 128):   # 128 exercises the pooled fallback
+            ts = [model.predict(w, b) for b in (1, 4, 16, 64, 256, 4096)]
+            assert all(t is not None and t >= 0 for t in ts), (seed, w)
+            assert all(t1 - t0 >= -1e-9 for t0, t1 in zip(ts, ts[1:])), \
+                (seed, w, ts)
+
+
+def test_fit_ignores_cold_records_and_fits_sync_slope():
+    records = _linear_records({8: (100.0, 0.01)})
+    records.append(_launch(8, 4, 1e9, cold=True))   # compile-time outlier
+    records += [{"kind": "sync", "rows": 100, "wall_us": 50.0 + 0.5 * 100},
+                {"kind": "sync", "rows": 400, "wall_us": 50.0 + 0.5 * 400}]
+    model = fit_cost_model(records)
+    np.testing.assert_allclose(model.coef[8], (100.0, 0.01), rtol=1e-8)
+    np.testing.assert_allclose(model.sync_cost_us, 0.5, rtol=1e-8)
+
+
+# ----------------------------------------------------------------------
+# 2. zero-trace fallback is bitwise
+# ----------------------------------------------------------------------
+
+def test_empty_model_predicts_none_and_keeps_static_choices():
+    empty = CostModel()
+    assert empty.predict(8, 4) is None
+    assert empty.predict_launches([(8, 4)]) is None
+    launches = ((2, 100), (8, 30), (32, 5))
+    for b in (1, 8, 64, 512, 4096):
+        for w in (2, 8, 32, 128):
+            for slots in (64, 1024, 65536):
+                static = choose_dispatch("auto", b, w, slots)
+                assert choose_dispatch("auto", b, w, slots,
+                                       cost_model=empty) == static
+                assert choose_dispatch(
+                    "auto", b, w, slots, cost_model=empty,
+                    bucket_launches=launches) == static
+                # forced modes ignore the model entirely
+                for forced in ("bucket", "batch"):
+                    assert choose_dispatch(forced, b, w, slots,
+                                           cost_model=empty) == forced
+
+
+def test_partial_model_falls_back_when_bucket_side_unknown():
+    model = fit_cost_model(_linear_records({8: (10.0, 0.01)}))
+    # no bucket_launches handed over -> bucket side unpredictable ->
+    # static rule, even though the batch side has a fit
+    assert (choose_dispatch("auto", 4, 8, 10_000, cost_model=model)
+            == "batch")
+    assert (choose_dispatch("auto", 4000, 8, 10_000, cost_model=model)
+            == "bucket")
+
+
+# ----------------------------------------------------------------------
+# 3. any cost model is dispatcher-invisible (bitwise)
+# ----------------------------------------------------------------------
+
+class _Force:
+    """A cost model that always prices one path cheaper."""
+
+    def __init__(self, pick):
+        self._batch_t = 1.0 if pick == "batch" else 2.0
+
+    def predict(self, width, rows):
+        return self._batch_t
+
+    def predict_launches(self, launches):
+        return 1.5
+
+
+@pytest.mark.parametrize("pick", ["batch", "bucket"])
+def test_forced_cost_model_picks_that_path(pick):
+    assert choose_dispatch("auto", 7, 8, 100, cost_model=_Force(pick),
+                           bucket_launches=((8, 10),)) == pick
+
+
+@pytest.mark.parametrize("pick", ["batch", "bucket"])
+def test_cost_model_is_bitwise_invisible(pick):
+    """auto + a model that forces either pick == the forced mode's run,
+    bit for bit — for a sweep engine and a windowed engine."""
+    edges = zipf_edges(120, alpha=2.0, max_deg=32, seed=3)
+    g = pagerank.make_graph(edges, 120)
+    upd = pagerank.make_update(1e-6)
+    ref_c = ChromaticEngine(g, upd, dispatch=pick, max_supersteps=200).run()
+    got_c = ChromaticEngine(g, upd, dispatch="auto", cost_model=_Force(pick),
+                            max_supersteps=200).run()
+    ref_p = PriorityEngine(g, upd, dispatch=pick, k_select=16,
+                           max_supersteps=4000).run()
+    got_p = PriorityEngine(g, upd, dispatch="auto", cost_model=_Force(pick),
+                           k_select=16, max_supersteps=4000).run()
+    for ref, got in ((ref_c, got_c), (ref_p, got_p)):
+        assert np.array_equal(np.asarray(got.vertex_data["rank"]),
+                              np.asarray(ref.vertex_data["rank"]))
+        assert int(got.n_updates) == int(ref.n_updates)
+        assert int(got.superstep) == int(ref.superstep)
+
+
+# ----------------------------------------------------------------------
+# 4. one error surface for dispatch validation
+# ----------------------------------------------------------------------
+
+def test_choose_and_validate_dispatch_share_error_text():
+    with pytest.raises(ValueError) as e1:
+        validate_dispatch("bogus")
+    with pytest.raises(ValueError) as e2:
+        choose_dispatch("bogus", 8, 8, 100)
+    assert str(e1.value) == str(e2.value)
+    assert "expected one of" in str(e1.value)
+
+
+# ----------------------------------------------------------------------
+# 5. persistence + spec resolution
+# ----------------------------------------------------------------------
+
+def test_save_load_roundtrip_and_results_dir_env(tmp_path, monkeypatch):
+    model = fit_cost_model(_linear_records({4: (10.0, 0.5)}),
+                           device="testdev")
+    model.sync_cost_us = 0.25
+    path = model.save(tmp_path / "m.json")
+    back = CostModel.load(path)
+    assert back.coef == model.coef
+    assert back.pooled == model.pooled
+    assert back.sync_cost_us == model.sync_cost_us
+    assert back.device == "testdev"
+    # REPRO_RESULTS_DIR redirects the default artifact location
+    monkeypatch.setenv("REPRO_RESULTS_DIR", str(tmp_path / "alt"))
+    p2 = model.save()
+    assert p2 == tmp_path / "alt" / "COSTMODEL_testdev.json"
+    assert load_cost_model(device="testdev").coef == model.coef
+    rec = TraceRecorder(device="testdev")
+    rec.record_launch(mode="batch", width=4, rows=8, wall_us=12.0)
+    tp = rec.save()
+    assert tp == tmp_path / "alt" / "TRACE_testdev.json"
+    back_rec = load_trace(tp)
+    assert back_rec.device == "testdev"
+    assert back_rec.records == rec.records
+
+
+def test_resolve_cost_model_spec_forms(tmp_path, monkeypatch):
+    model = fit_cost_model(_linear_records({4: (10.0, 0.5)}), device="t")
+    assert resolve_cost_model(None) is None
+    assert resolve_cost_model("static") is None
+    assert resolve_cost_model(model) is model
+    path = model.save(tmp_path / "COSTMODEL_t.json")
+    assert resolve_cost_model(str(path)).coef == model.coef
+    monkeypatch.setenv("REPRO_RESULTS_DIR", str(tmp_path / "nothing"))
+    with pytest.raises(ValueError, match="calibrate"):
+        resolve_cost_model("measured")
+    with pytest.raises(ValueError, match="entry point"):
+        resolve_cost_model("no-such-plugin")
+    with pytest.raises(ValueError, match="cost_model must be"):
+        resolve_cost_model(42)
+
+
+# ----------------------------------------------------------------------
+# 6. calibration smoke: real fits, shared HLO schema
+# ----------------------------------------------------------------------
+
+def test_calibrate_smoke_fits_widths_and_carries_hlo():
+    from repro.profile.calibrate import calibrate
+    recorder, model = calibrate(nv=120, cap=8, batch_sizes=(4, 8),
+                                iters=1, with_hlo=True,
+                                emit=lambda *_: None)
+    assert model.coef, "no widths fitted"
+    assert model.n_records > 0
+    t = model.predict(max(model.coef), 8)
+    assert t is not None and t > 0
+    launches = [r for r in recorder.records if r["kind"] == "launch"]
+    assert launches
+    hlos = [r["hlo"] for r in launches if r.get("hlo")]
+    assert hlos, "no launch carried HLO op counts"
+    for h in hlos:
+        assert set(h) >= {"flops", "hbm_bytes", "coll_bytes"}
+        assert h["flops"] > 0
+    # the recorded trace refits to the same model
+    refit = fit_cost_model(recorder.records, device=model.device)
+    assert refit.coef == model.coef
+    assert refit.sync_cost_us == model.sync_cost_us
+
+
+# ----------------------------------------------------------------------
+# 7. measured width policy
+# ----------------------------------------------------------------------
+
+def _slot_counts(nv, edges):
+    deg = np.zeros(nv, dtype=np.int64)
+    for u, v in edges:
+        deg[u] += 1
+        deg[v] += 1
+    return deg
+
+
+def test_candidate_width_plans_conserve_rows():
+    nv = 150
+    edges = zipf_edges(nv, alpha=2.0, max_deg=48, seed=9)
+    cnt = _slot_counts(nv, edges)
+    plans = candidate_width_plans(cnt, int(cnt.max()))
+    assert plans[0]["hub_split"] is False
+    assert sum(r for _, r in plans[0]["launches"]) == nv
+    for plan in plans[1:]:
+        cap = plan["w_cap"]
+        assert plan["hub_split"] and plan["widths"][-1] == cap
+        # every row contributes ceil(slots / cap) chunks (min 1)
+        expect = int(np.maximum(1, -(-cnt // cap)).sum())
+        assert sum(r for _, r in plan["launches"]) == expect
+
+
+def test_measured_width_policy_splits_when_wide_is_priced_out():
+    nv = 150
+    edges = zipf_edges(nv, alpha=2.0, max_deg=48, seed=9)
+    vdata = {"x": np.zeros(nv, np.float32)}
+    edata = {"w": np.ones(len(edges), np.float32)}
+    # wide launches cost 1e9, narrow ones ~their slot count
+    wide_hostile = CostModel(coef={w: ((1e9, 0.0) if w > 8 else (0.0, 1.0))
+                                   for w in (2, 4, 8, 16, 32, 64)},
+                             pooled=(1e9, 0.0))
+    g = DataGraph.from_edges(nv, edges, vdata, edata,
+                             width_policy="measured",
+                             cost_model=wide_hostile)
+    assert g.ell.is_split and g.ell.widths[-1] <= 8
+    cnt = _slot_counts(nv, edges)
+    plan = choose_width_plan(cnt, int(cnt.max()), wide_hostile)
+    assert plan["hub_split"] and plan["w_cap"] == g.ell.w_cap
+    # the split build still computes the same answers
+    upd = pagerank.make_update(1e-6)
+    gp = pagerank.make_graph(edges, nv)
+    gm = pagerank.make_graph(edges, nv, w_cap=g.ell.w_cap)
+    a = ChromaticEngine(gp, upd, max_supersteps=200).run()
+    b = ChromaticEngine(gm, upd, max_supersteps=200).run()
+    np.testing.assert_allclose(np.asarray(a.vertex_data["rank"]),
+                               np.asarray(b.vertex_data["rank"]),
+                               rtol=1e-6, atol=1e-7)
+
+
+def test_measured_width_policy_without_model_is_pow2_default(
+        tmp_path, monkeypatch):
+    monkeypatch.setenv("REPRO_RESULTS_DIR", str(tmp_path))  # no model file
+    nv = 80
+    edges = zipf_edges(nv, alpha=2.0, max_deg=16, seed=2)
+    vdata = {"x": np.zeros(nv, np.float32)}
+    edata = {"w": np.ones(len(edges), np.float32)}
+    g_meas = DataGraph.from_edges(nv, edges, vdata, edata,
+                                  width_policy="measured")
+    g_def = DataGraph.from_edges(nv, edges, vdata, edata)
+    assert g_meas.ell.widths == g_def.ell.widths
+    assert g_meas.ell.is_split == g_def.ell.is_split
+    # an empty model also falls back (choose_width_plan -> None)
+    assert choose_width_plan(_slot_counts(nv, edges), 16,
+                             CostModel()) is None
+
+
+def test_width_policy_validation_errors():
+    nv, edges = 20, np.array([[0, 1], [1, 2]])
+    vdata = {"x": np.zeros(nv, np.float32)}
+    edata = {"w": np.ones(2, np.float32)}
+    with pytest.raises(ValueError, match="width_policy"):
+        DataGraph.from_edges(nv, edges, vdata, edata, width_policy="bogus")
+    with pytest.raises(ValueError):
+        DataGraph.from_edges(nv, edges, vdata, edata,
+                             cost_model=CostModel())
+    with pytest.raises(ValueError):
+        DataGraph.from_edges(nv, edges, vdata, edata,
+                             width_policy="measured", w_cap=8)
+
+
+# ----------------------------------------------------------------------
+# 8. partition objective
+# ----------------------------------------------------------------------
+
+def _zipf_partition_setup(nv=600, cap=48, n_machines=4):
+    edges = zipf_edges(nv, alpha=2.0, max_deg=cap, seed=0)
+    return edges, _slot_counts(nv, edges), n_machines
+
+
+def test_predicted_step_time_prefers_balanced_partitions():
+    edges, degrees, m = _zipf_partition_setup()
+    nv = len(degrees)
+    model = CostModel(pooled=(1.0, 0.1), sync_cost_us=0.01)
+    balanced = random_partition(nv, m, seed=0)
+    one_machine = np.zeros(nv, dtype=np.int64)
+    rng = np.random.default_rng(1)
+    skewed = rng.choice(m, size=nv, p=[0.85, 0.05, 0.05, 0.05])
+    t_bal = predicted_step_time(balanced, degrees, edges, m, model)
+    t_one = predicted_step_time(one_machine, degrees, edges, m, model)
+    t_skew = predicted_step_time(skewed, degrees, edges, m, model)
+    assert t_bal is not None
+    # shard-uniform launches make imbalance a straight compute tax
+    assert t_bal < t_skew < t_one
+    # empty model -> unpredictable, callers keep the cut-edge objective
+    assert predicted_step_time(balanced, degrees, edges, m,
+                               CostModel()) is None
+
+
+def test_shard_launches_and_ghosts_shapes():
+    edges, degrees, m = _zipf_partition_setup(nv=200, cap=16)
+    asg = random_partition(len(degrees), m, seed=3)
+    launches = shard_bucket_launches(asg, degrees, m)
+    assert launches and all(w > 0 and r > 0 for w, r in launches)
+    widths = [w for w, _ in launches]
+    assert widths == sorted(widths)
+    ghosts = ghost_rows(asg, edges, m)
+    assert ghosts.shape == (m,)
+    assert ghosts.max() > 0        # a random cut always crosses machines
+
+
+def test_two_phase_candidate_selection_never_worse():
+    edges, degrees, m = _zipf_partition_setup(nv=300, cap=32)
+    nv = len(degrees)
+    model = CostModel(pooled=(5.0, 0.05), sync_cost_us=0.2)
+    base = two_phase_partition(nv, edges, m, seed=0)
+    picked = two_phase_partition(nv, edges, m, seed=0, cost_model=model,
+                                 n_candidates=4)
+    assert picked.shape == (nv,) and picked.max() < m
+    t_base = predicted_step_time(base, degrees, edges, m, model)
+    t_pick = predicted_step_time(picked, degrees, edges, m, model)
+    assert t_pick <= t_base
+    # n_candidates=1 short-circuits to the plain seed-0 build, bitwise
+    same = two_phase_partition(nv, edges, m, seed=0, cost_model=model,
+                               n_candidates=1)
+    np.testing.assert_array_equal(same, base)
+
+
+# ----------------------------------------------------------------------
+# 9. plugin discovery through entry points (monkeypatched)
+# ----------------------------------------------------------------------
+
+def _fake_eps(monkeypatch, group, name, obj):
+    real = registry._iter_entry_points
+
+    def fake(g):
+        if g == group:
+            return (types.SimpleNamespace(name=name, load=lambda: obj),)
+        return real(g)
+    monkeypatch.setattr(registry, "_iter_entry_points", fake)
+
+
+def test_scheduler_plugin_resolves_on_registry_miss(monkeypatch):
+    def plugin_factory():
+        return lambda graph, update_fn, syncs=None, **kw: ChromaticEngine(
+            graph, update_fn, syncs=syncs or (), **kw)
+    _fake_eps(monkeypatch, registry.SCHEDULER_PLUGIN_GROUP,
+              "extplugin", plugin_factory)
+    try:
+        entry = registry.get_scheduler("extplugin")
+        assert entry.name == "extplugin"
+        assert "plugin" in entry.description
+        g, upd = (pagerank.make_graph(random_graph(30, 60, seed=1), 30),
+                  pagerank.make_update(1e-5))
+        res = api.run(g, upd, scheduler="extplugin", max_supersteps=100)
+        ref = api.run(g, upd, scheduler="chromatic", max_supersteps=100)
+        assert np.array_equal(np.asarray(res.vertex_data["rank"]),
+                              np.asarray(ref.vertex_data["rank"]))
+    finally:
+        registry._SCHEDULERS.pop("extplugin", None)
+
+
+def test_unknown_scheduler_error_unchanged_by_plugins(monkeypatch):
+    monkeypatch.setattr(registry, "_iter_entry_points", lambda g: ())
+    with pytest.raises(ValueError, match="registered schedulers"):
+        registry.get_scheduler("no-such-engine")
+
+
+def test_cost_model_plugin_resolves_by_name(monkeypatch):
+    from repro.profile.model import COST_MODEL_PLUGIN_GROUP
+    planted = fit_cost_model(_linear_records({4: (3.0, 0.25)}), device="pl")
+    _fake_eps(monkeypatch, COST_MODEL_PLUGIN_GROUP, "labmodel",
+              lambda: planted)
+    got = resolve_cost_model("labmodel")
+    assert got.coef == planted.coef
+
+
+# ----------------------------------------------------------------------
+# profile=True recording through the facade
+# ----------------------------------------------------------------------
+
+def test_api_profile_records_steps_and_fits():
+    g = pagerank.make_graph(random_graph(40, 90, seed=3), 40)
+    upd = pagerank.make_update(1e-5)
+    res = api.run(g, upd, scheduler="chromatic", max_supersteps=50,
+                  profile=True)
+    rec = res.profile
+    assert rec is not None and rec.records
+    steps = [r for r in rec.records if r["kind"] == "step"]
+    assert len(steps) == res.superstep
+    for r in steps:
+        assert r["mode"] in ("batch", "bucket")
+        assert r["wall_us"] > 0
+    assert steps[0]["cold"] is True        # first shape always cold
+    # the profiled run is still the plain run, bit for bit
+    ref = api.run(g, upd, scheduler="chromatic", max_supersteps=50)
+    assert np.array_equal(np.asarray(res.vertex_data["rank"]),
+                          np.asarray(ref.vertex_data["rank"]))
+    assert res.superstep == ref.superstep
+    # and its trace is fittable (chromatic sweeps are batch-mode
+    # single-phase only on some graphs; empty fits are legal too)
+    model = fit_cost_model(rec.records, device=rec.device)
+    assert isinstance(model, CostModel)
+
+
+def test_api_run_accepts_cost_model_and_stays_bitwise():
+    g = pagerank.make_graph(random_graph(40, 90, seed=3), 40)
+    upd = pagerank.make_update(1e-5)
+    model = fit_cost_model(_linear_records({2: (1.0, 0.01),
+                                            4: (1.0, 0.01),
+                                            8: (1.0, 0.01)}))
+    ref = api.run(g, upd, scheduler="chromatic", max_supersteps=50)
+    got = api.run(g, upd, scheduler="chromatic", max_supersteps=50,
+                  dispatch="auto", cost_model=model)
+    assert np.array_equal(np.asarray(got.vertex_data["rank"]),
+                          np.asarray(ref.vertex_data["rank"]))
+    assert got.superstep == ref.superstep
+    with pytest.raises(ValueError, match="cost_model must be"):
+        api.run(g, upd, scheduler="chromatic", cost_model=43)

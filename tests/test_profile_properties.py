@@ -1,0 +1,62 @@
+"""Hypothesis sweeps for the trace cost model (DESIGN.md §11)."""
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")  # optional test dep; skip, don't error
+from hypothesis import given, settings, strategies as st
+
+pytestmark = pytest.mark.slow      # hypothesis sweeps: own CI job
+
+from repro.core.exec import choose_dispatch
+from repro.profile import CostModel, fit_cost_model
+
+
+@st.composite
+def traces(draw):
+    """Arbitrary warm launch traces: a few widths, noisy wall times."""
+    widths = draw(st.lists(st.sampled_from([2, 4, 8, 16, 32, 64, 128]),
+                           min_size=1, max_size=4, unique=True))
+    records = []
+    for w in widths:
+        n = draw(st.integers(1, 6))
+        for _ in range(n):
+            records.append({
+                "kind": "launch", "mode": "batch", "width": w,
+                "rows": draw(st.integers(1, 4096)),
+                "wall_us": draw(st.floats(0.0, 1e6, allow_nan=False)),
+            })
+    return records
+
+
+@given(traces())
+@settings(max_examples=60, deadline=None)
+def test_fitted_model_is_monotone_in_slot_count(records):
+    """For ANY trace — including pure noise and single-point widths —
+    the fitted curve at fixed W never decreases as rows grow, and the
+    pooled fallback obeys the same clamp.  This is what licenses
+    handing an arbitrary field-recorded trace to ``choose_dispatch``:
+    a bad fit can bias the batch/bucket crossover, never invert the
+    within-width ordering the static rule guarantees."""
+    model = fit_cost_model(records)
+    widths = sorted({int(r["width"]) for r in records}) + [256]  # pooled
+    rows = [1, 2, 8, 64, 512, 4096, 100_000]
+    for w in widths:
+        ts = [model.predict(w, b) for b in rows]
+        assert all(t is not None and t >= 0 for t in ts), w
+        assert all(t1 - t0 >= -1e-6 for t0, t1 in zip(ts, ts[1:])), (w, ts)
+
+
+@given(traces(), st.integers(1, 4096), st.sampled_from([2, 8, 32, 128]),
+       st.integers(1, 10**6))
+@settings(max_examples=60, deadline=None)
+def test_any_fitted_model_resolves_to_a_legal_mode(records, b, w, slots):
+    """choose_dispatch under any fitted model returns one of the two
+    executable paths — and the empty model returns the static pick."""
+    model = fit_cost_model(records)
+    launches = ((2, 17), (w, 5))
+    got = choose_dispatch("auto", b, w, slots, cost_model=model,
+                          bucket_launches=launches)
+    assert got in ("batch", "bucket")
+    static = choose_dispatch("auto", b, w, slots)
+    assert choose_dispatch("auto", b, w, slots, cost_model=CostModel(),
+                           bucket_launches=launches) == static
