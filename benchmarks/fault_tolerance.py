@@ -1,0 +1,133 @@
+"""Fault tolerance, measured (DESIGN.md §12): what does a snapshot
+cost, and how fast does a killed run recover?
+
+Two sweeps over a PageRank run on the Zipf graph (M=1 degenerate plan
+so the sharded snapshot path is exercised on one device):
+
+* **checkpoint_every sweep** — wall time of the checkpointed run at
+  K ∈ {1, 2, 5, 10} vs the no-checkpoint baseline, reported as
+  overhead per snapshot and as a fraction of the baseline.  The
+  snapshot itself is also timed in isolation (``write_snapshot`` +
+  ``validate_snapshot`` round).
+* **recovery** — an injected kill mid-run under the supervisor:
+  wall time of the recovered run vs the unfaulted one, with the
+  bitwise-equality gate enforced at record time (a fast recovery that
+  computes different numbers is a bug, not a result).
+
+Appends ``results/BENCH_ft.json``; wired into ``benchmarks.run
+--smoke`` for the CI artifact job (tiny sizes).
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import tempfile
+import time
+
+import numpy as np
+
+from benchmarks import common
+from benchmarks.common import emit
+from repro import api
+from repro.apps import pagerank
+from repro.core.graph import zipf_edges
+from repro.ft import (FaultEvent, FaultPlan, latest_valid_snapshot,
+                      validate_snapshot, write_snapshot)
+
+_RESULTS = pathlib.Path(__file__).resolve().parent.parent / "results"
+
+
+def _problem():
+    nv = 300 if common.SMOKE else 3000
+    edges = zipf_edges(nv, seed=0)
+    return pagerank.build(edges, nv)
+
+
+def _wall_s(fn) -> float:
+    t0 = time.perf_counter()
+    fn()
+    return time.perf_counter() - t0
+
+
+def run() -> None:
+    from repro.ft import runner as ft_runner
+
+    graph, update, syncs = _problem()
+    assign = np.zeros(graph.n_vertices, np.int64)
+    steps = 8 if common.SMOKE else 20
+    # one engine for everything: its program cache persists, so the
+    # sweep times snapshots, not recompilation
+    eng = api.build_engine(graph, update, syncs=syncs, n_shards=1,
+                           partition=assign, max_supersteps=steps)
+
+    def drive(**kw):
+        return ft_runner.run_distributed(eng, scheduler="chromatic", **kw)
+
+    drive()                              # warm the chunked program
+    base_s = _wall_s(drive)
+    base, _ = drive()
+    emit("ft_baseline", base_s * 1e6, f"steps={base['supersteps']}")
+
+    record = {"n_vertices": graph.n_vertices, "supersteps": steps,
+              "baseline_s": base_s, "checkpoint_sweep": [],
+              "recovery": {}}
+
+    # --- snapshot cost in isolation --------------------------------
+    carry = eng.step_chunk(eng.init_carry(), 2)
+    with tempfile.TemporaryDirectory() as d:
+        t0 = time.perf_counter()
+        p = write_snapshot(d, carry, scheduler="chromatic",
+                           partition=eng.plan.partition_fingerprint,
+                           assignment=eng.plan.assignment)
+        write_s = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        validate_snapshot(p)
+        validate_s = time.perf_counter() - t0
+    emit("ft_snapshot_write", write_s * 1e6)
+    emit("ft_snapshot_validate", validate_s * 1e6)
+    record["snapshot_write_s"] = write_s
+    record["snapshot_validate_s"] = validate_s
+
+    # --- checkpoint_every sweep ------------------------------------
+    for every in (1, 2, 5, 10):
+        if every > steps:
+            continue
+        with tempfile.TemporaryDirectory() as d:
+            wall = _wall_s(lambda: drive(checkpoint_every=every,
+                                         checkpoint_dir=d))
+            n_snaps = steps // every
+        overhead = wall - base_s
+        emit(f"ft_ckpt_every_{every}", wall * 1e6,
+             f"overhead_frac={overhead / base_s:.3f} snaps={n_snaps}")
+        record["checkpoint_sweep"].append(
+            {"every": every, "wall_s": wall, "n_snapshots": n_snaps,
+             "overhead_s": overhead,
+             "overhead_frac": overhead / base_s})
+
+    # --- recovery from an injected mid-run kill --------------------
+    with tempfile.TemporaryDirectory() as d:     # fresh dir: no stale
+        t0 = time.perf_counter()                 # snapshots to cheat with
+        faults = FaultPlan([FaultEvent("kill", superstep=steps // 2)])
+        out, restarts = drive(checkpoint_every=2, checkpoint_dir=d,
+                              faults=faults)
+        recover_s = time.perf_counter() - t0
+        assert latest_valid_snapshot(d) is not None
+    # the gate: recovery must be bitwise, or the timing is meaningless
+    assert np.array_equal(np.asarray(base["vertex_data"]["rank"]),
+                          np.asarray(out["vertex_data"]["rank"])), \
+        "recovered run diverged from the unfaulted baseline"
+    assert restarts and restarts[0].error_type == "InjectedKill"
+    emit("ft_recovery", recover_s * 1e6,
+         f"restored_at={restarts[0].restored_superstep} "
+         f"vs_base={recover_s / base_s:.2f}x")
+    record["recovery"] = {
+        "wall_s": recover_s, "vs_baseline": recover_s / base_s,
+        "kill_at": steps // 2,
+        "restored_superstep": restarts[0].restored_superstep,
+        "bitwise_equal": True}
+
+    _RESULTS.mkdir(exist_ok=True)
+    out_path = _RESULTS / "BENCH_ft.json"
+    hist = json.loads(out_path.read_text()) if out_path.exists() else []
+    hist.append(record)
+    out_path.write_text(json.dumps(hist, indent=1))

@@ -12,6 +12,9 @@ Prints ``name,us_per_call,derived`` CSV rows.
          PageRank sweep; appends results/BENCH_graph.json
   dispatch window size k x {bucket-row, batch, adaptive} dispatch
          sweep (DESIGN.md §8); appends results/BENCH_dispatch.json
+  ft     snapshot overhead (checkpoint_every sweep) + kill-recovery
+         wall time with a bitwise gate (DESIGN.md §12); appends
+         results/BENCH_ft.json
   roofline dry-run roofline table (per arch x shape x mesh)
 
 ``--smoke`` runs tiny sizes (CI artifact job); without an explicit
@@ -23,9 +26,10 @@ import sys
 
 
 def main() -> None:
-    from benchmarks import (common, dispatch_window, fig1_consistency,
-                            fig6_scaling, fig6cd_comparison, fig8_locking,
-                            graph_storage, kernels_bench, roofline_table)
+    from benchmarks import (common, dispatch_window, fault_tolerance,
+                            fig1_consistency, fig6_scaling,
+                            fig6cd_comparison, fig8_locking, graph_storage,
+                            kernels_bench, roofline_table)
     args = sys.argv[1:]
     common.SMOKE = "--smoke" in args
     args = [a for a in args if a != "--smoke"]
@@ -41,12 +45,12 @@ def main() -> None:
         "fig1": fig1_consistency, "fig6ab": fig6_scaling,
         "fig6cd": fig6cd_comparison, "fig8": fig8_locking,
         "kernels": kernels_bench, "graph": graph_storage,
-        "dispatch": dispatch_window,
+        "dispatch": dispatch_window, "ft": fault_tolerance,
         "roofline": roofline_table,
     }
     if only is None and common.SMOKE:
         # the BENCH_*.json producers
-        selected = ["fig8", "kernels", "graph", "dispatch"]
+        selected = ["fig8", "kernels", "graph", "dispatch", "ft"]
     else:
         selected = [only] if only else list(mods)
     print("name,us_per_call,derived")

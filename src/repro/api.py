@@ -75,6 +75,11 @@ class RunResult:
     tracing was requested; ``profile`` the ``TraceRecorder`` of timed
     launch records when ``profile=True`` (save it and fit a cost model
     with ``repro.profile.fit_cost_model``, DESIGN.md §11).
+    ``restarts`` is the supervised-run restart log (a list of
+    ``repro.ft.RestartRecord``) when fault tolerance was engaged via
+    ``checkpoint_every=``/``resume_from=``/``faults=``; ``None``
+    otherwise — an empty list means supervision was on and nothing
+    failed.
     """
     vertex_data: PyTree
     edge_data: PyTree | None
@@ -87,6 +92,7 @@ class RunResult:
     trace: list | None = None
     profile: Any = None
     stats: dict = dataclasses.field(default_factory=dict)
+    restarts: list | None = None
 
 
 # ----------------------------------------------------------------------
@@ -298,7 +304,10 @@ def run(graph, update: UpdateFn, *, scheduler: str = "chromatic",
         until: Callable[[dict], bool] | None = None,
         num_supersteps: int | None = None, active=None,
         trace=None, partition=None, profile: bool = False,
-        cost_model=None, **options) -> RunResult:
+        cost_model=None, checkpoint_every: int | None = None,
+        checkpoint_dir: str | None = None,
+        resume_from: str | None = None, faults=None,
+        max_restarts: int = 3, **options) -> RunResult:
     """Run ``update`` over ``graph`` under the named scheduler.
 
     The paper's ``start()``: builds the engine from configuration and
@@ -324,6 +333,18 @@ def run(graph, update: UpdateFn, *, scheduler: str = "chromatic",
     plugin entry-point name) to ``dispatch="auto"``; it changes launch
     shapes only, never results.
 
+    Fault tolerance (DESIGN.md §12): ``checkpoint_every=K`` +
+    ``checkpoint_dir=`` snapshot the run at every K-th superstep
+    boundary (sharded atomic snapshots for distributed runs,
+    ``snapshot_engine_state`` files for single-device);
+    ``resume_from=`` continues bit-identically from a snapshot
+    (distributed resumes rebuild the ShardPlan from the snapshot's
+    stored assignment when ``partition=`` is not given); ``faults=``
+    takes a ``repro.ft.FaultPlan`` of injected failures; any of the
+    three engages the supervised restart loop (``max_restarts``,
+    exponential backoff, restore-from-latest-valid-snapshot) and fills
+    ``RunResult.restarts``.
+
     Per-strategy extras (``k_select=``, ``fifo=``, ``max_pending=``,
     ``exchange_edges=``, ``snapshot_phases=``, ``use_kernel=``, ...)
     pass through ``**options`` and are validated against the registry
@@ -336,11 +357,37 @@ def run(graph, update: UpdateFn, *, scheduler: str = "chromatic",
     if trace is False:
         trace = None          # "tracing off", not a trace callable
     priority = options.pop("priority", None)
+    if (checkpoint_every is None) != (checkpoint_dir is None):
+        raise ValueError(
+            "checkpoint_every= and checkpoint_dir= go together: the "
+            "interval says when to snapshot, the directory says where")
+    if checkpoint_every is not None and (
+            isinstance(checkpoint_every, bool)
+            or not isinstance(checkpoint_every, int)
+            or checkpoint_every < 1):
+        raise ValueError(f"checkpoint_every must be a positive int, "
+                         f"got {checkpoint_every!r}")
+    if isinstance(max_restarts, bool) or not isinstance(max_restarts, int) \
+            or max_restarts < 0:
+        raise ValueError(f"max_restarts must be a non-negative int, "
+                         f"got {max_restarts!r}")
+    ft_active = (checkpoint_every is not None or resume_from is not None
+                 or faults is not None)
+    if ft_active and (trace is not None or profile):
+        raise ValueError(
+            "trace=/profile= cannot be combined with checkpointing / "
+            "fault injection (checkpoint_every=, resume_from=, faults=)")
     spec = EngineSpec(scheduler=scheduler, n_shards=n_shards,
                       consistency=consistency, dispatch=dispatch,
                       max_supersteps=max_supersteps, options=options)
     entry = spec.entry
-    if spec.distributed(partition):
+    # a directory resume_from is a sharded snapshot (single-device
+    # snapshots are single .npz files): resume it on the distributed
+    # path even at the default n_shards=1 — the stored assignment
+    # rebuilds the degenerate M=1 plan
+    import os as _os
+    dist_resume = resume_from is not None and _os.path.isdir(resume_from)
+    if spec.distributed(partition) or dist_resume:
         if until is not None or trace is not None or profile:
             raise ValueError(
                 "until=/trace=/profile= step the engine from the host "
@@ -350,20 +397,48 @@ def run(graph, update: UpdateFn, *, scheduler: str = "chromatic",
         if priority is not None:
             raise ValueError("priority= initialization is single-device "
                              "only (shards derive priority from active)")
+        if resume_from is not None:
+            from repro.ft.snapshot import read_assignment
+            stored, manifest = read_assignment(resume_from)
+            if manifest["scheduler"] != scheduler:
+                raise ValueError(
+                    f"resume_from snapshot was taken by scheduler "
+                    f"{manifest['scheduler']!r}, this run asked for "
+                    f"{scheduler!r}")
+            if manifest["n_shards"] != n_shards:
+                raise ValueError(
+                    f"resume_from snapshot has {manifest['n_shards']} "
+                    f"shards, this run asked for n_shards={n_shards}")
+            if partition is None:
+                partition = stored   # rebuild the identical ShardPlan
         engine = spec.build(graph, update, syncs, partition=partition)
-        out = engine.run(active=active, num_supersteps=num_supersteps)
+        restarts = None
+        if ft_active:
+            from repro.ft import runner as ft_runner
+            out, restarts = ft_runner.run_distributed(
+                engine, scheduler=scheduler, active=active,
+                num_supersteps=num_supersteps,
+                checkpoint_every=checkpoint_every,
+                checkpoint_dir=checkpoint_dir, resume_from=resume_from,
+                faults=faults, max_restarts=max_restarts)
+        else:
+            out = engine.run(active=active, num_supersteps=num_supersteps)
         main = ("vertex_data", "globals", "supersteps", "n_updates",
                 "active_any")
         return RunResult(
             vertex_data=out["vertex_data"], edge_data=None,
             globals=out["globals"], superstep=out["supersteps"],
             n_updates=out["n_updates"], active_any=out["active_any"],
-            engine=engine,
+            engine=engine, restarts=restarts,
             stats={k: v for k, v in out.items() if k not in main})
 
     engine = spec.build(graph, update, syncs)
 
     if not entry.stepping:
+        if ft_active:
+            raise ValueError(
+                "checkpoint_every=/resume_from=/faults= need a stepping "
+                "engine; the sequential oracle supports none of them")
         if trace is not None or profile:
             raise ValueError("trace=/profile= need a stepping engine; "
                              "the sequential oracle supports neither")
@@ -379,6 +454,18 @@ def run(graph, update: UpdateFn, *, scheduler: str = "chromatic",
                          n_updates=n_updates,
                          active_any=bool(np.asarray(act).any()),
                          engine=engine)
+
+    if ft_active:
+        from repro.ft import runner as ft_runner
+        state, restarts = ft_runner.run_single(
+            engine, active=active, priority=priority, until=until,
+            num_supersteps=num_supersteps,
+            checkpoint_every=checkpoint_every,
+            checkpoint_dir=checkpoint_dir, resume_from=resume_from,
+            faults=faults, max_restarts=max_restarts)
+        result = _result_from_state(state, engine, None)
+        result.restarts = restarts
+        return result
 
     if until is None and trace is None and not profile:
         state = engine.run(active=active, priority=priority,

@@ -388,6 +388,20 @@ class ShardPlan:
 
     # ------------------------------------------------------------------
     @property
+    def partition_fingerprint(self) -> str:
+        """Content hash of (M, assignment): the identity a sharded
+        snapshot (repro.ft) records so a restore onto a *different*
+        partition — whose local row spaces would silently misalign —
+        is refused at load, not discovered as wrong numbers."""
+        import hashlib
+        h = hashlib.sha256()
+        h.update(str(self.M).encode())
+        h.update(np.ascontiguousarray(self.assignment,
+                                      dtype=np.int64).tobytes())
+        return h.hexdigest()[:16]
+
+    # ------------------------------------------------------------------
+    @property
     def sliced_slots(self) -> int:
         """Per-shard stored slot count ``sum_b R_b * W_b`` — the bucket
         path's per-dispatch compute, the cost model's other arm."""
@@ -605,8 +619,20 @@ class DistributedChromaticEngine:
         return color_phase, superstep
 
     # ------------------------------------------------------------------
-    def run(self, active: np.ndarray | None = None,
-            num_supersteps: int | None = None):
+    # Carry-based execution: the superstep program over an explicit
+    # state pytree.  ``init_carry`` -> (``step_chunk`` ...) ->
+    # ``finalize`` lets a host driver stop at any superstep boundary —
+    # the globally consistent cut the fault-tolerance layer (repro.ft)
+    # snapshots at — while ``run()`` stays the one fused program.
+    # ------------------------------------------------------------------
+
+    CARRY_SHARDED = ("vertex_data", "edge_data", "active", "priority",
+                     "n_updates")
+
+    def init_carry(self, active: np.ndarray | None = None) -> dict:
+        """Initial distributed state: per-shard blocks with leading
+        ``[M, ...]`` dim (sharded over the mesh inside the program) plus
+        the replicated ``globals`` / ``superstep``."""
         plan = self.plan
         nv = self.graph.n_vertices
         vdata0 = plan.shard_vertex_data(self.graph.vertex_data)
@@ -615,13 +641,20 @@ class DistributedChromaticEngine:
         edata0 = plan.shard_edge_data(edata_global)
         if active is None:
             active = np.ones(nv, bool)
-        act_global = jnp.asarray(active)
-        act0 = plan.shard_vertex_data({"a": act_global})["a"] \
+        act0 = plan.shard_vertex_data({"a": jnp.asarray(active)})["a"] \
             & plan.owned_mask
-        prio0 = act0.astype(jnp.float32)
-        globals0 = {s.key: s.run(self.graph.vertex_data) for s in self.syncs}
+        return dict(
+            vertex_data=vdata0, edge_data=edata0, active=act0,
+            priority=act0.astype(jnp.float32),
+            globals={s.key: s.run(self.graph.vertex_data)
+                     for s in self.syncs},
+            superstep=jnp.int32(0),
+            n_updates=jnp.zeros((plan.M,), jnp.int32))
 
-        plan_arrays = dict(
+    @property
+    def _plan_arrays(self) -> dict:
+        plan = self.plan
+        return dict(
             degree=plan.degree, owned_mask=plan.owned_mask,
             color_ids=plan.color_ids, color_valid=plan.color_valid,
             send_idx=plan.send_idx, send_mask=plan.send_mask,
@@ -631,21 +664,45 @@ class DistributedChromaticEngine:
             trecv_idx=plan.trecv_idx,
             **plan.ell_arrays(),
         )
-        _, superstep = self._build_step()
-        n_colors = plan.n_colors
-        axis = self.axis
-        max_ss = self.max_supersteps
-        fixed = num_supersteps
 
-        def shard_fn(plan_blk, vdata, edata, act, prio, globals_):
+    def _carry_specs(self):
+        spec_s, spec_r = P(self.axis), P()
+        return dict(vertex_data=spec_s, edge_data=spec_s, active=spec_s,
+                    priority=spec_s, globals=spec_r, superstep=spec_r,
+                    n_updates=spec_s)
+
+    def _state_from_carry(self, carry, squeeze):
+        return (squeeze(carry["vertex_data"]), squeeze(carry["edge_data"]),
+                carry["active"][0], carry["priority"][0], carry["globals"],
+                carry["superstep"], carry["n_updates"][0])
+
+    def _state_to_carry(self, state, expand):
+        vdata, edata, act, prio, globals_, step, n_upd = state
+        return dict(vertex_data=expand(vdata), edge_data=expand(edata),
+                    active=act[None], priority=prio[None],
+                    globals=globals_, superstep=step,
+                    n_updates=n_upd[None])
+
+    def _program(self, fixed: int | None, ignore_active: bool = False):
+        """Jitted shard_map program ``(plan_arrays, carry, stop_at) ->
+        carry``.  ``fixed=N`` unrolls exactly N supersteps (``run``'s
+        ``num_supersteps`` form, ``stop_at`` ignored); ``fixed=None``
+        while-loops to ``superstep == stop_at`` — and, unless
+        ``ignore_active``, stops early when the global task set drains.
+        Programs are cached per (fixed, ignore_active)."""
+        key = (fixed, ignore_active)
+        cache = self.__dict__.setdefault("_program_cache", {})
+        if key in cache:
+            return cache[key]
+        _, superstep = self._build_step()
+        plan, axis, n_colors = self.plan, self.axis, self.plan.n_colors
+
+        def shard_fn(plan_blk, carry, stop_at):
             # blocks arrive with leading dim 1; squeeze it
             plan_b = jax.tree.map(lambda a: a[0], plan_blk)
-            vdata = jax.tree.map(lambda a: a[0], vdata)
-            edata = jax.tree.map(lambda a: a[0], edata)
-            act, prio = act[0], prio[0]
+            squeeze = lambda t: jax.tree.map(lambda a: a[0], t)
             struct = plan.local_struct(plan_b)
-            state = (vdata, edata, act, prio, globals_, jnp.int32(0),
-                     jnp.int32(0))
+            state = self._state_from_carry(carry, squeeze)
 
             def body(state):
                 return superstep(state, struct, plan_b, n_colors)
@@ -655,37 +712,81 @@ class DistributedChromaticEngine:
                     state = body(state)
             else:
                 def cond(state):
+                    below = state[5] < stop_at
+                    if ignore_active:
+                        return below
                     act_l = state[2] & plan_b["owned_mask"]
                     total = jax.lax.psum(act_l.sum(dtype=jnp.int32), axis)
-                    return (total > 0) & (state[5] < max_ss)
+                    return (total > 0) & below
                 state = jax.lax.while_loop(cond, body, state)
-            vdata, edata, act, prio, globals_, step, n_upd = state
-            n_upd = jax.lax.psum(n_upd, axis)
             expand = lambda t: jax.tree.map(lambda a: a[None], t)
-            return (expand(vdata), expand(edata), act[None], prio[None],
-                    globals_, step, n_upd)
+            return self._state_to_carry(state, expand)
 
         from jax.experimental.shard_map import shard_map
-        spec_s = P(self.axis)
         fn = shard_map(
             shard_fn, mesh=self.mesh,
-            in_specs=(spec_s, spec_s, spec_s, spec_s, spec_s, P()),
-            out_specs=(spec_s, spec_s, spec_s, spec_s, P(), P(), P()),
+            in_specs=(P(self.axis), self._carry_specs(), P()),
+            out_specs=self._carry_specs(),
             check_rep=False)
+        cache[key] = jax.jit(fn)
+        return cache[key]
+
+    def _commit_carry(self, carry: dict) -> dict:
+        """Place carry leaves with the program's shardings.  Fresh
+        ``init_carry`` / snapshot-restored leaves are uncommitted
+        single-device arrays, which key a *separate* jit cache entry
+        from program-returned carries — without this, the first chunk
+        run on a returned carry pays a full recompile.  No-copy no-op
+        for already-committed carries."""
+        from jax.sharding import NamedSharding
+        specs = self._carry_specs()
+        return {k: jax.device_put(v, NamedSharding(self.mesh, specs[k]))
+                for k, v in carry.items()}
+
+    def step_chunk(self, carry: dict, stop_at: int,
+                   ignore_active: bool = False) -> dict:
+        """Advance ``carry`` to superstep ``stop_at`` (or until the task
+        set drains, unless ``ignore_active``).  Chunking a run this way
+        is bitwise-identical to the fused ``run()`` — the loop body is
+        the same traced program, only the cut points differ.
+
+        ``fault_hook`` (set by ``repro.ft.runner`` when a FaultPlan is
+        active; absent otherwise — zero cost) fires host-side at this
+        superstep boundary, before the chunk launches: the compiled
+        program never branches on it."""
+        hook = getattr(self, "fault_hook", None)
+        if hook is not None:
+            hook("superstep", superstep=int(carry["superstep"]))
+        prog = self._program(None, ignore_active)
         with jax.transfer_guard("allow"):
-            out = jax.jit(fn)(plan_arrays, vdata0, edata0, act0, prio0,
-                              globals0)
-        vdata, edata, act, prio, globals_, step, n_upd = out
-        result_vdata = plan.unshard_vertex_data(vdata, nv)
+            return prog(self._plan_arrays, self._commit_carry(carry),
+                        jnp.int32(stop_at))
+
+    def carry_active_any(self, carry: dict) -> bool:
+        return bool((np.asarray(carry["active"])
+                     & np.asarray(self.plan.owned_mask)).any())
+
+    def finalize(self, carry: dict) -> dict:
+        plan = self.plan
         return dict(
-            vertex_data=result_vdata,
-            local_vertex_data=vdata,
-            local_edge_data=edata,
-            globals=globals_,
-            supersteps=int(step),
-            n_updates=int(n_upd),
-            active_any=bool((act & plan.owned_mask).any()),
+            vertex_data=plan.unshard_vertex_data(
+                carry["vertex_data"], self.graph.n_vertices),
+            local_vertex_data=carry["vertex_data"],
+            local_edge_data=carry["edge_data"],
+            globals=carry["globals"],
+            supersteps=int(carry["superstep"]),
+            n_updates=int(np.asarray(carry["n_updates"]).sum()),
+            active_any=self.carry_active_any(carry),
         )
+
+    def run(self, active: np.ndarray | None = None,
+            num_supersteps: int | None = None):
+        carry = self.init_carry(active)
+        prog = self._program(num_supersteps)
+        with jax.transfer_guard("allow"):
+            carry = prog(self._plan_arrays, carry,
+                         jnp.int32(self.max_supersteps))
+        return self.finalize(carry)
 
 
 # the locking engine registers its own shard_map variant in

@@ -401,8 +401,15 @@ class DistributedLockingEngine:
         return superstep
 
     # ------------------------------------------------------------------
-    def run(self, active: np.ndarray | None = None,
-            num_supersteps: int | None = None):
+    # Carry-based execution (mirrors DistributedChromaticEngine): the
+    # carry additionally holds the versioned-ghost-sync state — vertex
+    # and edge version counters plus the owner-side sent-version tables
+    # — which is exactly why sharded snapshots (repro.ft) must save
+    # them: dropping them would re-ship (or worse, skip) ghost rows
+    # after a restore and break bitwise resume.
+    # ------------------------------------------------------------------
+
+    def init_carry(self, active: np.ndarray | None = None) -> dict:
         plan = self.plan
         nv = self.graph.n_vertices
         vdata0 = plan.shard_vertex_data(self.graph.vertex_data)
@@ -412,10 +419,25 @@ class DistributedLockingEngine:
             active = np.ones(nv, bool)
         act0 = plan.shard_vertex_data({"a": jnp.asarray(active)})["a"] \
             & plan.owned_mask
-        prio0 = act0.astype(jnp.float32)
-        globals0 = {s.key: s.run(self.graph.vertex_data) for s in self.syncs}
+        M, R, E_loc, Hg, Hc = plan.M, plan.R, plan.E_loc, plan.Hg, plan.Hc
+        return dict(
+            vertex_data=vdata0, edge_data=edata0, active=act0,
+            priority=act0.astype(jnp.float32),
+            globals={s.key: s.run(self.graph.vertex_data)
+                     for s in self.syncs},
+            superstep=jnp.int32(0),
+            n_updates=jnp.zeros((M,), jnp.int32),
+            version=jnp.zeros((M, R), jnp.int32),
+            eversion=jnp.zeros((M, E_loc + 1), jnp.int32),
+            sent_ver=jnp.zeros((M, M, Hg), jnp.int32),
+            esent_ver=jnp.zeros((M, M, Hc), jnp.int32),
+            ghost_sent=jnp.zeros((M,), jnp.int32),
+            ghost_full=jnp.zeros((M,), jnp.int32))
 
-        plan_arrays = dict(
+    @property
+    def _plan_arrays(self) -> dict:
+        plan = self.plan
+        return dict(
             degree=plan.degree,
             owned_mask=plan.owned_mask, global_ids=plan.global_ids,
             tsend_idx=plan.tsend_idx, tsend_mask=plan.tsend_mask,
@@ -423,25 +445,35 @@ class DistributedLockingEngine:
             cesend_mask=plan.cesend_mask, cerecv_idx=plan.cerecv_idx,
             **plan.ell_arrays(),
         )
-        superstep = self._build_superstep()
-        axis = self.axis
-        max_ss = self.max_supersteps
-        fixed = num_supersteps
-        M, R, E_loc, Hg, Hc = plan.M, plan.R, plan.E_loc, plan.Hg, plan.Hc
 
-        def shard_fn(plan_blk, vdata, edata, act, prio, globals_):
+    def _carry_specs(self):
+        spec_s, spec_r = P(self.axis), P()
+        return dict(vertex_data=spec_s, edge_data=spec_s, active=spec_s,
+                    priority=spec_s, globals=spec_r, superstep=spec_r,
+                    n_updates=spec_s, version=spec_s, eversion=spec_s,
+                    sent_ver=spec_s, esent_ver=spec_s, ghost_sent=spec_s,
+                    ghost_full=spec_s)
+
+    def _program(self, fixed: int | None, ignore_active: bool = False):
+        key = (fixed, ignore_active)
+        cache = self.__dict__.setdefault("_program_cache", {})
+        if key in cache:
+            return cache[key]
+        superstep = self._build_superstep()
+        plan, axis = self.plan, self.axis
+
+        def shard_fn(plan_blk, carry, stop_at):
             plan_b = jax.tree.map(lambda a: a[0], plan_blk)
-            vdata = jax.tree.map(lambda a: a[0], vdata)
-            edata = jax.tree.map(lambda a: a[0], edata)
-            act, prio = act[0], prio[0]
+            squeeze = lambda t: jax.tree.map(lambda a: a[0], t)
             struct = plan.local_struct(plan_b)
-            state = (vdata, edata, act, prio, globals_, jnp.int32(0),
-                     jnp.int32(0),
-                     jnp.zeros((R,), jnp.int32),           # vertex versions
-                     jnp.zeros((E_loc + 1,), jnp.int32),   # edge versions
-                     jnp.zeros((M, Hg), jnp.int32),        # sent versions
-                     jnp.zeros((M, Hc), jnp.int32),
-                     jnp.int32(0), jnp.int32(0))           # sent/full rows
+            state = (squeeze(carry["vertex_data"]),
+                     squeeze(carry["edge_data"]),
+                     carry["active"][0], carry["priority"][0],
+                     carry["globals"], carry["superstep"],
+                     carry["n_updates"][0], carry["version"][0],
+                     carry["eversion"][0], carry["sent_ver"][0],
+                     carry["esent_ver"][0], carry["ghost_sent"][0],
+                     carry["ghost_full"][0])
 
             def body(state):
                 return superstep(state, struct, plan_b)
@@ -451,42 +483,81 @@ class DistributedLockingEngine:
                     state = body(state)
             else:
                 def cond(state):
+                    below = state[5] < stop_at
+                    if ignore_active:
+                        return below
                     act_l = state[2] & plan_b["owned_mask"]
                     total = jax.lax.psum(act_l.sum(dtype=jnp.int32), axis)
-                    return (total > 0) & (state[5] < max_ss)
+                    return (total > 0) & below
                 state = jax.lax.while_loop(cond, body, state)
             (vdata, edata, act, prio, globals_, step, n_upd,
-             *_rest, sent, full) = state
-            n_upd = jax.lax.psum(n_upd, axis)
-            sent = jax.lax.psum(sent, axis)
-            full = jax.lax.psum(full, axis)
+             version, eversion, sent_ver, esent_ver, sent, full) = state
             expand = lambda t: jax.tree.map(lambda a: a[None], t)
-            return (expand(vdata), expand(edata), act[None], prio[None],
-                    globals_, step, n_upd, sent, full)
+            return dict(
+                vertex_data=expand(vdata), edge_data=expand(edata),
+                active=act[None], priority=prio[None], globals=globals_,
+                superstep=step, n_updates=n_upd[None],
+                version=version[None], eversion=eversion[None],
+                sent_ver=sent_ver[None], esent_ver=esent_ver[None],
+                ghost_sent=sent[None], ghost_full=full[None])
 
         from jax.experimental.shard_map import shard_map
-        spec_s = P(self.axis)
         fn = shard_map(
             shard_fn, mesh=self.mesh,
-            in_specs=(spec_s, spec_s, spec_s, spec_s, spec_s, P()),
-            out_specs=(spec_s, spec_s, spec_s, spec_s, P(), P(), P(),
-                       P(), P()),
+            in_specs=(P(self.axis), self._carry_specs(), P()),
+            out_specs=self._carry_specs(),
             check_rep=False)
+        cache[key] = jax.jit(fn)
+        return cache[key]
+
+    def _commit_carry(self, carry: dict) -> dict:
+        # uncommitted init/restored leaves would key a second jit cache
+        # entry vs program-returned carries (a full recompile on the
+        # first mixed call); no-copy no-op when already committed
+        from jax.sharding import NamedSharding
+        specs = self._carry_specs()
+        return {k: jax.device_put(v, NamedSharding(self.mesh, specs[k]))
+                for k, v in carry.items()}
+
+    def step_chunk(self, carry: dict, stop_at: int,
+                   ignore_active: bool = False) -> dict:
+        # host-side fault-injection site (repro.ft); None => zero cost
+        hook = getattr(self, "fault_hook", None)
+        if hook is not None:
+            hook("superstep", superstep=int(carry["superstep"]))
+        prog = self._program(None, ignore_active)
         with jax.transfer_guard("allow"):
-            out = jax.jit(fn)(plan_arrays, vdata0, edata0, act0, prio0,
-                              globals0)
-        vdata, edata, act, prio, globals_, step, n_upd, sent, full = out
+            return prog(self._plan_arrays, self._commit_carry(carry),
+                        jnp.int32(stop_at))
+
+    def carry_active_any(self, carry: dict) -> bool:
+        return bool((np.asarray(carry["active"])
+                     & np.asarray(self.plan.owned_mask)).any())
+
+    def finalize(self, carry: dict) -> dict:
+        plan = self.plan
         return dict(
-            vertex_data=plan.unshard_vertex_data(vdata, nv),
-            local_vertex_data=vdata,
-            local_edge_data=edata,
-            globals=globals_,
-            supersteps=int(step),
-            n_updates=int(n_upd),
-            active_any=bool((act & plan.owned_mask).any()),
-            ghost_rows_sent=int(sent),    # version-filtered traffic
-            ghost_rows_full=int(full),    # what a static push would send
+            vertex_data=plan.unshard_vertex_data(
+                carry["vertex_data"], self.graph.n_vertices),
+            local_vertex_data=carry["vertex_data"],
+            local_edge_data=carry["edge_data"],
+            globals=carry["globals"],
+            supersteps=int(carry["superstep"]),
+            n_updates=int(np.asarray(carry["n_updates"]).sum()),
+            active_any=self.carry_active_any(carry),
+            # version-filtered traffic vs what a static push would send
+            ghost_rows_sent=int(np.asarray(carry["ghost_sent"]).sum()),
+            ghost_rows_full=int(np.asarray(carry["ghost_full"]).sum()),
         )
+
+    def run(self, active: np.ndarray | None = None,
+            num_supersteps: int | None = None):
+        carry = self.init_carry(active)
+        prog = self._program(num_supersteps)
+        with jax.transfer_guard("allow"):
+            carry = prog(self._plan_arrays, carry,
+                         jnp.int32(self.max_supersteps))
+        return self.finalize(carry)
 
 
 register_scheduler(

@@ -70,6 +70,14 @@ class EngineState:
     n_updates: jax.Array     # i32 total update-function applications
 
 
+def engine_state_field_names() -> tuple[str, ...]:
+    """The EngineState field set, in declaration order.  Snapshots
+    (train.checkpoint, repro.ft) record this so a restore against a
+    build whose EngineState gained/lost a field fails by name instead
+    of resuming with a silently-defaulted field."""
+    return tuple(f.name for f in dataclasses.fields(EngineState))
+
+
 def init_engine_state(vertex_data: PyTree, edge_data: PyTree,
                       n_vertices: int, syncs: Sequence[SyncOp],
                       active: jax.Array | None = None,

@@ -1,0 +1,32 @@
+"""Fault tolerance for distributed runs (paper §8; Distributed
+GraphLab §5): sharded consistent snapshots at superstep boundaries,
+deterministic fault injection, and a supervised restart loop.
+
+The three layers (DESIGN.md §12):
+
+* :mod:`repro.ft.snapshot` — per-shard checkpoints of a distributed
+  carry, written atomically with a digest-carrying manifest.
+* :mod:`repro.ft.faults` — a seeded :class:`FaultPlan` of injected
+  kills / transient errors / stragglers / checkpoint-write failures,
+  zero-cost when absent.
+* :mod:`repro.ft.supervisor` — retry/backoff around an attempt
+  function, restoring from the latest valid snapshot.
+* :mod:`repro.ft.runner` — the checkpointed drivers ``api.run(...,
+  checkpoint_every=, resume_from=, faults=)`` routes to.
+* :mod:`repro.ft.sync_snapshot` — the paper-fidelity §8 variant where
+  the snapshot itself runs as an update function through the engine.
+"""
+from repro.ft.faults import (CheckpointWriteFault, FaultEvent, FaultPlan,
+                             InjectedFault, InjectedKill, TransientFault)
+from repro.ft.snapshot import (SnapshotError, latest_valid_snapshot,
+                               load_carry, read_manifest, validate_snapshot,
+                               write_snapshot)
+from repro.ft.supervisor import RestartRecord, SupervisorGaveUp, supervised
+
+__all__ = [
+    "CheckpointWriteFault", "FaultEvent", "FaultPlan", "InjectedFault",
+    "InjectedKill", "TransientFault", "SnapshotError",
+    "latest_valid_snapshot", "load_carry", "read_manifest",
+    "validate_snapshot", "write_snapshot", "RestartRecord",
+    "SupervisorGaveUp", "supervised",
+]

@@ -1,0 +1,266 @@
+"""Sharded consistent snapshots of a distributed engine carry.
+
+The distributed engines are superstep-synchronous: between supersteps
+every shard has applied the same prefix of work and the ghost exchange
+for that prefix has completed, so a cut at a superstep boundary is a
+globally consistent snapshot (paper §8; DESIGN.md §12).  A snapshot is
+one directory per boundary::
+
+    <ckpt_dir>/step_00000012/
+        shard_00000.npz ... shard_{M-1:05d}.npz   # per-shard carry rows
+        host.npz                                  # globals, superstep,
+                                                  # partition assignment
+        MANIFEST.json                             # written LAST
+
+The manifest carries a schema version, shard count, scheduler name,
+partition fingerprint, per-key dtypes/shapes, and a sha256 digest of
+every file.  It is written last inside a hidden tmp directory that is
+published with a single ``os.replace`` — so a torn write (kill or an
+injected ``checkpoint_fail``) leaves either the previous snapshot or an
+unpublished tmp dir, never a half-snapshot that ``step_*`` scans can
+see.  Every failure mode at load is a :class:`SnapshotError` naming
+what was wrong; ``latest_valid_snapshot`` skips damaged directories.
+
+What must be saved is exactly the engine carry: owned vertex/edge rows,
+the task set and priorities, sync globals — and, for the locking
+engine, the ghost *version counters* (``version`` / ``eversion`` /
+``sent_ver`` / ``esent_ver``).  Dropping the counters would desync the
+delta-shipping protocol after restore: owners would skip rows ghosts
+never received (wrong data) or re-ship everything (wrong traffic
+stats), either way breaking bitwise resume.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import shutil
+from glob import glob
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+SCHEMA = 1
+_SEP = "::"
+# carry keys replicated across shards (everything else is [M, ...])
+_REPLICATED = ("globals", "superstep")
+_RECAST = ("bfloat16", "float8_e4m3fn", "float8_e5m2")
+
+
+class SnapshotError(Exception):
+    """A sharded snapshot could not be written or read back: torn
+    directory, digest mismatch, schema/partition/shard-count mismatch,
+    or missing/mis-shaped keys."""
+
+
+def _flat_keys(carry: Any) -> list[tuple[str, Any]]:
+    out = []
+    for path, leaf in jax.tree_util.tree_flatten_with_path(carry)[0]:
+        key = _SEP.join(str(getattr(k, "key", getattr(k, "idx", k)))
+                        for k in path)
+        out.append((key, leaf))
+    return out
+
+
+def _is_replicated(key: str) -> bool:
+    return key.split(_SEP, 1)[0] in _REPLICATED
+
+
+def _sha256(path: str) -> str:
+    h = hashlib.sha256()
+    with open(path, "rb") as f:
+        for chunk in iter(lambda: f.read(1 << 20), b""):
+            h.update(chunk)
+    return h.hexdigest()
+
+
+def _write_npz(path: str, arrays: dict) -> None:
+    with open(path, "wb") as f:
+        np.savez(f, **arrays)
+        f.flush()
+        os.fsync(f.fileno())
+
+
+def write_snapshot(ckpt_dir: str, carry: dict, *, scheduler: str,
+                   partition: str, assignment: np.ndarray,
+                   faults=None) -> str:
+    """Write one snapshot of ``carry`` under ``ckpt_dir``; returns the
+    published ``step_*`` directory path.
+
+    ``partition`` is ``ShardPlan.partition_fingerprint``;
+    ``assignment`` the ``[Nv]`` shard assignment (saved so a resume can
+    rebuild the identical plan).  ``faults`` (a ``FaultPlan``) gets a
+    ``checkpoint_write`` firing opportunity before every shard file —
+    an injected failure leaves the tmp dir torn and the previous
+    snapshot untouched.
+    """
+    flat, fields = {}, {}
+    for key, leaf in _flat_keys(carry):
+        arr = np.asarray(leaf)
+        fields[key] = {"dtype": arr.dtype.name, "shape": list(arr.shape)}
+        if arr.dtype.name in _RECAST:
+            arr = arr.astype(np.float32)   # npz-safe; load_carry recasts
+        flat[key] = arr
+    step = int(flat["superstep"])
+    n_shards = int(flat["n_updates"].shape[0])
+
+    final = os.path.join(ckpt_dir, f"step_{step:08d}")
+    tmp = os.path.join(ckpt_dir, f".tmp_step_{step:08d}")
+    shutil.rmtree(tmp, ignore_errors=True)
+    os.makedirs(tmp)
+
+    digests = {}
+    for s in range(n_shards):
+        if faults is not None:
+            faults.fire("checkpoint_write", superstep=step, shard=s)
+        name = f"shard_{s:05d}.npz"
+        _write_npz(os.path.join(tmp, name),
+                   {k: v[s] for k, v in flat.items()
+                    if not _is_replicated(k)})
+        digests[name] = _sha256(os.path.join(tmp, name))
+    host = {k: v for k, v in flat.items() if _is_replicated(k)}
+    host["__assignment__"] = np.asarray(assignment, dtype=np.int64)
+    _write_npz(os.path.join(tmp, "host.npz"), host)
+    digests["host.npz"] = _sha256(os.path.join(tmp, "host.npz"))
+
+    manifest = {"schema": SCHEMA, "superstep": step, "n_shards": n_shards,
+                "scheduler": scheduler, "partition": partition,
+                "fields": fields, "files": digests}
+    mpath = os.path.join(tmp, "MANIFEST.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=1)
+        f.flush()
+        os.fsync(f.fileno())
+
+    shutil.rmtree(final, ignore_errors=True)
+    os.replace(tmp, final)
+    return final
+
+
+def read_manifest(path: str) -> dict:
+    mpath = os.path.join(path, "MANIFEST.json")
+    if not os.path.exists(mpath):
+        raise SnapshotError(f"{path}: no MANIFEST.json (torn or not a "
+                            "snapshot directory)")
+    try:
+        with open(mpath) as f:
+            manifest = json.load(f)
+    except (json.JSONDecodeError, OSError) as e:
+        raise SnapshotError(f"{path}: unreadable manifest: {e}") from e
+    if manifest.get("schema") != SCHEMA:
+        raise SnapshotError(
+            f"{path}: snapshot schema {manifest.get('schema')!r}, this "
+            f"build reads {SCHEMA}")
+    return manifest
+
+
+def validate_snapshot(path: str, *, expect_partition: str | None = None,
+                      expect_scheduler: str | None = None,
+                      expect_n_shards: int | None = None) -> dict:
+    """Full integrity + identity check; returns the manifest.
+
+    Digest-checks every file named by the manifest, then checks the
+    snapshot identity against the expectations — a snapshot taken on a
+    different partition (local row spaces would silently misalign),
+    scheduler (different carry layout), or shard count is refused here,
+    not discovered as wrong numbers after resume.
+    """
+    manifest = read_manifest(path)
+    for name, digest in manifest["files"].items():
+        fpath = os.path.join(path, name)
+        if not os.path.exists(fpath):
+            raise SnapshotError(f"{path}: missing file {name}")
+        actual = _sha256(fpath)
+        if actual != digest:
+            raise SnapshotError(
+                f"{path}: digest mismatch for {name} (manifest "
+                f"{digest[:12]}…, file {actual[:12]}… — torn or "
+                "corrupted write)")
+    if (expect_partition is not None
+            and manifest["partition"] != expect_partition):
+        raise SnapshotError(
+            f"{path}: partition fingerprint {manifest['partition']} "
+            f"does not match this run's plan ({expect_partition}); "
+            "rebuild the plan from the snapshot's stored assignment")
+    if (expect_scheduler is not None
+            and manifest["scheduler"] != expect_scheduler):
+        raise SnapshotError(
+            f"{path}: snapshot was taken by scheduler "
+            f"{manifest['scheduler']!r}, this run is "
+            f"{expect_scheduler!r}")
+    if (expect_n_shards is not None
+            and manifest["n_shards"] != expect_n_shards):
+        raise SnapshotError(
+            f"{path}: snapshot has {manifest['n_shards']} shards, this "
+            f"run has {expect_n_shards}")
+    return manifest
+
+
+def read_assignment(path: str) -> tuple[np.ndarray, dict]:
+    """The stored ``[Nv]`` shard assignment + manifest — what
+    ``api.run(resume_from=...)`` needs to rebuild the ShardPlan."""
+    manifest = validate_snapshot(path)
+    host = np.load(os.path.join(path, "host.npz"))
+    if "__assignment__" not in host:
+        raise SnapshotError(f"{path}: host.npz has no __assignment__")
+    return host["__assignment__"], manifest
+
+
+def load_carry(path: str, like_carry: dict, *,
+               expect_partition: str | None = None,
+               expect_scheduler: str | None = None) -> tuple[dict, int]:
+    """Validate + load a snapshot into the structure/dtypes of
+    ``like_carry`` (e.g. ``engine.init_carry()``); returns
+    ``(carry, superstep)``.  Original dtypes are restored — bfloat16 /
+    float8 leaves were stored as float32 and are recast here."""
+    leaves = _flat_keys(like_carry)
+    manifest = validate_snapshot(
+        path, expect_partition=expect_partition,
+        expect_scheduler=expect_scheduler,
+        expect_n_shards=int(np.asarray(like_carry["n_updates"]).shape[0]))
+    n_shards = manifest["n_shards"]
+    shards = [np.load(os.path.join(path, f"shard_{s:05d}.npz"))
+              for s in range(n_shards)]
+    host = np.load(os.path.join(path, "host.npz"))
+    out = []
+    for key, leaf in leaves:
+        if key not in manifest["fields"]:
+            raise SnapshotError(
+                f"{path}: snapshot has no key {key!r}; it has "
+                f"{sorted(manifest['fields'])[:8]}… (engine carry "
+                "layout changed?)")
+        if _is_replicated(key):
+            arr = host[key]
+        else:
+            arr = np.stack([sh[key] for sh in shards])
+        want = tuple(np.shape(leaf))
+        if tuple(arr.shape) != want:
+            raise SnapshotError(
+                f"{path}: key {key!r} has shape {tuple(arr.shape)}, "
+                f"this plan expects {want}")
+        out.append(jnp.asarray(arr).astype(leaf.dtype))
+    carry = jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(like_carry), out)
+    return carry, manifest["superstep"]
+
+
+def latest_valid_snapshot(ckpt_dir: str, *,
+                          expect_partition: str | None = None,
+                          expect_scheduler: str | None = None,
+                          expect_n_shards: int | None = None) -> str | None:
+    """Newest ``step_*`` directory under ``ckpt_dir`` that passes
+    ``validate_snapshot``; damaged/mismatched ones are skipped (this is
+    what makes an injected checkpoint-write failure recoverable: the
+    torn attempt never published, the previous snapshot still wins)."""
+    for path in sorted(glob(os.path.join(ckpt_dir, "step_*")),
+                       reverse=True):
+        try:
+            validate_snapshot(path, expect_partition=expect_partition,
+                              expect_scheduler=expect_scheduler,
+                              expect_n_shards=expect_n_shards)
+            return path
+        except SnapshotError:
+            continue
+    return None

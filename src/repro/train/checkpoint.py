@@ -5,10 +5,18 @@ mechanism can be easily performed using the Sync operation": the graph
 engines are superstep-synchronous, so snapshotting EngineState between
 supersteps IS the consistent snapshot; ``snapshot_engine_state`` does
 exactly that.
+
+Writes are atomic (tmp file + ``os.replace``): a kill mid-save leaves
+either the previous checkpoint or none, never a truncated archive.
+``restore`` raises :class:`CheckpointError` — naming the missing key,
+the mismatched shape, or the corrupt archive — instead of leaking
+``KeyError``/``zipfile`` tracebacks.  Sharded multi-device snapshots
+live in ``repro.ft.snapshot``, built on the same conventions.
 """
 from __future__ import annotations
 
 import os
+import zipfile
 from typing import Any
 
 import jax
@@ -17,6 +25,15 @@ import numpy as np
 
 PyTree = Any
 _SEP = "::"
+
+# Bump when the set of keys snapshot_engine_state writes (or their
+# meaning) changes; restore_engine_state refuses other versions.
+ENGINE_SNAPSHOT_SCHEMA = 2
+
+
+class CheckpointError(Exception):
+    """A checkpoint could not be read back: missing file, corrupt
+    archive, missing key, shape mismatch, or schema mismatch."""
 
 
 def _flatten(tree: PyTree) -> dict:
@@ -31,23 +48,59 @@ def _flatten(tree: PyTree) -> dict:
     return flat
 
 
+def _atomic_savez(path: str, flat: dict) -> None:
+    """np.savez to ``path`` such that ``path`` is never truncated: the
+    archive is built under a tmp name and published with os.replace."""
+    if not path.endswith(".npz"):
+        path = path + ".npz"
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    tmp = path + ".tmp"
+    with open(tmp, "wb") as f:
+        np.savez(f, **flat)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, path)
+
+
 def save(path: str, tree: PyTree, step: int | None = None) -> None:
     flat = _flatten(tree)
     if step is not None:
         flat["__step__"] = np.asarray(step)
-    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
-    np.savez(path, **flat)
+    _atomic_savez(path, flat)
+
+
+def _load_npz(path: str):
+    path = path if path.endswith(".npz") else path + ".npz"
+    if not os.path.exists(path):
+        raise CheckpointError(f"checkpoint not found: {path}")
+    try:
+        data = np.load(path)
+        data.files  # forces the zip directory read
+        return data
+    except (zipfile.BadZipFile, OSError, ValueError) as e:
+        raise CheckpointError(
+            f"corrupt checkpoint archive {path}: {e}") from e
 
 
 def restore(path: str, like: PyTree) -> tuple[PyTree, int | None]:
     """Restore into the structure of ``like`` (dtypes preserved)."""
-    data = np.load(path if path.endswith(".npz") else path + ".npz")
+    data = _load_npz(path)
     leaves_like, treedef = jax.tree_util.tree_flatten_with_path(like)
     out = []
     for path_elems, leaf in leaves_like:
         key = _SEP.join(str(getattr(k, "key", getattr(k, "idx", k)))
                         for k in path_elems)
-        arr = jnp.asarray(data[key]).astype(leaf.dtype)
+        if key not in data:
+            raise CheckpointError(
+                f"checkpoint {path} is missing key {key!r}; "
+                f"it has {sorted(data.files)[:8]}...")
+        raw = data[key]
+        want = np.shape(leaf)
+        if tuple(raw.shape) != tuple(want):
+            raise CheckpointError(
+                f"checkpoint {path} key {key!r} has shape "
+                f"{tuple(raw.shape)}, expected {tuple(want)}")
+        arr = jnp.asarray(raw).astype(leaf.dtype)
         out.append(arr)
     step = int(data["__step__"]) if "__step__" in data else None
     return jax.tree_util.tree_unflatten(
@@ -60,15 +113,23 @@ def snapshot_engine_state(path: str, state) -> None:
 
     Saves everything a bit-identical resume needs: data, the task set,
     priorities, sync results, and the update counter; the superstep goes
-    into ``__step__``.  ``restore_engine_state`` is the inverse."""
-    save(path, {
+    into ``__step__``.  The snapshot is stamped with a schema version
+    and the EngineState field set so a restore against a different
+    engine-state layout fails loudly.  ``restore_engine_state`` is the
+    inverse."""
+    from repro.core.exec import engine_state_field_names
+    flat = _flatten({
         "vertex_data": state.vertex_data,
         "edge_data": state.edge_data,
         "active": state.active,
         "priority": state.priority,
         "globals": state.globals,
         "n_updates": state.n_updates,
-    }, step=int(state.superstep))
+    })
+    flat["__step__"] = np.asarray(int(state.superstep))
+    flat["__schema__"] = np.asarray(ENGINE_SNAPSHOT_SCHEMA)
+    flat["__fields__"] = np.asarray(",".join(engine_state_field_names()))
+    _atomic_savez(path, flat)
 
 
 def restore_engine_state(path: str, like):
@@ -80,6 +141,28 @@ def restore_engine_state(path: str, like):
     continues bit-identically to a run that never stopped
     (``tests/test_optim_ckpt.py`` asserts this)."""
     import dataclasses
+
+    from repro.core.exec import engine_state_field_names
+    data = _load_npz(path)
+    if "__schema__" not in data:
+        raise CheckpointError(
+            f"{path} is not a versioned engine snapshot (no __schema__ "
+            f"field); re-save it with snapshot_engine_state")
+    schema = int(data["__schema__"])
+    if schema != ENGINE_SNAPSHOT_SCHEMA:
+        raise CheckpointError(
+            f"{path} has engine-snapshot schema {schema}, this build "
+            f"reads {ENGINE_SNAPSHOT_SCHEMA}")
+    saved_fields = str(data["__fields__"]) if "__fields__" in data else ""
+    want_fields = ",".join(engine_state_field_names())
+    if saved_fields != want_fields:
+        missing = set(want_fields.split(",")) - set(saved_fields.split(","))
+        extra = set(saved_fields.split(",")) - set(want_fields.split(","))
+        raise CheckpointError(
+            f"{path} EngineState field set mismatch: snapshot has "
+            f"[{saved_fields}], this build has [{want_fields}]"
+            + (f"; missing {sorted(missing)}" if missing else "")
+            + (f"; unknown {sorted(extra)}" if extra else ""))
     tree = {
         "vertex_data": like.vertex_data,
         "edge_data": like.edge_data,

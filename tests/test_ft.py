@@ -1,0 +1,595 @@
+"""Fault tolerance (ISSUE 9 / DESIGN.md §12): sharded snapshots, fault
+injection, and the supervised restart loop.
+
+The in-process tests run the M=1 degenerate plan and the single-device
+engines; the 8-virtual-device kill-recovery matrix runs in a subprocess
+(XLA_FLAGS before jax init) and is marked ``faults`` so CI gives it a
+real multi-device job.
+"""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:                                   # optional test dep (like
+    from hypothesis import given, settings   # test_coloring.py): the
+    from hypothesis import strategies as st  # property test skips, the
+    HAVE_HYPOTHESIS = True             # deterministic matrix still runs
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+from repro import api
+from repro.apps import pagerank
+from repro.ft import (CheckpointWriteFault, FaultEvent, FaultPlan,
+                      SnapshotError, SupervisorGaveUp, latest_valid_snapshot,
+                      load_carry, supervised, validate_snapshot,
+                      write_snapshot)
+from repro.ft.sync_snapshot import snapshot_as_program
+from repro.train.checkpoint import (CheckpointError, restore,
+                                    restore_engine_state, save,
+                                    snapshot_engine_state)
+from conftest import random_graph
+
+
+def _problem(nv=50, ne=120, seed=3):
+    edges = random_graph(nv, ne, seed=seed)
+    graph, update, syncs = pagerank.build(edges, nv)
+    return graph, update, syncs
+
+
+def _rank(result):
+    return np.asarray(result.vertex_data["rank"])
+
+
+# ----------------------------------------------------------------------
+# Kill/resume matrix, M=1 (the 8-device half lives in the subprocess)
+# ----------------------------------------------------------------------
+
+@pytest.mark.parametrize("scheduler", ["chromatic", "locking"])
+def test_single_device_kill_resume_bitwise(tmp_path, scheduler):
+    graph, update, syncs = _problem()
+    kw = dict(syncs=syncs, scheduler=scheduler, max_supersteps=12)
+    base = api.run(graph, update, **kw)
+    assert base.restarts is None          # no supervision engaged
+    faults = FaultPlan([FaultEvent("kill", superstep=5)])
+    r = api.run(graph, update, **kw, checkpoint_every=2,
+                checkpoint_dir=str(tmp_path), faults=faults)
+    assert [x.error_type for x in r.restarts] == ["InjectedKill"]
+    assert r.restarts[0].restored_superstep == 4
+    assert r.superstep == base.superstep
+    assert np.array_equal(_rank(base), _rank(r))
+
+
+@pytest.mark.parametrize("scheduler", ["chromatic", "locking"])
+def test_distributed_m1_kill_resume_bitwise(tmp_path, scheduler):
+    graph, update, syncs = _problem()
+    assign = np.zeros(graph.n_vertices, np.int64)
+    kw = dict(syncs=syncs, scheduler=scheduler, max_supersteps=12,
+              n_shards=1, partition=assign)
+    base = api.run(graph, update, **kw)
+    faults = FaultPlan([FaultEvent("kill", superstep=5)])
+    r = api.run(graph, update, **kw, checkpoint_every=2,
+                checkpoint_dir=str(tmp_path), faults=faults)
+    assert [x.error_type for x in r.restarts] == ["InjectedKill"]
+    assert r.superstep == base.superstep
+    assert r.n_updates == base.n_updates
+    assert np.array_equal(_rank(base), _rank(r))
+
+
+def test_kill_with_no_checkpoints_restarts_from_scratch(tmp_path):
+    """A kill before the first snapshot restarts from superstep 0 and
+    still finishes bitwise equal (restored_superstep stays None)."""
+    graph, update, syncs = _problem()
+    base = api.run(graph, update, syncs=syncs, max_supersteps=8)
+    faults = FaultPlan([FaultEvent("kill", superstep=1)])
+    r = api.run(graph, update, syncs=syncs, max_supersteps=8,
+                checkpoint_every=5, checkpoint_dir=str(tmp_path),
+                faults=faults)
+    assert r.restarts[0].restored_superstep is None
+    assert np.array_equal(_rank(base), _rank(r))
+
+
+def test_transient_and_straggle(tmp_path):
+    graph, update, syncs = _problem()
+    base = api.run(graph, update, syncs=syncs, max_supersteps=10)
+    faults = FaultPlan([FaultEvent("transient", superstep=3),
+                        FaultEvent("straggle", superstep=5,
+                                   delay_s=0.001)])
+    r = api.run(graph, update, syncs=syncs, max_supersteps=10,
+                checkpoint_every=2, checkpoint_dir=str(tmp_path),
+                faults=faults)
+    # straggle delays but never restarts; transient restarts once
+    assert [x.error_type for x in r.restarts] == ["TransientFault"]
+    assert faults.all_fired
+    assert np.array_equal(_rank(base), _rank(r))
+
+
+def test_supervisor_gives_up(tmp_path):
+    graph, update, syncs = _problem()
+    faults = FaultPlan([FaultEvent("kill", superstep=s)
+                        for s in (2, 3, 4)])
+    with pytest.raises(SupervisorGaveUp, match="after 1 restart"):
+        api.run(graph, update, syncs=syncs, max_supersteps=10,
+                checkpoint_every=2, checkpoint_dir=str(tmp_path),
+                faults=faults, max_restarts=1)
+
+
+def test_until_composes_with_checkpointing(tmp_path):
+    graph, update, syncs = _problem()
+
+    def make_stop(n):      # fires at the n-th boundary check
+        seen = []
+
+        def stop(g):
+            seen.append(0)
+            return len(seen) >= n
+        return stop
+
+    base = api.run(graph, update, syncs=syncs, until=make_stop(4))
+    r = api.run(graph, update, syncs=syncs, until=make_stop(4),
+                checkpoint_every=2, checkpoint_dir=str(tmp_path))
+    assert r.superstep == base.superstep == 3
+    assert np.array_equal(_rank(base), _rank(r))
+
+
+# ----------------------------------------------------------------------
+# resume_from through the facade
+# ----------------------------------------------------------------------
+
+def test_resume_from_rebuilds_plan_and_continues_bitwise(tmp_path):
+    graph, update, syncs = _problem()
+    assign = np.zeros(graph.n_vertices, np.int64)
+    kw = dict(syncs=syncs, scheduler="chromatic", n_shards=1,
+              partition=assign)
+    api.run(graph, update, **kw, num_supersteps=6, checkpoint_every=3,
+            checkpoint_dir=str(tmp_path))
+    snap = latest_valid_snapshot(str(tmp_path))
+    assert snap is not None and snap.endswith("step_00000006")
+    # no partition= passed: the plan is rebuilt from the snapshot
+    resumed = api.run(graph, update, syncs=syncs, scheduler="chromatic",
+                      num_supersteps=10, resume_from=snap)
+    full = api.run(graph, update, **kw, num_supersteps=10)
+    assert resumed.superstep == 10
+    assert np.array_equal(_rank(full), _rank(resumed))
+
+
+def test_resume_from_single_device_state_file(tmp_path):
+    graph, update, syncs = _problem()
+    r1 = api.run(graph, update, syncs=syncs, num_supersteps=5,
+                 checkpoint_every=5, checkpoint_dir=str(tmp_path))
+    f = os.path.join(str(tmp_path), "state_step_00000005.npz")
+    assert os.path.exists(f)
+    resumed = api.run(graph, update, syncs=syncs, num_supersteps=9,
+                      resume_from=f)
+    full = api.run(graph, update, syncs=syncs, num_supersteps=9)
+    assert resumed.superstep == 9
+    assert np.array_equal(_rank(full), _rank(resumed))
+
+
+def test_resume_from_wrong_scheduler_or_partition_refused(tmp_path):
+    graph, update, syncs = _problem()
+    assign = np.zeros(graph.n_vertices, np.int64)
+    api.run(graph, update, syncs=syncs, n_shards=1, partition=assign,
+            num_supersteps=4, checkpoint_every=2,
+            checkpoint_dir=str(tmp_path))
+    snap = latest_valid_snapshot(str(tmp_path))
+    with pytest.raises(ValueError, match="scheduler"):
+        api.run(graph, update, syncs=syncs, scheduler="locking",
+                num_supersteps=8, resume_from=snap)
+    # a plan with a different partition identity must be refused at load
+    eng = api.build_engine(graph, update, syncs=syncs, n_shards=1,
+                           partition=assign)
+    with pytest.raises(SnapshotError, match="partition fingerprint"):
+        load_carry(snap, eng.init_carry(), expect_partition="deadbeef")
+
+
+# ----------------------------------------------------------------------
+# Snapshot integrity: atomicity, torn writes, digests
+# ----------------------------------------------------------------------
+
+def _engine_and_carry(tmp_path, nv=40):
+    graph, update, syncs = _problem(nv=nv, ne=90)
+    assign = np.zeros(graph.n_vertices, np.int64)
+    eng = api.build_engine(graph, update, syncs=syncs, n_shards=1,
+                           partition=assign)
+    carry = eng.init_carry()
+    carry = eng.step_chunk(carry, 3)
+    return eng, carry
+
+
+def test_checkpoint_write_fault_leaves_previous_snapshot_valid(tmp_path):
+    eng, carry = _engine_and_carry(tmp_path)
+    plan = eng.plan
+    kw = dict(scheduler="chromatic",
+              partition=plan.partition_fingerprint,
+              assignment=plan.assignment)
+    first = write_snapshot(str(tmp_path), carry, **kw)
+    carry2 = eng.step_chunk(carry, 6)
+    faults = FaultPlan([FaultEvent("checkpoint_fail", superstep=6)])
+    with pytest.raises(CheckpointWriteFault):
+        write_snapshot(str(tmp_path), carry2, **kw, faults=faults)
+    # the torn attempt never published; the previous snapshot is the
+    # newest valid one and still loads
+    assert latest_valid_snapshot(str(tmp_path)) == first
+    restored, step = load_carry(first, eng.init_carry(),
+                                expect_partition=plan.partition_fingerprint)
+    assert step == 3
+    assert np.array_equal(np.asarray(restored["vertex_data"]["rank"]),
+                          np.asarray(carry["vertex_data"]["rank"]))
+
+
+def test_corrupted_and_truncated_snapshots_are_skipped(tmp_path):
+    eng, carry = _engine_and_carry(tmp_path)
+    plan = eng.plan
+    kw = dict(scheduler="chromatic",
+              partition=plan.partition_fingerprint,
+              assignment=plan.assignment)
+    good = write_snapshot(str(tmp_path), carry, **kw)
+    carry2 = eng.step_chunk(carry, 5)
+    bad = write_snapshot(str(tmp_path), carry2, **kw)
+    assert latest_valid_snapshot(str(tmp_path)) == bad
+
+    # flip bytes in a shard file: digest mismatch
+    shard = os.path.join(bad, "shard_00000.npz")
+    blob = bytearray(open(shard, "rb").read())
+    blob[len(blob) // 2] ^= 0xFF
+    open(shard, "wb").write(bytes(blob))
+    with pytest.raises(SnapshotError, match="digest mismatch"):
+        validate_snapshot(bad)
+    assert latest_valid_snapshot(str(tmp_path)) == good
+
+    # truncate the file entirely
+    open(shard, "wb").close()
+    with pytest.raises(SnapshotError, match="digest mismatch"):
+        validate_snapshot(bad)
+
+    # remove it: named as missing
+    os.remove(shard)
+    with pytest.raises(SnapshotError, match="missing file"):
+        validate_snapshot(bad)
+
+    # corrupt the manifest json
+    mpath = os.path.join(good, "MANIFEST.json")
+    open(mpath, "w").write("{not json")
+    with pytest.raises(SnapshotError, match="unreadable manifest"):
+        validate_snapshot(good)
+    assert latest_valid_snapshot(str(tmp_path)) is None
+
+    # no manifest at all (torn directory)
+    os.remove(mpath)
+    with pytest.raises(SnapshotError, match="no MANIFEST.json"):
+        validate_snapshot(good)
+
+
+def test_snapshot_identity_checks(tmp_path):
+    eng, carry = _engine_and_carry(tmp_path)
+    plan = eng.plan
+    p = write_snapshot(str(tmp_path), carry, scheduler="chromatic",
+                       partition=plan.partition_fingerprint,
+                       assignment=plan.assignment)
+    validate_snapshot(p, expect_partition=plan.partition_fingerprint,
+                      expect_scheduler="chromatic", expect_n_shards=1)
+    with pytest.raises(SnapshotError, match="scheduler"):
+        validate_snapshot(p, expect_scheduler="locking")
+    with pytest.raises(SnapshotError, match="shards"):
+        validate_snapshot(p, expect_n_shards=8)
+    with pytest.raises(SnapshotError, match="partition fingerprint"):
+        validate_snapshot(p, expect_partition="0000000000000000")
+
+
+# ----------------------------------------------------------------------
+# Hypothesis roundtrip: sharded snapshots across dtypes and shard counts
+# ----------------------------------------------------------------------
+
+_DTYPES = [np.float32, np.int32, np.bool_, jnp.bfloat16]
+
+
+def _roundtrip_once(d, m, r, dtype, step, seed):
+    """write_snapshot >> load_carry is the identity on any carry-shaped
+    tree — bitwise, dtype-preserving (incl. the bfloat16 recast path),
+    for any shard count and superstep."""
+    rng = np.random.default_rng(seed)
+
+    def arr(*shape):
+        raw = rng.standard_normal(shape) * 100
+        if dtype == np.bool_:
+            return raw > 0
+        return jnp.asarray(raw).astype(dtype)
+
+    carry = {
+        "vertex_data": {"x": arr(m, r), "y": arr(m, r, 2)},
+        "edge_data": {"w": arr(m, r + 1)},
+        "active": jnp.asarray(rng.integers(0, 2, (m, r)), bool),
+        "priority": jnp.asarray(rng.standard_normal((m, r)), jnp.float32),
+        "globals": {"total": arr()},
+        "superstep": jnp.int32(step),
+        "n_updates": jnp.asarray(rng.integers(0, 99, (m,)), jnp.int32),
+    }
+    p = write_snapshot(str(d), carry, scheduler="chromatic",
+                       partition="abc", assignment=np.zeros(4, np.int64))
+    like = jax.tree.map(jnp.zeros_like, carry)
+    restored, got_step = load_carry(p, like, expect_partition="abc")
+    assert got_step == step
+    for (ka, a), (kb, b) in zip(
+            sorted(jax.tree_util.tree_flatten_with_path(carry)[0],
+                   key=str),
+            sorted(jax.tree_util.tree_flatten_with_path(restored)[0],
+                   key=str)):
+        assert jnp.asarray(a).dtype == jnp.asarray(b).dtype, str(ka)
+        assert np.array_equal(np.asarray(jnp.asarray(a).astype(jnp.float32)),
+                              np.asarray(jnp.asarray(b).astype(jnp.float32))
+                              ), str(ka)
+
+
+@pytest.mark.parametrize("dtype", _DTYPES, ids=lambda d: np.dtype(d).name)
+@pytest.mark.parametrize("m", [1, 3])
+def test_sharded_snapshot_roundtrip_matrix(tmp_path, dtype, m):
+    _roundtrip_once(tmp_path, m, 4, dtype, step=7, seed=0)
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=15, deadline=None)
+    @given(seed=st.integers(0, 2**31),
+           m=st.integers(min_value=1, max_value=3),
+           r=st.integers(min_value=1, max_value=5),
+           dtype_idx=st.integers(min_value=0, max_value=len(_DTYPES) - 1),
+           step=st.integers(min_value=0, max_value=10_000))
+    def test_sharded_snapshot_roundtrip_property(tmp_path_factory, seed, m,
+                                                 r, dtype_idx, step):
+        d = tmp_path_factory.mktemp("snap")
+        _roundtrip_once(d, m, r, _DTYPES[dtype_idx], step, seed)
+
+
+# ----------------------------------------------------------------------
+# train.checkpoint satellites: atomic save, CheckpointError, schema
+# ----------------------------------------------------------------------
+
+def test_atomic_save_leaves_no_tmp_residue(tmp_path):
+    p = str(tmp_path / "ck.npz")
+    save(p, {"a": jnp.arange(4)}, step=7)
+    save(p, {"a": jnp.arange(4) * 2}, step=8)   # overwrite in place
+    assert os.listdir(str(tmp_path)) == ["ck.npz"]
+    tree, step = restore(p, {"a": jnp.zeros(4, jnp.int32)})
+    assert step == 8 and int(np.asarray(tree["a"])[3]) == 6
+
+
+def test_restore_errors_are_named(tmp_path):
+    p = str(tmp_path / "ck.npz")
+    with pytest.raises(CheckpointError, match="not found"):
+        restore(p, {"a": jnp.zeros(2)})
+    open(p, "wb").write(b"this is not a zip archive")
+    with pytest.raises(CheckpointError, match="corrupt"):
+        restore(p, {"a": jnp.zeros(2)})
+    save(p, {"a": jnp.zeros(2)})
+    with pytest.raises(CheckpointError, match="missing key 'b'"):
+        restore(p, {"b": jnp.zeros(2)})
+    with pytest.raises(CheckpointError, match="shape"):
+        restore(p, {"a": jnp.zeros(3)})
+
+
+def test_engine_snapshot_schema_and_field_guards(tmp_path):
+    graph, update, syncs = _problem(nv=30, ne=60)
+    eng = api.build_engine(graph, update, syncs=syncs)
+    state = eng.init_state(None, None)
+    p = str(tmp_path / "snap.npz")
+    snapshot_engine_state(p, state)
+    restored = restore_engine_state(p, state)
+    assert int(restored.superstep) == int(state.superstep)
+
+    # unversioned snapshot (pre-schema format): refused by name
+    flat = dict(np.load(p))
+    del flat["__schema__"]
+    np.savez(p[:-4], **flat)
+    with pytest.raises(CheckpointError, match="not a versioned"):
+        restore_engine_state(p, state)
+
+    # wrong schema number
+    flat["__schema__"] = np.asarray(99)
+    np.savez(p[:-4], **flat)
+    with pytest.raises(CheckpointError, match="schema 99"):
+        restore_engine_state(p, state)
+
+    # field-set drift: the mismatched fields are named
+    from repro.train import checkpoint as ckpt
+    flat["__schema__"] = np.asarray(ckpt.ENGINE_SNAPSHOT_SCHEMA)
+    flat["__fields__"] = np.asarray("vertex_data,active")
+    np.savez(p[:-4], **flat)
+    with pytest.raises(CheckpointError, match="missing.*superstep"):
+        restore_engine_state(p, state)
+
+
+# ----------------------------------------------------------------------
+# §8: the snapshot as a GraphLab program
+# ----------------------------------------------------------------------
+
+@pytest.mark.parametrize("n_shards", [1])
+def test_sync_snapshot_program_matches_direct_copy(n_shards):
+    graph, update, syncs = _problem(nv=30, ne=60)
+    # advance the graph a bit so the snapshot isn't trivially the init
+    r = api.run(graph, update, syncs=syncs, num_supersteps=3)
+    import dataclasses
+    moved = dataclasses.replace(graph, vertex_data=r.vertex_data)
+    assign = np.zeros(graph.n_vertices, np.int64) if n_shards == 1 else None
+    snap = snapshot_as_program(moved, scheduler="chromatic",
+                               n_shards=n_shards, partition=assign)
+    assert set(snap) == {"rank"}
+    assert np.array_equal(np.asarray(snap["rank"]),
+                          np.asarray(moved.vertex_data["rank"]))
+
+
+# ----------------------------------------------------------------------
+# FaultPlan / supervisor units
+# ----------------------------------------------------------------------
+
+def test_fault_plan_seeded_is_deterministic():
+    a = FaultPlan.seeded(7, n_shards=8, max_superstep=20, n_events=3,
+                         kinds=("kill", "transient"))
+    b = FaultPlan.seeded(7, n_shards=8, max_superstep=20, n_events=3,
+                         kinds=("kill", "transient"))
+    assert [(e.kind, e.superstep, e.shard) for e in a.events] \
+        == [(e.kind, e.superstep, e.shard) for e in b.events]
+    assert a.next_trigger(0) == min(e.superstep for e in a.events)
+    for e in a.events:
+        e.fired = True
+    assert a.next_trigger(0) is None and a.all_fired
+
+
+def test_supervisor_backoff_and_log():
+    sleeps = []
+    calls = []
+
+    def attempt(n, restarts):
+        calls.append(n)
+        if n < 2:
+            raise CheckpointWriteFault(f"boom {n}")
+        return "done"
+
+    out, restarts = supervised(attempt, max_restarts=3,
+                               backoff_base_s=0.5, backoff_factor=2.0,
+                               backoff_max_s=10.0, sleep=sleeps.append)
+    assert out == "done" and calls == [0, 1, 2]
+    assert sleeps == [0.5, 1.0]
+    assert [r.error_type for r in restarts] \
+        == ["CheckpointWriteFault", "CheckpointWriteFault"]
+    # non-restartable errors pass straight through
+    def bad(n, restarts):
+        raise RuntimeError("not injected")
+    with pytest.raises(RuntimeError):
+        supervised(bad, sleep=sleeps.append)
+
+
+def test_api_ft_kwarg_validation():
+    graph, update, syncs = _problem(nv=20, ne=40)
+    with pytest.raises(ValueError, match="go together"):
+        api.run(graph, update, syncs=syncs, checkpoint_every=2)
+    with pytest.raises(ValueError, match="positive int"):
+        api.run(graph, update, syncs=syncs, checkpoint_every=0,
+                checkpoint_dir="/tmp/x")
+    with pytest.raises(ValueError, match="trace=/profile="):
+        api.run(graph, update, syncs=syncs, trace=True,
+                faults=FaultPlan([]))
+    with pytest.raises(ValueError, match="sequential oracle"):
+        api.run(graph, update, syncs=syncs, scheduler="sequential",
+                faults=FaultPlan([]))
+
+
+# ----------------------------------------------------------------------
+# 8-virtual-device kill-recovery matrix (the acceptance criterion)
+# ----------------------------------------------------------------------
+
+_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import json, tempfile
+    import numpy as np
+    from repro import api
+    from repro.apps import pagerank
+    from repro.core import two_phase_partition
+    from repro.ft import FaultEvent, FaultPlan
+
+    rng = np.random.default_rng(1)
+    nv = 80
+    edges = set()
+    while len(edges) < 200:
+        u, v = rng.integers(0, nv, 2)
+        if u != v:
+            edges.add((min(u, v), max(u, v)))
+    edges = np.array(sorted(edges))
+    graph, update, syncs = pagerank.build(edges, nv)
+    assign = two_phase_partition(nv, graph.edges_np, 8, seed=0)
+
+    out = {}
+    for scheduler in ("chromatic", "locking"):
+        kw = dict(syncs=syncs, scheduler=scheduler, n_shards=8,
+                  partition=assign, max_supersteps=12)
+        # the no-fault, no-checkpoint reference
+        base = api.run(graph, update, **kw)
+        with tempfile.TemporaryDirectory() as d:
+            faults = FaultPlan([
+                FaultEvent("checkpoint_fail", superstep=4),
+                FaultEvent("kill", superstep=6, shard=3),
+                FaultEvent("transient", superstep=9)])
+            r = api.run(graph, update, **kw, checkpoint_every=2,
+                        checkpoint_dir=d, faults=faults)
+        key = scheduler
+        out[key + "_equal"] = bool(np.array_equal(
+            np.asarray(base.vertex_data["rank"]),
+            np.asarray(r.vertex_data["rank"])))
+        out[key + "_supersteps"] = [base.superstep, r.superstep]
+        out[key + "_n_updates"] = [base.n_updates, r.n_updates]
+        out[key + "_restarts"] = [
+            [x.error_type, x.restored_superstep] for x in r.restarts]
+        if scheduler == "locking":
+            out["ghost_stats"] = [
+                [base.stats["ghost_rows_sent"], base.stats["ghost_rows_full"]],
+                [r.stats["ghost_rows_sent"], r.stats["ghost_rows_full"]]]
+
+    # resume_from across processes-worth of state: snapshot at 6 of a
+    # 12-step run, resume in a fresh engine, compare
+    with tempfile.TemporaryDirectory() as d:
+        api.run(graph, update, syncs=syncs, scheduler="chromatic",
+                n_shards=8, partition=assign, num_supersteps=6,
+                checkpoint_every=6, checkpoint_dir=d)
+        from repro.ft import latest_valid_snapshot
+        snap = latest_valid_snapshot(d)
+        resumed = api.run(graph, update, syncs=syncs,
+                          scheduler="chromatic", n_shards=8,
+                          num_supersteps=12, resume_from=snap)
+        full = api.run(graph, update, syncs=syncs, scheduler="chromatic",
+                       n_shards=8, partition=assign, num_supersteps=12)
+        out["resume_equal"] = bool(np.array_equal(
+            np.asarray(full.vertex_data["rank"]),
+            np.asarray(resumed.vertex_data["rank"])))
+
+    print("RESULT:" + json.dumps(out))
+""")
+
+
+@pytest.fixture(scope="module")
+def ft_dist_results():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    proc = subprocess.run([sys.executable, "-c", _SCRIPT], env=env,
+                          capture_output=True, text=True, timeout=900)
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    line = [l for l in proc.stdout.splitlines()
+            if l.startswith("RESULT:")][0]
+    return json.loads(line[len("RESULT:"):])
+
+
+@pytest.mark.faults
+@pytest.mark.parametrize("scheduler", ["chromatic", "locking"])
+def test_8dev_kill_recovery_bitwise(ft_dist_results, scheduler):
+    """The acceptance criterion: an 8-shard run with an injected
+    checkpoint-write failure, a shard kill, and a transient host error
+    auto-recovers and matches the unfaulted, uncheckpointed run
+    bitwise — for both distributed engines."""
+    r = ft_dist_results
+    assert r[scheduler + "_equal"]
+    assert r[scheduler + "_supersteps"][0] == r[scheduler + "_supersteps"][1]
+    assert r[scheduler + "_n_updates"][0] == r[scheduler + "_n_updates"][1]
+    errs = [e for e, _ in r[scheduler + "_restarts"]]
+    assert errs == ["CheckpointWriteFault", "InjectedKill",
+                    "TransientFault"]
+
+
+@pytest.mark.faults
+def test_8dev_ghost_version_counters_survive_restore(ft_dist_results):
+    """Bitwise-equal ghost traffic stats prove the versioned-sync
+    counters (version/eversion/sent_ver/esent_ver) really round-trip
+    through the snapshot — without them the filter would re-ship or
+    skip rows after restore."""
+    base, rec = ft_dist_results["ghost_stats"]
+    assert base == rec
+    assert 0 < rec[0] < rec[1]
+
+
+@pytest.mark.faults
+def test_8dev_resume_from(ft_dist_results):
+    assert ft_dist_results["resume_equal"]
