@@ -15,6 +15,9 @@ Prints ``name,us_per_call,derived`` CSV rows.
   ft     snapshot overhead (checkpoint_every sweep) + kill-recovery
          wall time with a bitwise gate (DESIGN.md §12); appends
          results/BENCH_ft.json
+  serve  online serving: incremental dirty-scope recompute vs full
+         rebuild, bitwise-gated (DESIGN.md §13); appends
+         results/BENCH_serve.json
   roofline dry-run roofline table (per arch x shape x mesh)
 
 ``--smoke`` runs tiny sizes (CI artifact job); without an explicit
@@ -29,7 +32,7 @@ def main() -> None:
     from benchmarks import (common, dispatch_window, fault_tolerance,
                             fig1_consistency, fig6_scaling,
                             fig6cd_comparison, fig8_locking, graph_storage,
-                            kernels_bench, roofline_table)
+                            kernels_bench, roofline_table, serve_online)
     args = sys.argv[1:]
     common.SMOKE = "--smoke" in args
     args = [a for a in args if a != "--smoke"]
@@ -46,11 +49,12 @@ def main() -> None:
         "fig6cd": fig6cd_comparison, "fig8": fig8_locking,
         "kernels": kernels_bench, "graph": graph_storage,
         "dispatch": dispatch_window, "ft": fault_tolerance,
+        "serve": serve_online,
         "roofline": roofline_table,
     }
     if only is None and common.SMOKE:
         # the BENCH_*.json producers
-        selected = ["fig8", "kernels", "graph", "dispatch", "ft"]
+        selected = ["fig8", "kernels", "graph", "dispatch", "ft", "serve"]
     else:
         selected = [only] if only else list(mods)
     print("name,us_per_call,derived")

@@ -297,6 +297,76 @@ def _resolve_cost_model_option(cost_model):
     return resolve_cost_model(cost_model)
 
 
+# kwargs that only mean something on the online-serving path: they
+# configure mutable storage and snapshot publication, not a batch run
+SERVE_ONLY_KWARGS = frozenset({"slack", "edge_capacity", "publish_every"})
+
+
+def serve(graph, update: UpdateFn, *, scheduler: str = "locking",
+          consistency=None, syncs: Sequence[SyncOp] = (),
+          n_shards: int = 1, dispatch: str | None = "auto",
+          max_pending: int | None = None,
+          max_supersteps: int | None = None, partition=None,
+          cost_model=None, slack: int | None = None,
+          edge_capacity: int | None = None,
+          publish_every: int | None = None, **options):
+    """Stand up a long-lived online serving engine (DESIGN.md §13).
+
+    Returns a ``repro.serve.graph_engine.ServingEngine``: a
+    mutate/recompute/query loop over the named scheduler —
+    ``add_edge``/``update_vertex_data``/``update_edge_data`` land
+    mutations on slack storage, ``recompute()`` re-converges exactly
+    the dirty scopes, and queries (``read_vertex``/``read_edge``/
+    ``top_k``/``snapshot()``) read snapshot-isolated published views.
+
+    ``slack=`` reserves per-row insert headroom (default 4 slots when
+    the graph was built without slack; a slack-built graph is used
+    as-is); ``edge_capacity=`` caps total reserved edge rows;
+    ``publish_every=`` also publishes mid-recompute snapshots every K
+    supersteps during long convergences.  Scheduler configuration
+    (``max_pending=``, ``dispatch=``, ``cost_model=``, per-strategy
+    ``**options``) is validated here, eagerly, against the registry
+    entry — inapplicable knobs raise ``ValueError`` naming the allowed
+    set, exactly as ``run`` does.
+    """
+    if max_pending is not None:
+        options["max_pending"] = max_pending
+    if cost_model is not None:
+        options["cost_model"] = _resolve_cost_model_option(cost_model)
+    spec = EngineSpec(scheduler=scheduler, n_shards=n_shards,
+                      consistency=consistency, dispatch=dispatch,
+                      max_supersteps=max_supersteps, options=options)
+    entry = spec.entry
+    if not spec.distributed(partition) and not entry.stepping:
+        raise ValueError(
+            f"scheduler {scheduler!r} cannot serve: serving steps the "
+            "engine between mutation batches, which needs a stepping "
+            f"ExecutorCore strategy; stepping schedulers: "
+            f"{[n for n in list_schedulers() if get_scheduler(n).stepping]}")
+    # eager validation: surface bad knobs at serve() time, not at the
+    # first recompute
+    spec._factory_kwargs(get_distributed(scheduler)
+                         if spec.distributed(partition) else entry)
+    spec._resolve_update(update)
+    spec._check_colors(entry, graph)
+    if slack is not None and (isinstance(slack, bool)
+                              or not isinstance(slack, int) or slack < 1):
+        raise ValueError(f"slack must be a positive int, got {slack!r}")
+    if graph.slack == 0 or (slack is not None and slack != graph.slack):
+        from repro.core.graph import rebuild_compacted
+        colors = graph.colors
+        graph = rebuild_compacted(graph, slack=slack if slack else 4,
+                                  edge_capacity=edge_capacity)
+        if colors is not None:
+            # vertex ids are stable across the rebuild, so the caller's
+            # coloring (greedy, bipartite, ...) stays proper
+            graph = graph.with_colors(np.asarray(colors))
+    from repro.serve.graph_engine import ServingEngine
+    return ServingEngine(graph, spec._resolve_update(update), syncs,
+                         spec=spec, partition=partition,
+                         publish_every=publish_every)
+
+
 def run(graph, update: UpdateFn, *, scheduler: str = "chromatic",
         consistency=None, syncs: Sequence[SyncOp] = (), n_shards: int = 1,
         dispatch: str | None = "auto", max_pending: int | None = None,
@@ -350,6 +420,13 @@ def run(graph, update: UpdateFn, *, scheduler: str = "chromatic",
     pass through ``**options`` and are validated against the registry
     entry — unknown or inapplicable knobs raise ``ValueError``.
     """
+    serveish = SERVE_ONLY_KWARGS & set(options)
+    if serveish:
+        raise ValueError(
+            f"{sorted(serveish)} are online-serving options: api.run "
+            "executes one batch run over a frozen graph — use "
+            "api.serve(graph, update, ...) for live mutations, "
+            "incremental recompute, and query traffic (DESIGN.md §13)")
     if max_pending is not None:
         options["max_pending"] = max_pending
     if cost_model is not None:

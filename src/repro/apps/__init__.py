@@ -18,16 +18,18 @@ Apps never import engine classes: engine selection is the facade's job
 (``scheduler="chromatic" | "priority" | "bsp" | "locking" |
 "sequential"``, DESIGN.md §9).
 """
-from repro.apps import als, bptf, coem, gibbs, lbp, pagerank
+from repro.apps import als, bptf, cc, coem, gibbs, lbp, pagerank
 
 #: name -> uniform ``build(...) -> (graph, update, syncs)`` helper
 BUILDERS = {
     "pagerank": pagerank.build,
     "als": als.build,
+    "cc": cc.build,
     "coem": coem.build,
     "lbp": lbp.build,
     "gibbs": gibbs.build,
     "bptf": bptf.build,
 }
 
-__all__ = ["als", "bptf", "coem", "gibbs", "lbp", "pagerank", "BUILDERS"]
+__all__ = ["als", "bptf", "cc", "coem", "gibbs", "lbp", "pagerank",
+           "BUILDERS"]

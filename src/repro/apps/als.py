@@ -82,11 +82,14 @@ class ALSProblem:
 
 def synthetic_netflix(n_users: int, n_movies: int, d: int, density: float,
                       noise: float = 0.1, seed: int = 0,
-                      d_model: int | None = None) -> ALSProblem:
+                      d_model: int | None = None,
+                      slack: int = 0) -> ALSProblem:
     """Low-rank ground-truth ratings r = <u, v> + noise.
 
     ``d_model`` is the factor dimension used by the solver (defaults to the
-    generative d) — the paper's Fig. 5(a)/6(c) sweeps this.
+    generative d) — the paper's Fig. 5(a)/6(c) sweeps this.  ``slack=``
+    reserves mutable-storage headroom for online serving (new ratings
+    arriving through ``api.serve``, DESIGN.md §13).
     """
     rng = np.random.default_rng(seed)
     d_model = d_model or d
@@ -110,6 +113,7 @@ def synthetic_netflix(n_users: int, n_movies: int, d: int, density: float,
             "is_movie": is_movie,
         },
         edge_data={"rating": ratings},
+        slack=slack,
     )
     g = g.with_colors(bipartite_coloring(n_users, nv))
     return ALSProblem(g, n_users, n_movies, d_model, ratings, pairs, noise)

@@ -1,0 +1,86 @@
+"""Connected components by min-label propagation (int32, exact).
+
+Vertex data: {"label": int32}, initialized to the vertex id (or any
+injected labels).  The update takes the minimum over the scope —
+``min(own, min over neighbor labels)`` — and reschedules neighbors on
+change: chaotic iteration over a confluent semilattice, so *any*
+execution order converges to the same fixed point (the per-component
+minimum).  That uniqueness is what makes this the serving subsystem's
+equivalence workload (DESIGN.md §13): integer min has no floating
+rounding, so incremental dirty-scope recompute vs a from-scratch
+rebuild can be gated **bitwise**, on any scheduler.
+
+No aggregator is declared on purpose: the kernel fast path is a float32
+weighted sum, and labels must stay int32 end to end.  The dense scope
+path runs the reduction exactly.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.coloring import greedy_coloring
+from repro.core.graph import DataGraph
+from repro.core.update import (Consistency, ScopeBatch, UpdateFn,
+                               UpdateResult)
+
+_INT32_MAX = np.iinfo(np.int32).max
+
+
+def make_update() -> UpdateFn:
+    def fn(scope: ScopeBatch) -> UpdateResult:
+        nbr = jnp.where(scope.nbr_mask, scope.nbr_data["label"], _INT32_MAX)
+        new = jnp.minimum(scope.v_data["label"], nbr.min(axis=1))
+        changed = new < scope.v_data["label"]
+        return UpdateResult(
+            v_data={"label": new},
+            resched_nbrs=changed[:, None] & scope.nbr_mask,
+        )
+
+    return UpdateFn(fn, Consistency.EDGE, name="cc")
+
+
+def make_graph(edges: np.ndarray, n_vertices: int, *,
+               labels: np.ndarray | None = None, max_deg: int | None = None,
+               slack: int = 0, edge_capacity: int | None = None) -> DataGraph:
+    if labels is None:
+        labels = np.arange(n_vertices, dtype=np.int32)
+    g = DataGraph.from_edges(
+        n_vertices, edges,
+        vertex_data={"label": np.asarray(labels, np.int32)},
+        max_deg=max_deg, slack=slack, edge_capacity=edge_capacity)
+    return g.with_colors(greedy_coloring(n_vertices, edges))
+
+
+def build(edges: np.ndarray, n_vertices: int, *,
+          labels: np.ndarray | None = None, max_deg: int | None = None,
+          slack: int = 0, edge_capacity: int | None = None):
+    """Uniform facade triple ``(graph, update, syncs)``; no syncs —
+    termination is the task set draining at the fixed point."""
+    graph = make_graph(edges, n_vertices, labels=labels, max_deg=max_deg,
+                       slack=slack, edge_capacity=edge_capacity)
+    return graph, make_update(), ()
+
+
+def reference_components(edges: np.ndarray, n_vertices: int,
+                         labels: np.ndarray | None = None) -> np.ndarray:
+    """Union-find oracle: each vertex's fixed-point label = the minimum
+    injected label over its connected component."""
+    parent = np.arange(n_vertices)
+
+    def find(x):
+        while parent[x] != x:
+            parent[x] = parent[parent[x]]
+            x = parent[x]
+        return x
+
+    for u, v in np.asarray(edges, int):
+        parent[find(u)] = find(v)
+    if labels is None:
+        labels = np.arange(n_vertices, dtype=np.int32)
+    labels = np.asarray(labels, np.int64)
+    best: dict[int, int] = {}
+    for v in range(n_vertices):
+        r = find(v)
+        best[r] = min(best.get(r, _INT32_MAX), int(labels[v]))
+    return np.asarray([best[find(v)] for v in range(n_vertices)], np.int32)

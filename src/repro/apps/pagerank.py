@@ -52,8 +52,16 @@ def make_update(eps: float = 1e-4) -> UpdateFn:
 def make_graph(edges: np.ndarray, n_vertices: int, seed: int = 0,
                max_deg: int | None = None, hub_split: bool = False,
                w_cap: int | None = None,
-               edge_locality: bool = False) -> DataGraph:
-    """Build a PageRank data graph with out-degree-normalized weights."""
+               edge_locality: bool = False,
+               slack: int = 0,
+               edge_capacity: int | None = None) -> DataGraph:
+    """Build a PageRank data graph with out-degree-normalized weights.
+
+    ``slack=`` reserves mutable-storage headroom for online serving
+    (``api.serve``, DESIGN.md §13); weights of edges incident to a
+    mutated vertex are degree-dependent — recompute them with
+    ``refreshed_weights`` after inserts.
+    """
     rng = np.random.default_rng(seed)
     deg = np.zeros(n_vertices)
     for u, v in edges:
@@ -71,14 +79,39 @@ def make_graph(edges: np.ndarray, n_vertices: int, seed: int = 0,
         hub_split=hub_split,
         w_cap=w_cap,
         edge_locality=edge_locality,
+        slack=slack,
+        edge_capacity=edge_capacity,
     )
     return g.with_colors(greedy_coloring(n_vertices, edges))
+
+
+def refreshed_weights(serving, vertices):
+    """Recomputed ``1/sqrt(deg_u * deg_v)`` for every edge incident to
+    ``vertices`` — the app-level half of a dynamic-graph insert: an
+    edge arrival changes its endpoints' degrees, which this app's edge
+    weights depend on, so the incident weights are pushed back through
+    ``ServingEngine.update_edge_data`` (whose dirty tracking then seeds
+    the affected scopes).  Returns ``(edge_input_ids, {"w": values})``.
+    """
+    deg = serving.degrees()
+    eids, ws = [], []
+    seen: set[int] = set()
+    for v in vertices:
+        nbrs, edge_ids = serving.neighbors(v)
+        for nbr, eid in zip(nbrs, edge_ids):
+            if eid not in seen:
+                seen.add(eid)
+                eids.append(int(eid))
+                ws.append(1.0 / np.sqrt(deg[v] * deg[nbr]))
+    return (np.asarray(eids, np.int64),
+            {"w": np.asarray(ws, np.float32)})
 
 
 def build(edges: np.ndarray, n_vertices: int, *, eps: float = 1e-4,
           seed: int = 0, max_deg: int | None = None, tau: int = 1,
           hub_split: bool = False, w_cap: int | None = None,
-          edge_locality: bool = False):
+          edge_locality: bool = False, slack: int = 0,
+          edge_capacity: int | None = None):
     """Uniform facade triple: ``(graph, update, syncs)``.
 
     The syncs are the paper's §3.3 examples (second most popular page +
@@ -89,7 +122,8 @@ def build(edges: np.ndarray, n_vertices: int, *, eps: float = 1e-4,
     """
     graph = make_graph(edges, n_vertices, seed=seed, max_deg=max_deg,
                        hub_split=hub_split, w_cap=w_cap,
-                       edge_locality=edge_locality)
+                       edge_locality=edge_locality, slack=slack,
+                       edge_capacity=edge_capacity)
     syncs = (second_most_popular_sync(tau), total_rank_sync(tau))
     return graph, make_update(eps), syncs
 

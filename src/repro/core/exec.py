@@ -148,6 +148,32 @@ def consume_and_reschedule(active, priority, ids, sel, nbr_ids, nbr_mask,
     return active, priority
 
 
+def dirty_scope_mask(graph: DataGraph, vertices) -> jax.Array:
+    """1-hop dirty closure of a mutated vertex set: ``[Nv]`` bool.
+
+    The serving engine's bridge from mutations to the task set
+    (DESIGN.md §13): a mutation invalidates every update function whose
+    *scope* can read the changed datum, which by the scope definition
+    (§3.1) is the vertex itself plus its neighbors.  Seeding
+    ``active=`` with this mask makes incremental recompute a plain
+    scheduler run — the task-set algebra then grows the frontier
+    exactly as far as ``resched`` decisions demand, which is the
+    equivalence-to-full-rebuild argument for confluent updates.
+
+    Built with the same OOB-sentinel scatter as the task-set algebra so
+    padded neighbor slots cannot mark vertex 0 dirty.
+    """
+    ids = jnp.asarray(vertices, jnp.int32).reshape(-1)
+    mask = jnp.zeros((graph.n_vertices,), bool)
+    if ids.shape[0] == 0:
+        return mask
+    mask = mask.at[ids].set(True, mode="drop")
+    rows = graph.struct_rows(ids)
+    safe = jnp.where(rows.nbr_mask, rows.nbrs, graph.n_vertices)
+    return mask.at[safe.reshape(-1)].max(
+        rows.nbr_mask.reshape(-1), mode="drop")
+
+
 # ----------------------------------------------------------------------
 # Min-id scope claims: the locking engine's conflict-resolution pass
 # ----------------------------------------------------------------------
@@ -672,29 +698,50 @@ class ExecutorCore:
                                ell.padded_slots, cost_model=self.cost_model,
                                bucket_launches=ell.bucket_launches)
 
+    @functools.cached_property
+    def _probe_sel_jit(self):
+        """Jitted first-phase selection for ``profile_probe``: eager
+        selection re-traces its ``lax.switch``/claim gathers on every
+        call (seconds per probe), which would dwarf the supersteps a
+        serving recompute is probing.  Same runtime-graph trick as
+        ``_step_dyn_jit`` so one compile serves across mutations."""
+        def sel_fn(ell, degree, state):
+            base = self.graph
+            self.graph = dataclasses.replace(base, ell=ell, degree=degree)
+            try:
+                ctx = self.prepare(state)
+                ids, valid = self.select(0, ctx)
+                ell_ = self.graph.ell
+                if len(ell_.scope_widths) > 1:
+                    bidx = ell_.window_bucket(ids, valid & state.active[ids])
+                else:
+                    bidx = jnp.int32(0)
+                return jnp.int32(ids.shape[0]), bidx
+            finally:
+                self.graph = base
+        return jax.jit(sel_fn)
+
     def profile_probe(self, state: EngineState) -> dict:
         """Launch shape of this state's first phase, for trace records.
 
-        Runs the strategy's selection host-side (eager — never inside
-        the jitted step) and reports what the step will launch: batch
-        mode resolves the window's snapped scope width, bucket mode
-        reports the full per-bucket launch sequence.  Used only by
-        ``api.run(..., profile=True)``; costs one extra selection pass
-        per profiled superstep, which is why profiling is opt-in.
+        Runs the strategy's selection (jitted, never the update body)
+        and reports what the step will launch: batch mode resolves the
+        window's snapped scope width, bucket mode reports the full
+        per-bucket launch sequence.  Used by ``api.run(...,
+        profile=True)`` and ``ServingEngine.recompute(track_launches=
+        True)``; costs one extra selection pass per probed superstep,
+        which is why probing is opt-in.
         """
-        ctx = self.prepare(state)
-        ids, valid = self.select(0, ctx)
-        batch = int(ids.shape[0])
+        g = self.graph
+        batch, bidx = self._probe_sel_jit(g.ell, g.degree, state)
+        batch = int(batch)
         mode = self.resolve_dispatch(batch)
         rec = {"mode": mode, "phases": int(self.n_phases)}
-        ell = self.graph.ell
         if mode == "batch":
-            sel = valid & state.active[ids]
             rec["rows"] = batch
-            rec["width"] = int(
-                ell.scope_widths[int(ell.window_bucket(ids, sel))])
+            rec["width"] = int(g.ell.scope_widths[int(bidx)])
         else:
-            rec["launches"] = list(ell.bucket_launches)
+            rec["launches"] = list(g.ell.bucket_launches)
         return rec
 
     def init_state(self, active: jax.Array | None = None,
@@ -755,3 +802,46 @@ class ExecutorCore:
                 state = self._step_jit(state)
             return state
         return self._run_jit(state)
+
+    # -- dynamic-graph stepping (serving path, DESIGN.md §13) ---------
+    @functools.cached_property
+    def _step_dyn_jit(self):
+        """One superstep with the graph *structure* as a runtime arg.
+
+        ``_step_jit`` closes over the construction-time graph, so its
+        adjacency arrays bake into the executable as constants — fine
+        for batch runs, fatal for serving, where every slack insert
+        would mean a fresh compile.  Here ``(ell, degree)`` are traced
+        pytree arguments instead: ``self.graph`` is swapped for a
+        tracer-carrying replica only while ``_superstep`` traces (the
+        strategy's ``prepare``/``select`` read ``self.graph``), then
+        restored.  Slack inserts keep every array shape and all ELL
+        meta (pytree aux data) constant, so steady-state serving reuses
+        one executable; a compaction that changes bucket meta retraces
+        exactly once, by construction of the jit cache key.
+        """
+        def step(ell, degree, state):
+            base = self.graph
+            self.graph = dataclasses.replace(base, ell=ell, degree=degree)
+            try:
+                return self._superstep(state)
+            finally:
+                self.graph = base
+        return jax.jit(step)
+
+    def step_on(self, graph: DataGraph, state: EngineState) -> EngineState:
+        """Run one superstep against ``graph``'s current structure
+        (same vertex set/strategy constants as the build graph; see
+        ``_step_dyn_jit`` for why this doesn't recompile per mutation).
+        """
+        return self._step_dyn_jit(graph.ell, graph.degree, state)
+
+    def probe_on(self, graph: DataGraph, state: EngineState) -> dict:
+        """``profile_probe`` against a runtime graph: eager, so a plain
+        temporary swap of ``self.graph`` is enough."""
+        base = self.graph
+        self.graph = graph
+        try:
+            return self.profile_probe(state)
+        finally:
+            self.graph = base

@@ -359,8 +359,12 @@ def bucket_major_edge_order(ell: SlicedEll, n_edges: int) -> np.ndarray:
 
 def _renumber_edge_ids(ell: SlicedEll, inv_order: np.ndarray,
                        n_edges: int) -> SlicedEll:
-    """Map every stored edge id through ``inv_order`` (pad id fixed)."""
-    table = jnp.asarray(np.append(inv_order, ell.pad_edge).astype(np.int32))
+    """Map every stored edge id through ``inv_order`` (reserved-slack
+    ids [n_edges, pad_edge] — including the pad id itself — are fixed
+    points)."""
+    table = np.arange(ell.pad_edge + 1, dtype=np.int32)
+    table[:n_edges] = inv_order
+    table = jnp.asarray(table)
     return dataclasses.replace(
         ell, edge_ids=tuple(table[e] for e in ell.edge_ids))
 
@@ -387,7 +391,8 @@ def build_sliced_ell(nbrs: np.ndarray, nbr_mask: np.ndarray,
                      edge_ids: np.ndarray, is_src: np.ndarray,
                      pad_edge: int,
                      widths: Sequence[int] | None = None,
-                     bucket_sizes: Sequence[int] | None = None) -> SlicedEll:
+                     bucket_sizes: Sequence[int] | None = None,
+                     slack: int = 0) -> SlicedEll:
     """Bucket host-side padded ELL arrays into a ``SlicedEll``.
 
     Each row goes to the smallest bucket whose width covers its real
@@ -395,14 +400,19 @@ def build_sliced_ell(nbrs: np.ndarray, nbr_mask: np.ndarray,
     rows keep ascending id order.  ``bucket_sizes`` forces per-bucket
     row counts (padding with empty rows) — the ``ShardPlan`` uses this
     to keep bucket shapes uniform across shards; without it, empty
-    buckets are dropped.
+    buckets are dropped.  ``slack`` buckets each row as if it had
+    ``slack`` extra slots, so every row's block keeps at least that
+    many sentinel-padded free slots for in-place edge inserts
+    (``insert_edges``, DESIGN.md §13) — the padding is bitwise-inert
+    until an insert fills it, exactly like any other padded slot.
     """
     n_rows, d = nbrs.shape
     slot_cnt = nbr_mask.sum(axis=1)
     widths = tuple(widths) if widths is not None \
         else default_bucket_widths(int(d))
-    assert widths[-1] >= (int(slot_cnt.max()) if n_rows else 0)
-    bidx = bucket_index(widths, slot_cnt)
+    assert widths[-1] >= ((int(slot_cnt.max()) + slack) if n_rows else 0), \
+        "bucket ladder must cover every row's slot count + slack"
+    bidx = bucket_index(widths, slot_cnt + slack)
     groups = [np.nonzero(bidx == b)[0] for b in range(len(widths))]
 
     if bucket_sizes is None:
@@ -427,10 +437,11 @@ def build_sliced_ell(nbrs: np.ndarray, nbr_mask: np.ndarray,
         ei = np.full((sizes[b], w), pad_edge, np.int32)
         sr = np.zeros((sizes[b], w), bool)
         if len(g):
-            nb[: len(g)] = nbrs[g, :w]
-            mk[: len(g)] = nbr_mask[g, :w]
-            ei[: len(g)] = edge_ids[g, :w]
-            sr[: len(g)] = is_src[g, :w]
+            we = min(w, int(d))     # widths may overshoot the padded
+            nb[: len(g), :we] = nbrs[g, :we]   # array when slack > 0
+            mk[: len(g), :we] = nbr_mask[g, :we]
+            ei[: len(g), :we] = edge_ids[g, :we]
+            sr[: len(g), :we] = is_src[g, :we]
             perm[starts[b]: starts[b] + len(g)] = g
             inv_perm[g] = np.arange(starts[b], starts[b] + len(g))
         bn.append(jnp.asarray(nb))
@@ -685,6 +696,18 @@ class DataGraph:
     # all edge-data rows are stored in the *new* order.
     edge_perm: np.ndarray | None = None
     edge_inv_perm: np.ndarray | None = None
+    # --- mutation slack (DESIGN.md §13) ---
+    # Built with ``from_edges(slack=s)``: every adjacency row keeps >= s
+    # sentinel-padded free slots and ``edge_capacity - n_edges`` edge
+    # rows are reserved, so ``insert_edges`` can land new edges without
+    # a global rebuild.  0 means frozen storage (the batch default).
+    slack: int = 0
+
+    @property
+    def edge_capacity(self) -> int:
+        """Edge rows the storage can address (== ``n_edges`` when built
+        without slack).  The pad edge row sits at this index."""
+        return self.ell.pad_edge
 
     # ------------------------------------------------------------------
     @staticmethod
@@ -700,6 +723,8 @@ class DataGraph:
         w_cap: int | None = None,
         width_policy: str | None = None,
         cost_model=None,
+        slack: int = 0,
+        edge_capacity: int | None = None,
     ) -> "DataGraph":
         """Build the sliced-ELL structure from an undirected edge list.
 
@@ -733,6 +758,18 @@ class DataGraph:
         accepts; unset, the device's persisted calibration is used, and
         with no calibration at all the policy degrades to the pow2
         default (the zero-trace fallback).
+
+        ``slack`` (DESIGN.md §13) reserves >= ``slack`` sentinel-padded
+        free slots in every adjacency row (the bucket ladder extends to
+        ``max_deg + slack``) and ``edge_capacity - n_edges`` zeroed
+        edge-data rows (default capacity ``n_edges + ceil(Nv*slack/2)``,
+        the most inserts the slot slack could absorb), so
+        ``insert_edges`` can land new edges in place.  The reserved
+        slots/rows are ordinary padding — bitwise-inert until an insert
+        fills them.  Slack is incompatible with hub splitting and
+        ``width_policy="measured"`` (both choose ladders that leave no
+        headroom) and with ``bucket_widths`` (the slack ladder is
+        derived, not chosen).
         """
         if width_policy not in (None, "pow2", "measured"):
             raise ValueError(
@@ -761,6 +798,21 @@ class DataGraph:
                 "hub_split uses the default_bucket_widths(w_cap) ladder; "
                 "legal combinations: bucket_widths alone, or "
                 "hub_split/w_cap alone")
+        if isinstance(slack, bool) or not isinstance(slack, (int, np.integer)) \
+                or slack < 0:
+            raise ValueError(f"slack must be a non-negative int, got {slack!r}")
+        if edge_capacity is not None and slack == 0:
+            raise ValueError(
+                "edge_capacity= only applies to slack > 0 graphs (a frozen "
+                "graph stores exactly n_edges rows)")
+        if slack and (hub_split or w_cap is not None
+                      or width_policy == "measured" or bucket_widths is not None):
+            raise ValueError(
+                "slack= (mutable storage, DESIGN.md §13) is incompatible "
+                "with hub_split/w_cap/width_policy='measured'/"
+                "bucket_widths: those pick bucket ladders with no insert "
+                "headroom; legal combinations: slack alone, or the "
+                "frozen-storage options alone")
         edges = np.asarray(edges, dtype=np.int64)
         if edges.size == 0:
             edges = edges.reshape(0, 2)
@@ -788,7 +840,26 @@ class DataGraph:
                 hub_split, w_cap = True, plan["w_cap"]
         if hub_split and w_cap is None:
             w_cap = default_w_cap(np.maximum(deg, 1))
-        if hub_split and md > w_cap:
+        if slack:
+            # widen the padded arrays so every row (even a max-degree
+            # one) keeps ``slack`` free columns, and point every padded
+            # slot at the *capacity* pad row: edge ids [ne, capacity)
+            # stay addressable for inserts.
+            cap = (ne + -(-n_vertices * slack // 2)
+                   if edge_capacity is None else int(edge_capacity))
+            if cap < ne:
+                raise ValueError(
+                    f"edge_capacity={cap} < n_edges={ne}: capacity must "
+                    "cover the edges already present")
+            md = md + slack
+            grow = ((0, 0), (0, md - nbrs.shape[1]))
+            nbrs = np.pad(nbrs, grow)
+            mask = np.pad(mask, grow)
+            eids = np.where(mask, np.pad(eids, grow), cap)
+            is_src = np.pad(is_src, grow)
+            ell = build_sliced_ell(nbrs, mask, eids, is_src, pad_edge=cap,
+                                   slack=slack)
+        elif hub_split and md > w_cap:
             ell = build_split_ell(nbrs, mask, eids, is_src, pad_edge=ne,
                                   w_cap=int(w_cap))
         else:
@@ -815,10 +886,13 @@ class DataGraph:
             ell=ell,
             degree=jnp.asarray(deg, dtype=jnp.int32),
             vertex_data=jax.tree.map(jnp.asarray, vertex_data),
-            edge_data=_tree_pad_rows(edge_data, 1),
+            # reserved edge rows (capacity - ne of them) then the pad
+            # row last, all zeros: inserts fill reserved rows in order
+            edge_data=_tree_pad_rows(edge_data, ell.pad_edge - ne + 1),
             edges_np=edges,
             edge_perm=order,
             edge_inv_perm=inv_order,
+            slack=int(slack),
         )
 
     # -- structure access ----------------------------------------------
@@ -863,6 +937,167 @@ class DataGraph:
             adj[int(u)].append(int(v))
             adj[int(v)].append(int(u))
         return adj
+
+
+# ----------------------------------------------------------------------
+# Live mutations (DESIGN.md §13): slack inserts + compaction rebuild
+# ----------------------------------------------------------------------
+
+def _row_slot_counts(ell: SlicedEll) -> np.ndarray:
+    """Real (mask-true) slots per row — the insert cursor position.
+
+    Slots are filled contiguously (both builders and ``insert_edges``
+    keep the mask prefix-true), so a row's next free column is exactly
+    its slot count.  This is *not* the degree: a self-loop's two
+    endpoint writes share one slot.
+    """
+    cnt = np.zeros(ell.n_rows, np.int64)
+    for b in range(ell.n_buckets):
+        rows = np.asarray(ell.perm[ell.starts[b]: ell.starts[b + 1]])
+        real = rows < ell.n_rows
+        slots = np.asarray(ell.nbr_mask[b]).sum(axis=1)
+        np.add.at(cnt, rows[real], slots[real])
+    return cnt
+
+
+def insert_edges(graph: DataGraph, new_edges,
+                 new_edge_data=None) -> DataGraph | None:
+    """Land new undirected edges in reserved slack slots, no rebuild.
+
+    Each new edge takes the next reserved edge row (ids ``n_edges``,
+    ``n_edges + 1``, ...) and fills the next free slot of both endpoint
+    rows — the same contiguous slot order ``from_edges`` would have
+    produced had the edges been in the input list, so the `edge_perm`
+    renumbering contract extends by identity (stored id == input-order
+    id for inserted edges).  ``new_edge_data`` is a pytree of ``[k,
+    ...]`` rows written into the reserved edge-data rows (left zero
+    when omitted).
+
+    Returns a new ``DataGraph`` (the input graph's arrays are never
+    mutated — published snapshots stay immutable), or ``None`` when any
+    endpoint's bucket row or the reserved edge rows are exhausted: the
+    caller compacts with ``rebuild_compacted`` instead.  Self-loop
+    inserts are rejected (the builders' shared-slot semantics would
+    need cursor special-casing that no online workload has asked for).
+    """
+    ell = graph.ell
+    if graph.slack <= 0:
+        raise ValueError(
+            "insert_edges needs mutable storage: build the graph with "
+            "DataGraph.from_edges(slack=...) (DESIGN.md §13)")
+    new_edges = np.asarray(new_edges, dtype=np.int64).reshape(-1, 2)
+    k = len(new_edges)
+    if k == 0:
+        return graph
+    if (new_edges[:, 0] == new_edges[:, 1]).any():
+        raise ValueError("self-loop inserts are unsupported")
+    if new_edges.min() < 0 or new_edges.max() >= graph.n_vertices:
+        raise ValueError(
+            f"edge endpoints must be in [0, {graph.n_vertices})")
+    ne, cap = graph.n_edges, ell.pad_edge
+    if ne + k > cap:
+        return None
+    starts = np.asarray(ell.starts)
+    inv = np.asarray(ell.inv_perm)
+    cnt = _row_slot_counts(ell)
+    nb = [np.asarray(a).copy() for a in ell.nbrs]
+    mk = [np.asarray(a).copy() for a in ell.nbr_mask]
+    ei = [np.asarray(a).copy() for a in ell.edge_ids]
+    sr = [np.asarray(a).copy() for a in ell.is_src]
+    for i, (u, v) in enumerate(new_edges):
+        eid = ne + i
+        for r, other, src in ((int(u), int(v), True),
+                              (int(v), int(u), False)):
+            pos = int(inv[r])
+            b = int(np.searchsorted(starts[1:], pos, side="right"))
+            slot = int(cnt[r])
+            if slot >= ell.widths[b]:
+                return None        # bucket row full -> compact
+            loc = pos - starts[b]
+            nb[b][loc, slot] = other
+            mk[b][loc, slot] = True
+            ei[b][loc, slot] = eid
+            sr[b][loc, slot] = src
+            cnt[r] += 1
+    deg = np.asarray(graph.degree, np.int64).copy()
+    np.add.at(deg, new_edges[:, 0], 1)
+    np.add.at(deg, new_edges[:, 1], 1)
+    new_ell = dataclasses.replace(
+        ell,
+        nbrs=tuple(jnp.asarray(a) for a in nb),
+        nbr_mask=tuple(jnp.asarray(a) for a in mk),
+        edge_ids=tuple(jnp.asarray(a) for a in ei),
+        is_src=tuple(jnp.asarray(a) for a in sr))
+    edge_data = graph.edge_data
+    if new_edge_data is not None and jax.tree.leaves(edge_data):
+        rows = jnp.arange(ne, ne + k)
+        edge_data = jax.tree.map(
+            lambda d, n: d.at[rows].set(jnp.asarray(n, d.dtype)),
+            edge_data, new_edge_data)
+    fresh = np.arange(ne, ne + k, dtype=np.int64)
+    return dataclasses.replace(
+        graph,
+        n_edges=ne + k,
+        ell=new_ell,
+        degree=jnp.asarray(deg, dtype=jnp.int32),
+        edge_data=edge_data,
+        edges_np=np.concatenate([graph.edges_np, new_edges]),
+        edge_perm=np.concatenate([graph.edge_perm, fresh]),
+        edge_inv_perm=np.concatenate([graph.edge_inv_perm, fresh]),
+    )
+
+
+def input_order_edges(graph: DataGraph):
+    """Reconstruct the *input-order* edge list and edge data.
+
+    ``edge_perm[stored] = input`` inverts the bucket-major renumbering
+    (and any insert extensions), so feeding the result back through
+    ``from_edges`` keeps every input-order edge id stable across a
+    compaction — the contract queries-by-edge-id rely on.
+    """
+    ne = graph.n_edges
+    edges_in = np.empty((ne, 2), dtype=np.int64)
+    edges_in[graph.edge_perm] = graph.edges_np
+
+    def back(a):
+        a = np.asarray(a[:ne])
+        out = np.empty_like(a)
+        out[graph.edge_perm] = a
+        return out
+
+    return edges_in, jax.tree.map(back, graph.edge_data)
+
+
+def rebuild_compacted(graph: DataGraph, extra_edges=None,
+                      extra_edge_data=None, slack: int | None = None,
+                      edge_capacity: int | None = None) -> DataGraph:
+    """Full compaction rebuild: re-derive the sliced-ELL storage from
+    the graph's cumulative input-order edge list (+ pending inserts
+    that no longer fit in slack), carrying the current vertex/edge data
+    and re-reserving fresh slack headroom.
+
+    This is the slow path ``insert_edges`` falls back to; input-order
+    edge ids are preserved (``input_order_edges``), colors are *not*
+    re-derived — callers owning a coloring re-color the result.
+    """
+    edges_in, data_in = input_order_edges(graph)
+    if extra_edges is not None and len(extra_edges):
+        extra_edges = np.asarray(extra_edges, dtype=np.int64).reshape(-1, 2)
+        kx = len(extra_edges)
+        if extra_edge_data is None:
+            extra_edge_data = jax.tree.map(
+                lambda a: np.zeros((kx,) + a.shape[1:], a.dtype), data_in)
+        edges_in = np.concatenate([edges_in, extra_edges])
+        data_in = jax.tree.map(
+            lambda a, b: np.concatenate([a, np.asarray(b, a.dtype)]),
+            data_in, extra_edge_data)
+    return DataGraph.from_edges(
+        graph.n_vertices, edges_in,
+        vertex_data=graph.vertex_data,
+        edge_data=data_in,
+        slack=graph.slack if slack is None else slack,
+        edge_capacity=edge_capacity,
+    )
 
 
 def bipartite_edges(n_left: int, n_right: int, pairs: np.ndarray) -> tuple[int, np.ndarray]:

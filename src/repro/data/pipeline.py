@@ -8,7 +8,7 @@ per the shape's kind.
 """
 from __future__ import annotations
 
-from typing import Any
+from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -83,3 +83,56 @@ def param_specs_struct(cfg: ModelConfig, dtype=jnp.bfloat16):
     from repro.models import model as M
     return jax.eval_shape(
         lambda: M.init_params(jax.random.PRNGKey(0), cfg, dtype))
+
+
+class MutationBatch(NamedTuple):
+    """One timestamped batch of live-graph mutation traffic (DESIGN.md
+    §13): ``edges`` to insert plus ``touch`` — vertex ids whose data the
+    driver should rewrite (the app decides the payload).  ``queries`` are
+    vertex ids to read back between recompute rounds."""
+    t: int
+    edges: np.ndarray            # [k, 2] int64, deduped, no self-loops
+    touch: np.ndarray            # [m] int64 vertex ids for data updates
+    queries: np.ndarray          # [q] int64 vertex ids to read
+
+
+def edge_stream(n_vertices: int, rate: float = 8.0, seed: int = 0,
+                n_batches: int = 16, alpha: float = 2.0,
+                update_frac: float = 0.5, query_rate: float = 4.0):
+    """Deterministic stream of ``MutationBatch``es for online serving.
+
+    Per batch ``t``: ``k ~ Poisson(rate)`` candidate edge inserts with
+    Zipf(``alpha``)-skewed endpoints (hot vertices keep getting hotter,
+    matching the power-law graphs the paper's workloads use), deduped and
+    self-loop-free; ``~update_frac * k`` vertex-data touches drawn from
+    the same skew; ``~Poisson(query_rate)`` uniform read queries.  Same
+    ``(n_vertices, rate, seed, ...)`` -> bitwise-identical stream, so
+    traces are replayable across the incremental and rebuild paths.
+    """
+    rng = np.random.default_rng(seed)
+    weights = 1.0 / np.arange(1, n_vertices + 1, dtype=np.float64) ** alpha
+    weights /= weights.sum()
+    for t in range(n_batches):
+        k = int(rng.poisson(rate))
+        pairs: list[tuple[int, int]] = []
+        seen: set[tuple[int, int]] = set()
+        for _ in range(k):
+            u = int(rng.choice(n_vertices, p=weights))
+            v = int(rng.choice(n_vertices, p=weights))
+            if u == v:
+                continue
+            key = (min(u, v), max(u, v))
+            if key in seen:
+                continue
+            seen.add(key)
+            pairs.append(key)
+        edges = (np.asarray(pairs, dtype=np.int64).reshape(-1, 2)
+                 if pairs else np.zeros((0, 2), np.int64))
+        m = int(round(update_frac * len(pairs)))
+        touch = (rng.choice(n_vertices, size=m, p=weights)
+                 .astype(np.int64) if m else np.zeros(0, np.int64))
+        q = int(rng.poisson(query_rate))
+        queries = (rng.integers(0, n_vertices, size=q).astype(np.int64)
+                   if q else np.zeros(0, np.int64))
+        yield MutationBatch(t=t, edges=edges, touch=np.unique(touch),
+                            queries=queries)

@@ -1,1 +1,2 @@
 from repro.serve.engine import decode_step, init_cache, cache_width, ServeState
+from repro.serve.graph_engine import GraphSnapshot, ServingEngine

@@ -1,0 +1,486 @@
+"""Online graph serving: live mutations + dirty-scope incremental
+recompute + snapshot-isolated query traffic (DESIGN.md §13).
+
+The batch half of the repo runs ``api.run`` over a frozen
+``from_edges`` graph; this module is the inference half the paper's
+abstraction was built to serve — a long-lived :class:`ServingEngine`
+wrapping any registered scheduler, driven as::
+
+    serving = api.serve(graph, update, syncs=syncs, scheduler="locking")
+    serving.recompute()                      # initial convergence
+    eid = serving.add_edge(u, v, w=0.3)      # mutations ...
+    serving.update_vertex_data([v], {"rank": [1.0]})
+    serving.recompute()                      # ... dirty scopes only
+    serving.top_k("rank", 10)                # queries (snapshot reads)
+
+Three moving parts:
+
+* **Mutation log onto slack storage.**  Mutations apply to a private
+  working graph immediately — ``add_edges`` lands in the reserved
+  slack slots of ``from_edges(slack=...)`` storage via
+  ``core.graph.insert_edges`` (no rebuild, no shape change, no
+  recompile); data writes are ``.at[].set`` row updates.  Every stored
+  array is replaced, never mutated, which is what makes published
+  snapshots immutable for free.  When a bucket row or the reserved
+  edge rows run out, the engine falls back to a compaction rebuild
+  (``rebuild_compacted``) that re-reserves slack and preserves
+  input-order edge ids; readers never block on it — they keep serving
+  the last published snapshot.
+
+* **Dirty-scope tracking -> scheduler task set.**  Each mutation
+  records the vertices whose update inputs it invalidated (DESIGN.md
+  §13: vertex write -> 1-hop closure of the vertex; edge write -> the
+  two endpoints; insert -> 1-hop closure of both endpoints).
+  ``recompute`` seeds the scheduler's ``active=`` set with exactly
+  that mask, so convergence reuses the ordinary task-set algebra —
+  and, under the window schedulers, the PR-4 ``[B, W]`` batch dispatch
+  path — instead of full-graph sweeps.  Steady-state supersteps run
+  through ``ExecutorCore.step_on``: graph structure is a traced
+  argument, so slack inserts never recompile.
+
+* **Snapshot isolation for reads.**  Queries read a
+  :class:`GraphSnapshot` published only at recompute boundaries
+  (superstep boundaries are globally consistent cuts, paper §8; set
+  ``publish_every=`` to also publish mid-recompute cuts during long
+  convergences).  A held snapshot handle stays bitwise-stable across
+  any later mutations or compactions.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Mapping, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.coloring import greedy_coloring
+from repro.core.exec import dirty_scope_mask, init_engine_state
+from repro.core.graph import (DataGraph, input_order_edges, insert_edges,
+                              rebuild_compacted)
+
+PyTree = Any
+
+
+# ----------------------------------------------------------------------
+# GraphSnapshot: the immutable published read view
+# ----------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class GraphSnapshot:
+    """A consistent, immutable view of converged data for queries.
+
+    Published at recompute boundaries; every array here is a pinned
+    reference that no later mutation rewrites (mutations replace
+    arrays).  ``edge_inv_perm``/``n_edges`` are captured with the data
+    so edge reads stay correct across later inserts and compactions;
+    the edge index dict is shared (it is append-only, and entries past
+    ``n_edges`` are ignored here).
+    """
+    vertex_data: PyTree
+    edge_data: PyTree
+    globals: dict
+    n_vertices: int
+    n_edges: int
+    round: int                 # recompute round that published this view
+    superstep: int             # cumulative supersteps at publish time
+    _edge_inv_perm: np.ndarray = dataclasses.field(repr=False)
+    _edge_index: dict = dataclasses.field(repr=False)
+
+    # -- queries -------------------------------------------------------
+    def read_vertex(self, ids, field: str | None = None):
+        """Vertex data rows at ``ids`` (a field, or the whole tree)."""
+        ids = np.asarray(ids)
+        if field is not None:
+            return np.asarray(self.vertex_data[field])[ids]
+        return jax.tree.map(lambda a: np.asarray(a)[ids], self.vertex_data)
+
+    def find_edge(self, u: int, v: int) -> int | None:
+        """Input-order edge id of ``{u, v}`` in this view, or None."""
+        eid = self._edge_index.get((min(int(u), int(v)), max(int(u), int(v))))
+        return eid if eid is not None and eid < self.n_edges else None
+
+    def read_edge(self, u: int, v: int, field: str | None = None):
+        """Edge data of ``{u, v}``; ``KeyError`` if absent in this view."""
+        eid = self.find_edge(u, v)
+        if eid is None:
+            raise KeyError(f"no edge {{{u}, {v}}} in snapshot "
+                           f"(round {self.round})")
+        row = int(self._edge_inv_perm[eid])
+        if field is not None:
+            return np.asarray(self.edge_data[field])[row]
+        return jax.tree.map(lambda a: np.asarray(a)[row], self.edge_data)
+
+    def top_k(self, field: str, k: int, largest: bool = True):
+        """Top-``k`` vertices by a scalar vertex field: ``(ids, values)``."""
+        vals = np.asarray(self.vertex_data[field])
+        if vals.ndim != 1:
+            raise ValueError(f"top_k needs a scalar field, {field!r} has "
+                             f"shape {vals.shape[1:]} per vertex")
+        order = np.argsort(-vals if largest else vals, kind="stable")[:k]
+        return order, vals[order]
+
+
+# ----------------------------------------------------------------------
+# ServingEngine
+# ----------------------------------------------------------------------
+
+class ServingEngine:
+    """Long-lived mutate/recompute/query loop over one scheduler.
+
+    Construct through :func:`repro.api.serve` (which validates the
+    scheduler configuration and ensures slack storage).  ``spec`` is
+    the validated ``api.EngineSpec``; ``partition=`` is forwarded to
+    distributed builds (``n_shards > 1``), which rebuild their engine
+    every recompute round (the ShardPlan depends on structure) and
+    require updates that write vertex data only — there is no
+    edge-data backflow from shards, the host copy stays authoritative.
+    """
+
+    def __init__(self, graph: DataGraph, update_fn, syncs: Sequence = (),
+                 *, spec, partition=None, publish_every: int | None = None):
+        if graph.slack <= 0:
+            raise ValueError(
+                "ServingEngine needs mutable storage: build the graph "
+                "with slack (api.serve does this automatically)")
+        self._graph = graph
+        self._update = update_fn
+        self._syncs = tuple(syncs)
+        self._spec = spec
+        self._partition = partition
+        self.publish_every = publish_every
+        # colors are only *maintained* when the scheduler consumes them
+        # (chromatic): a recolor bumps the engine-cache key and forces a
+        # retrace, which schedulers that ignore colors shouldn't pay
+        self._track_colors = (graph.colors is not None
+                              and getattr(spec.entry, "needs_colors", False))
+        self._colors = (np.asarray(graph.colors).copy()
+                        if self._track_colors else None)
+        self._colors_version = 0
+        self._struct_version = 0
+        self._engines: dict = {}       # (colors_version, ell meta) -> engine
+        edges_in, _ = input_order_edges(graph)
+        self._edge_index: dict[tuple[int, int], int] = {
+            (min(int(u), int(v)), max(int(u), int(v))): i
+            for i, (u, v) in enumerate(edges_in)}
+        # dirty bookkeeping: closure seeds get their 1-hop scope mask,
+        # exact seeds only themselves (DESIGN.md §13)
+        self._dirty_closure: set[int] = set()
+        self._dirty_exact: set[int] = set()
+        self._round = 0
+        self._supersteps = 0
+        self._snapshot: GraphSnapshot | None = None
+        self._last_state = None
+        self.last_launches: list[dict] | None = None
+        self.stats = {
+            "edges_inserted": 0, "slack_inserts": 0, "compactions": 0,
+            "vertex_updates": 0, "edge_updates": 0, "recolors": 0,
+            "rounds": 0, "supersteps": 0, "updates": 0,
+        }
+        self._publish()
+
+    # -- introspection (working graph, not the snapshot) ---------------
+    @property
+    def graph(self) -> DataGraph:
+        """The current working graph (mutations applied, possibly not
+        yet reconverged).  Queries should go through ``snapshot()``."""
+        return self._graph
+
+    @property
+    def n_edges(self) -> int:
+        return self._graph.n_edges
+
+    def degrees(self) -> np.ndarray:
+        return np.asarray(self._graph.degree)
+
+    def neighbors(self, v: int):
+        """Current neighbors of ``v``: ``(nbr_ids, edge_input_ids)``."""
+        rows = self._graph.struct_rows(jnp.asarray([int(v)], jnp.int32))
+        m = np.asarray(rows.nbr_mask[0])
+        nbrs = np.asarray(rows.nbrs[0])[m]
+        eids = np.asarray(self._graph.edge_perm)[
+            np.asarray(rows.edge_ids[0])[m]]
+        return nbrs, eids
+
+    def find_edge(self, u: int, v: int) -> int | None:
+        eid = self._edge_index.get((min(int(u), int(v)), max(int(u), int(v))))
+        return eid if eid is not None and eid < self._graph.n_edges else None
+
+    # -- mutations ------------------------------------------------------
+    def add_edges(self, edges, edge_data: Mapping | None = None) -> np.ndarray:
+        """Insert undirected edges; returns their input-order edge ids.
+
+        Fast path fills slack slots in place (no rebuild, no shape
+        change); on slack exhaustion falls back to a compaction rebuild
+        that re-reserves headroom — readers keep the last snapshot
+        either way.  Duplicate edges raise (update the existing edge's
+        data with ``update_edge_data`` instead).
+        """
+        edges = np.asarray(edges, np.int64).reshape(-1, 2)
+        if len(edges) == 0:
+            return np.empty((0,), np.int64)
+        keys = [(min(int(u), int(v)), max(int(u), int(v))) for u, v in edges]
+        for key in keys:
+            if self.find_edge(*key) is not None:
+                raise ValueError(
+                    f"edge {{{key[0]}, {key[1]}}} already exists; use "
+                    "update_edge_data to change its data")
+        if len(set(keys)) != len(keys):
+            raise ValueError("duplicate edges within one add_edges batch")
+        ne = self._graph.n_edges
+        g2 = insert_edges(self._graph, edges, edge_data)
+        if g2 is None:
+            self._graph = rebuild_compacted(self._graph, extra_edges=edges,
+                                            extra_edge_data=edge_data)
+            self._struct_version += 1
+            self.stats["compactions"] += 1
+            if self._colors is not None:
+                ein, _ = input_order_edges(self._graph)
+                self._set_colors(greedy_coloring(self._graph.n_vertices, ein))
+        else:
+            self._graph = g2
+            self.stats["slack_inserts"] += len(edges)
+            if self._colors is not None:
+                self._fix_colors(edges)
+        if self._colors is not None:
+            self._graph = self._graph.with_colors(self._colors)
+        new_ids = np.arange(ne, ne + len(edges), dtype=np.int64)
+        for key, eid in zip(keys, new_ids):
+            self._edge_index[key] = int(eid)
+        self._dirty_closure.update(int(x) for x in edges.reshape(-1))
+        self.stats["edges_inserted"] += len(edges)
+        return new_ids
+
+    def add_edge(self, u: int, v: int, **fields) -> int:
+        data = ({k: np.asarray([val]) for k, val in fields.items()}
+                if fields else None)
+        return int(self.add_edges(np.asarray([[u, v]]), data)[0])
+
+    def update_vertex_data(self, ids, values: Mapping) -> None:
+        """Write vertex-data rows: ``values`` maps field -> ``[m, ...]``
+        rows for the ``m`` vertices in ``ids``.  Dirties the 1-hop
+        scopes of the written vertices."""
+        ids = np.asarray(ids, np.int64).reshape(-1)
+        if ids.size and (ids.min() < 0 or ids.max() >= self._graph.n_vertices):
+            raise ValueError(
+                f"vertex ids must be in [0, {self._graph.n_vertices})")
+        rows = jnp.asarray(ids)
+        vdata = dict(self._graph.vertex_data)
+        for field, vals in values.items():
+            if field not in vdata:
+                raise KeyError(
+                    f"unknown vertex field {field!r}; graph has "
+                    f"{sorted(vdata)}")
+            vdata[field] = vdata[field].at[rows].set(
+                jnp.asarray(vals, vdata[field].dtype))
+        self._graph = dataclasses.replace(self._graph, vertex_data=vdata)
+        self._dirty_closure.update(int(x) for x in ids)
+        self.stats["vertex_updates"] += int(ids.size)
+
+    def update_edge_data(self, edge_ids, values: Mapping) -> None:
+        """Write edge-data rows by input-order edge id (from
+        ``find_edge``/``add_edges``/``neighbors``).  Dirties exactly the
+        edges' endpoints — the only scopes that can read edge data."""
+        edge_ids = np.asarray(edge_ids, np.int64).reshape(-1)
+        if edge_ids.size == 0:
+            return
+        if edge_ids.min() < 0 or edge_ids.max() >= self._graph.n_edges:
+            raise ValueError(
+                f"edge ids must be in [0, {self._graph.n_edges})")
+        stored = np.asarray(self._graph.edge_inv_perm)[edge_ids]
+        rows = jnp.asarray(stored)
+        edata = dict(self._graph.edge_data)
+        for field, vals in values.items():
+            if field not in edata:
+                raise KeyError(
+                    f"unknown edge field {field!r}; graph has "
+                    f"{sorted(edata)}")
+            edata[field] = edata[field].at[rows].set(
+                jnp.asarray(vals, edata[field].dtype))
+        self._graph = dataclasses.replace(self._graph, edge_data=edata)
+        self._dirty_exact.update(
+            int(x) for x in self._graph.edges_np[stored].reshape(-1))
+        self.stats["edge_updates"] += int(edge_ids.size)
+
+    def update_edge(self, u: int, v: int, **fields) -> None:
+        eid = self.find_edge(u, v)
+        if eid is None:
+            raise KeyError(f"no edge {{{u}, {v}}}; add_edge it first")
+        self.update_edge_data(
+            [eid], {k: np.asarray([val]) for k, val in fields.items()})
+
+    # -- chromatic upkeep ----------------------------------------------
+    def _set_colors(self, colors: np.ndarray) -> None:
+        self._colors = np.asarray(colors, np.int32)
+        self._colors_version += 1
+        self.stats["recolors"] += 1
+
+    def _fix_colors(self, new_edges: np.ndarray) -> None:
+        """Local greedy repair: an insert joining same-colored endpoints
+        moves one endpoint to the smallest color free in its (new)
+        neighborhood.  Keeps the coloring proper — color count may grow."""
+        changed = False
+        for u, v in new_edges:
+            u, v = int(u), int(v)
+            if self._colors[u] != self._colors[v]:
+                continue
+            nbrs, _ = self.neighbors(u)
+            used = set(int(self._colors[n]) for n in nbrs)
+            c = 0
+            while c in used:
+                c += 1
+            self._colors = self._colors.copy()
+            self._colors[u] = c
+            changed = True
+        if changed:
+            self._colors_version += 1
+            self.stats["recolors"] += 1
+
+    # -- recompute ------------------------------------------------------
+    def dirty_mask(self) -> np.ndarray:
+        """The ``[Nv]`` bool task-set seed the next recompute will use."""
+        mask = np.zeros((self._graph.n_vertices,), bool)
+        if self._dirty_closure:
+            mask |= np.asarray(dirty_scope_mask(
+                self._graph, np.fromiter(self._dirty_closure, np.int32)))
+        if self._dirty_exact:
+            mask[np.fromiter(self._dirty_exact, np.int64)] = True
+        return mask
+
+    def _engine(self):
+        ell = self._graph.ell
+        key = (self._colors_version, ell.widths, tuple(ell.starts),
+               ell.n_rows, ell.pad_edge)
+        eng = self._engines.get(key)
+        if eng is None:
+            eng = self._spec.build(self._graph, self._update, self._syncs)
+            self._engines[key] = eng
+        return eng
+
+    def recompute(self, *, full: bool | None = None,
+                  max_supersteps: int | None = None,
+                  track_launches: bool = False) -> dict:
+        """Re-converge the dirty scopes; publish a fresh snapshot.
+
+        ``full=`` seeds every vertex instead of the dirty mask
+        (``None`` auto-selects full for the first round, when nothing
+        has converged yet).  ``track_launches=True`` records the launch
+        shape of each superstep's first phase (eager probe, costs one
+        selection pass per superstep) into the returned stats and
+        ``self.last_launches``.  Returns ``{"round", "supersteps",
+        "updates", "dirty", "launches"}``.
+        """
+        if full is None:
+            full = self._round == 0
+        if full:
+            mask = np.ones((self._graph.n_vertices,), bool)
+        else:
+            mask = self.dirty_mask()
+        self._dirty_closure.clear()
+        self._dirty_exact.clear()
+        n_dirty = int(mask.sum())
+        if n_dirty == 0:
+            self._publish()
+            return {"round": self._round, "supersteps": 0, "updates": 0,
+                    "dirty": 0, "launches": []}
+        if self._spec.distributed(self._partition):
+            return self._recompute_distributed(mask, max_supersteps)
+        engine = self._engine()
+        state = init_engine_state(
+            self._graph.vertex_data, self._graph.edge_data,
+            self._graph.n_vertices, self._syncs, active=jnp.asarray(mask))
+        cap = max_supersteps or engine.max_supersteps
+        launches: list[dict] = []
+        steps = 0
+        while bool(state.active.any()) and steps < cap:
+            if track_launches:
+                launches.append(engine.probe_on(self._graph, state))
+            state = engine.step_on(self._graph, state)
+            steps += 1
+            if (self.publish_every and steps % self.publish_every == 0
+                    and bool(state.active.any())):
+                self._fold(state)
+                self._publish(superstep_delta=steps)
+        self._fold(state)
+        self._last_state = state
+        self._round += 1
+        self._supersteps += steps
+        self.stats["rounds"] += 1
+        self.stats["supersteps"] += steps
+        self.stats["updates"] += int(state.n_updates)
+        self.last_launches = launches if track_launches else None
+        self._publish()
+        return {"round": self._round, "supersteps": steps,
+                "updates": int(state.n_updates), "dirty": n_dirty,
+                "launches": launches}
+
+    def _recompute_distributed(self, mask: np.ndarray,
+                               max_supersteps: int | None) -> dict:
+        spec = self._spec
+        if max_supersteps is not None:
+            spec = dataclasses.replace(spec, max_supersteps=max_supersteps)
+        engine = spec.build(self._graph, self._update, self._syncs,
+                            partition=self._partition)
+        out = engine.run(active=jnp.asarray(mask))
+        vdata = jax.tree.map(jnp.asarray, out["vertex_data"])
+        self._graph = dataclasses.replace(self._graph, vertex_data=vdata)
+        self._round += 1
+        steps = int(out["supersteps"])
+        self._supersteps += steps
+        self.stats["rounds"] += 1
+        self.stats["supersteps"] += steps
+        self.stats["updates"] += int(out["n_updates"])
+        self.last_launches = None
+        self._publish(globals_=out["globals"])
+        return {"round": self._round, "supersteps": steps,
+                "updates": int(out["n_updates"]),
+                "dirty": int(mask.sum()), "launches": []}
+
+    def _fold(self, state) -> None:
+        """Fold a converged EngineState back into the working graph —
+        after this, ``graph.vertex_data``/``edge_data`` *are* the
+        authoritative serving values."""
+        self._graph = dataclasses.replace(
+            self._graph, vertex_data=state.vertex_data,
+            edge_data=state.edge_data)
+
+    def _publish(self, globals_: dict | None = None,
+                 superstep_delta: int = 0) -> None:
+        if globals_ is None:
+            globals_ = {s.key: s.run(self._graph.vertex_data)
+                        for s in self._syncs}
+        self._snapshot = GraphSnapshot(
+            vertex_data=self._graph.vertex_data,
+            edge_data=self._graph.edge_data,
+            globals=globals_,
+            n_vertices=self._graph.n_vertices,
+            n_edges=self._graph.n_edges,
+            round=self._round,
+            superstep=self._supersteps + superstep_delta,
+            _edge_inv_perm=np.asarray(self._graph.edge_inv_perm),
+            _edge_index=self._edge_index)
+
+    # -- queries (delegate to the published snapshot) ------------------
+    def snapshot(self) -> GraphSnapshot:
+        """Pin the current published view: later mutations/recomputes
+        never change what this handle reads."""
+        return self._snapshot
+
+    def read_vertex(self, ids, field: str | None = None):
+        return self._snapshot.read_vertex(ids, field)
+
+    def read_edge(self, u: int, v: int, field: str | None = None):
+        return self._snapshot.read_edge(u, v, field)
+
+    def top_k(self, field: str, k: int, largest: bool = True):
+        return self._snapshot.top_k(field, k, largest)
+
+    # -- persistence ----------------------------------------------------
+    def save_snapshot(self, path: str) -> None:
+        """Persist the last converged EngineState (single-device rounds)
+        through ``repro.train.checkpoint.snapshot_engine_state``."""
+        if self._last_state is None:
+            raise ValueError("nothing to save: run recompute() first "
+                             "(distributed rounds keep state sharded)")
+        from repro.train.checkpoint import snapshot_engine_state
+        snapshot_engine_state(path, self._last_state)

@@ -1,0 +1,387 @@
+"""Online graph serving (DESIGN.md §13): slack storage, live mutations,
+dirty-scope incremental recompute, snapshot-isolated queries.
+
+The equivalence workload is connected components (``repro.apps.cc``):
+int32 min-label over a confluent semilattice has exactly one fixed
+point, so incremental-vs-rebuild checks are **bitwise** on any
+scheduler.  Float workloads (PageRank) are covered in
+examples/dynamic_pagerank.py with the eps-scaled tolerance contract.
+"""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from conftest import random_graph
+from repro import api
+from repro.apps import cc, pagerank
+from repro.core.graph import (DataGraph, input_order_edges, insert_edges,
+                              rebuild_compacted, zipf_edges)
+from repro.data.pipeline import edge_stream
+
+
+def _serve_cc(edges, nv, scheduler="locking", **kw):
+    graph, update, _ = cc.build(edges, nv, slack=4)
+    if scheduler == "locking":
+        kw.setdefault("dispatch", "batch")
+        kw.setdefault("max_pending", 32)
+        kw.setdefault("max_supersteps", 20_000)
+    return api.serve(graph, update, scheduler=scheduler, slack=4, **kw)
+
+
+def _rebuild_labels(edges, nv, scheduler="locking"):
+    g, u, _ = cc.build(edges, nv)
+    kw = ({"dispatch": "batch", "max_pending": 32,
+           "max_supersteps": 20_000} if scheduler == "locking" else {})
+    res = api.run(g, u, scheduler=scheduler, **kw)
+    return np.asarray(res.vertex_data["label"])
+
+
+# ----------------------------------------------------------------------
+# storage: slack slots are bitwise-inert until used
+# ----------------------------------------------------------------------
+
+def test_slack_storage_is_bitwise_inert():
+    nv = 60
+    edges = random_graph(nv, 120, seed=3)
+    g0, u0, _ = cc.build(edges, nv)
+    g1, u1, _ = cc.build(edges, nv, slack=4)
+    assert g1.slack == 4 and g1.edge_capacity > g0.n_edges
+    r0 = api.run(g0, u0, scheduler="chromatic")
+    r1 = api.run(g1, u1, scheduler="chromatic")
+    assert np.array_equal(np.asarray(r0.vertex_data["label"]),
+                          np.asarray(r1.vertex_data["label"]))
+
+
+def test_insert_edges_matches_from_scratch_build():
+    nv = 50
+    edges = random_graph(nv, 90, seed=1)
+    new = np.asarray([[0, 17], [5, 33], [2, 48]], np.int64)
+    g = pagerank.make_graph(edges, nv, slack=4)
+    w_new = {"w": np.asarray([0.5, 0.25, 0.125], np.float32)}
+    g2 = insert_edges(g, new, w_new)
+    assert g2 is not None and g2.n_edges == len(edges) + 3
+    # original untouched (snapshot isolation depends on this)
+    assert g.n_edges == len(edges)
+    ein, edata = input_order_edges(g2)
+    assert np.array_equal(ein, np.vstack([edges, new]))
+    assert np.allclose(edata["w"][-3:], w_new["w"])
+    # per-vertex adjacency matches a from-scratch build
+    ref = DataGraph.from_edges(
+        nv, np.vstack([edges, new]),
+        vertex_data={"x": np.zeros(nv, np.float32)})
+    import jax.numpy as jnp
+    ids = jnp.arange(nv, dtype=jnp.int32)
+    got, want = g2.struct_rows(ids), ref.struct_rows(ids)
+    for v in range(nv):
+        gs = set(np.asarray(got.nbrs[v])[np.asarray(got.nbr_mask[v])])
+        ws = set(np.asarray(want.nbrs[v])[np.asarray(want.nbr_mask[v])])
+        assert gs == ws
+
+
+def test_insert_validation():
+    nv = 20
+    edges = random_graph(nv, 30, seed=0)
+    g_noslack, _, _ = cc.build(edges, nv)
+    with pytest.raises(ValueError, match="slack"):
+        insert_edges(g_noslack, np.asarray([[0, 5]]))
+    g, _, _ = cc.build(edges, nv, slack=2)
+    with pytest.raises(ValueError):
+        insert_edges(g, np.asarray([[3, 3]]))      # self-loop
+    with pytest.raises(ValueError):
+        insert_edges(g, np.asarray([[0, nv]]))     # out of range
+
+
+def test_compaction_rebuild_preserves_edge_perm_contract():
+    nv = 40
+    edges = random_graph(nv, 70, seed=5)
+    g, _, _ = cc.build(edges, nv, slack=2)
+    extra = np.asarray([[1, 30], [2, 29]], np.int64)
+    g2 = rebuild_compacted(g, extra_edges=extra)
+    ein, _ = input_order_edges(g2)
+    assert np.array_equal(ein, np.vstack([edges, extra]))
+    assert g2.slack == g.slack and g2.n_edges == len(edges) + 2
+    # stored order maps back through edge_perm for every edge
+    assert np.array_equal(ein[g2.edge_perm], g2.edges_np)
+
+
+# ----------------------------------------------------------------------
+# serving engine: incremental == rebuild, bitwise (CC)
+# ----------------------------------------------------------------------
+
+@pytest.mark.parametrize("scheduler", ["locking", "chromatic"])
+def test_incremental_recompute_matches_rebuild_bitwise(scheduler):
+    nv = 80
+    edges = zipf_edges(nv, seed=7)
+    serving = _serve_cc(edges, nv, scheduler)
+    serving.recompute()
+    new = np.asarray([[0, 61], [7, 44], [3, 71]], np.int64)
+    new = np.asarray([e for e in new
+                      if serving.find_edge(*e) is None]).reshape(-1, 2)
+    serving.add_edges(new)
+    r = serving.recompute()
+    assert r["dirty"] > 0
+    inc = np.asarray(serving.graph.vertex_data["label"])
+    ref = _rebuild_labels(np.vstack([edges, new]), nv, scheduler)
+    assert np.array_equal(inc, ref)
+
+
+def test_locking_dirty_window_launch_trace():
+    nv = 100
+    edges = zipf_edges(nv, seed=3)
+    serving = _serve_cc(edges, nv, "locking", max_pending=32)
+    serving.recompute()
+    serving.add_edge(0, 55)
+    r = serving.recompute(track_launches=True)
+    assert r["launches"], "track_launches must record the trace"
+    for launch in r["launches"]:
+        # dirty-window shaped: batched [B, W] launches, never a
+        # full bucket sweep, never more rows than the window
+        assert launch["mode"] == "batch"
+        assert launch["rows"] <= 32
+    inc = np.asarray(serving.graph.vertex_data["label"])
+    ref = _rebuild_labels(np.vstack([edges, [[0, 55]]]), nv, "locking")
+    assert np.array_equal(inc, ref)
+
+
+def test_vertex_data_update_dirties_and_converges():
+    nv = 60
+    edges = random_graph(nv, 100, seed=2)
+    serving = _serve_cc(edges, nv, "chromatic")
+    serving.recompute()
+    # inject a smaller label: the whole component must adopt it
+    serving.update_vertex_data([10], {"label": np.asarray([-5, ], np.int32)})
+    r = serving.recompute()
+    assert r["dirty"] > 0
+    inc = np.asarray(serving.graph.vertex_data["label"])
+    labels = np.arange(nv, dtype=np.int32)
+    labels[10] = -5
+    ref = cc.reference_components(edges, nv, labels=labels)
+    assert np.array_equal(inc, ref)
+
+
+def test_update_field_validation_and_edge_updates():
+    nv = 30
+    edges = random_graph(nv, 50, seed=4)
+    graph, update, syncs = pagerank.build(edges, nv, slack=4)
+    serving = api.serve(graph, update, syncs=syncs, scheduler="chromatic",
+                        slack=4)
+    serving.recompute()
+    with pytest.raises(KeyError, match="rank"):
+        serving.update_vertex_data([0], {"nope": np.zeros(1)})
+    u, v = int(edges[0][0]), int(edges[0][1])
+    serving.update_edge(u, v, w=0.0)
+    assert float(serving.snapshot().read_edge(u, v, "w")) != 0.0  # isolated
+    serving.recompute()
+    assert float(serving.snapshot().read_edge(u, v, "w")) == 0.0
+
+
+def test_compaction_under_serving_stays_correct():
+    nv = 40
+    edges = random_graph(nv, 60, seed=6)
+    graph, update, _ = cc.build(edges, nv, slack=1,
+                                edge_capacity=len(edges) + 4)
+    serving = api.serve(graph, update, scheduler="chromatic")
+    serving.recompute()
+    rng = np.random.default_rng(0)
+    added = []
+    while serving.stats["compactions"] == 0:
+        u, v = int(rng.integers(0, nv)), int(rng.integers(0, nv))
+        if u == v or serving.find_edge(u, v) is not None:
+            continue
+        serving.add_edge(u, v)
+        added.append((u, v))
+    serving.recompute()
+    inc = np.asarray(serving.graph.vertex_data["label"])
+    ref = _rebuild_labels(np.vstack([edges, np.asarray(added)]), nv,
+                          "chromatic")
+    assert np.array_equal(inc, ref)
+    assert serving.n_edges == len(edges) + len(added)
+
+
+def test_online_als_new_rating_reconverges():
+    """The paper's online-CF flow: a user rates a movie, the rating
+    lands as a live edge insert, and only the dirty scope (the user,
+    the movie, their neighborhoods) re-solves its least squares."""
+    from repro.apps import als
+    prob = als.synthetic_netflix(12, 10, 3, density=0.3, seed=0, slack=4)
+    graph, update, syncs = als.build(prob)
+    serving = api.serve(graph, update, syncs=syncs, scheduler="chromatic",
+                        slack=4)
+    serving.recompute()
+    w_before = np.asarray(serving.graph.vertex_data["w"]).copy()
+    rated = {tuple(p) for p in prob.pairs}
+    u, m = next((u, m) for u in range(prob.n_users)
+                for m in range(prob.n_movies) if (u, m) not in rated)
+    mv = prob.n_users + m                       # movie vertex id
+    serving.add_edge(u, mv, rating=1.5)
+    r = serving.recompute()
+    assert r["dirty"] > 0
+    w_after = np.asarray(serving.graph.vertex_data["w"])
+    pred_before = float(w_before[u] @ w_before[mv])
+    pred_after = float(w_after[u] @ w_after[mv])
+    # the new rating pulls the pair's prediction toward it
+    assert abs(pred_after - 1.5) < abs(pred_before - 1.5)
+    assert float(serving.snapshot().read_edge(u, mv, "rating")) == 1.5
+
+
+# ----------------------------------------------------------------------
+# snapshot isolation
+# ----------------------------------------------------------------------
+
+def test_snapshot_isolation_pinned_reads():
+    nv = 50
+    edges = random_graph(nv, 80, seed=8)
+    serving = _serve_cc(edges, nv, "chromatic")
+    serving.recompute()
+    pinned = serving.snapshot()
+    before = np.asarray(pinned.read_vertex(np.arange(nv), "label")).copy()
+    assert pinned.find_edge(*edges[0]) is not None
+    serving.update_vertex_data([0], {"label": np.asarray([-9], np.int32)})
+    serving.add_edge(*[e for e in [(0, 33), (1, 44)]
+                       if serving.find_edge(*e) is None][0])
+    serving.recompute()
+    # the pinned snapshot still serves the pre-mutation state
+    assert np.array_equal(
+        np.asarray(pinned.read_vertex(np.arange(nv), "label")), before)
+    assert pinned.n_edges == len(edges)
+    # the fresh snapshot sees the new fixed point
+    new = serving.snapshot()
+    assert new.n_edges == len(edges) + 1
+    assert int(new.read_vertex([0], "label")[0]) == -9 or \
+        int(new.read_vertex([0], "label")[0]) < 0
+
+
+def test_top_k_and_round_metadata():
+    nv = 30
+    edges = random_graph(nv, 40, seed=9)
+    graph, update, syncs = pagerank.build(edges, nv, slack=4)
+    serving = api.serve(graph, update, syncs=syncs, scheduler="chromatic",
+                        slack=4)
+    serving.recompute()
+    snap = serving.snapshot()
+    ids, vals = snap.top_k("rank", 5)
+    ranks = np.asarray(snap.read_vertex(np.arange(nv), "rank"))
+    assert np.array_equal(np.sort(vals)[::-1], vals)
+    assert vals[0] == ranks.max()
+    assert snap.round == 1
+
+
+# ----------------------------------------------------------------------
+# facade kwarg hygiene, both directions
+# ----------------------------------------------------------------------
+
+def test_serve_rejects_inapplicable_knobs_naming_allowed_set():
+    nv = 20
+    edges = random_graph(nv, 30, seed=0)
+    graph, update, _ = cc.build(edges, nv, slack=4)
+    with pytest.raises(ValueError) as ei:
+        api.serve(graph, update, scheduler="chromatic", k_select=4)
+    assert "allowed options" in str(ei.value)
+    assert "chromatic" in str(ei.value)
+    with pytest.raises(ValueError, match="sequential"):
+        api.serve(graph, update, scheduler="sequential")
+
+
+def test_run_redirects_serve_only_kwargs():
+    nv = 20
+    edges = random_graph(nv, 30, seed=0)
+    graph, update, _ = cc.build(edges, nv)
+    for kw in ({"slack": 4}, {"publish_every": 2}, {"edge_capacity": 64}):
+        with pytest.raises(ValueError, match="api.serve"):
+            api.run(graph, update, scheduler="chromatic", **kw)
+
+
+def test_serving_engine_requires_slack_storage():
+    from repro.serve import ServingEngine  # facade re-export
+    nv = 20
+    edges = random_graph(nv, 30, seed=0)
+    graph, update, _ = cc.build(edges, nv)  # no slack
+    spec = api.EngineSpec(scheduler="chromatic")
+    with pytest.raises(ValueError, match="slack"):
+        ServingEngine(graph, update, spec=spec)
+    # api.serve transparently re-stores with slack instead
+    serving = api.serve(graph, update, scheduler="chromatic")
+    assert serving.graph.slack > 0
+    serving.recompute()
+    assert np.array_equal(
+        np.asarray(serving.graph.vertex_data["label"]),
+        _rebuild_labels(edges, nv, "chromatic"))
+
+
+# ----------------------------------------------------------------------
+# edge_stream trace generator
+# ----------------------------------------------------------------------
+
+def test_edge_stream_deterministic_and_wellformed():
+    a = list(edge_stream(200, rate=6, seed=11, n_batches=5))
+    b = list(edge_stream(200, rate=6, seed=11, n_batches=5))
+    assert len(a) == 5
+    for x, y in zip(a, b):
+        assert (np.array_equal(x.edges, y.edges)
+                and np.array_equal(x.touch, y.touch)
+                and np.array_equal(x.queries, y.queries))
+        assert x.edges.shape[1] == 2
+        assert (x.edges[:, 0] != x.edges[:, 1]).all()
+        keys = {tuple(sorted(e)) for e in x.edges}
+        assert len(keys) == len(x.edges)          # deduped within batch
+
+
+# ----------------------------------------------------------------------
+# distributed serving: 8 virtual devices (subprocess — XLA_FLAGS must
+# be set before jax initializes; same harness shape as test_api.py)
+# ----------------------------------------------------------------------
+
+_DIST_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import json
+    import numpy as np
+    from repro import api
+    from repro.apps import cc
+    from repro.core import two_phase_partition
+    from repro.core.graph import zipf_edges
+
+    nv = 64
+    edges = zipf_edges(nv, alpha=2.0, max_deg=24, seed=7)
+    graph, update, _ = cc.build(edges, nv, slack=4)
+    asg = two_phase_partition(nv, edges, 8, seed=0)
+    serving = api.serve(graph, update, scheduler="chromatic", n_shards=8,
+                        partition=asg, slack=4)
+    serving.recompute()
+    new = np.asarray([e for e in [[0, 41], [5, 60], [2, 33]]
+                      if serving.find_edge(*e) is None],
+                     np.int64).reshape(-1, 2)
+    serving.add_edges(new)
+    r = serving.recompute()
+    inc = np.asarray(serving.graph.vertex_data["label"])
+
+    g2, u2, _ = cc.build(np.vstack([edges, new]), nv)
+    asg2 = two_phase_partition(nv, np.vstack([edges, new]), 8, seed=0)
+    res = api.run(g2, u2, scheduler="chromatic", n_shards=8,
+                  partition=asg2)
+    out = {
+        "dirty": int(r["dirty"]),
+        "equal": bool(np.array_equal(
+            inc, np.asarray(res.vertex_data["label"]))),
+    }
+    print("RESULT:" + json.dumps(out))
+""")
+
+
+@pytest.mark.distributed
+def test_distributed_serving_incremental_matches_rebuild():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    proc = subprocess.run([sys.executable, "-c", _DIST_SCRIPT], env=env,
+                          capture_output=True, text=True, timeout=900)
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    line = [l for l in proc.stdout.splitlines()
+            if l.startswith("RESULT:")][0]
+    out = json.loads(line[len("RESULT:"):])
+    assert out["equal"]
+    assert out["dirty"] > 0

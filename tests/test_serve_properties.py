@@ -1,0 +1,137 @@
+"""Property tests for the online serving subsystem (DESIGN.md §13).
+
+The central property: for ANY interleaving of mutation batches (edge
+inserts + vertex-label injections), incremental dirty-scope recompute
+on the live engine reaches the same fixed point as a from-scratch
+rebuild of the final graph.  Connected components keeps the check
+bitwise: int32 min over a confluent semilattice has one fixed point.
+
+Label injections are drawn strictly decreasing (a global negative
+counter): every new injection is smaller than anything already
+propagated, so a stale propagation of an overwritten label is always
+dominated and last-write state determines the fixed point — without
+this, "rebuild from the final vertex data" would not be well-defined.
+"""
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")  # optional test dep; skip, don't error
+from hypothesis import given, settings, strategies as st
+
+pytestmark = pytest.mark.slow      # hypothesis sweeps: own CI job
+
+from conftest import random_graph
+from repro import api
+from repro.apps import cc
+from repro.core.graph import input_order_edges, rebuild_compacted
+
+
+@st.composite
+def mutation_traces(draw):
+    nv = draw(st.integers(8, 24))
+    ne = draw(st.integers(6, 40))
+    seed = draw(st.integers(0, 2**16))
+    edges = random_graph(nv, ne, seed)
+    if len(edges) == 0:
+        edges = np.asarray([[0, 1]], np.int64)
+    existing = {tuple(e) for e in edges}
+    n_batches = draw(st.integers(1, 3))
+    batches = []
+    for _ in range(n_batches):
+        inserts = []
+        for _ in range(draw(st.integers(0, 3))):
+            u = draw(st.integers(0, nv - 2))
+            v = draw(st.integers(u + 1, nv - 1))
+            if (u, v) not in existing:
+                existing.add((u, v))
+                inserts.append((u, v))
+        injects = draw(st.lists(st.integers(0, nv - 1), max_size=2))
+        batches.append((np.asarray(inserts, np.int64).reshape(-1, 2),
+                        injects))
+    return nv, edges, batches
+
+
+def _run_trace(nv, edges, batches, scheduler):
+    graph, update, _ = cc.build(edges, nv, slack=3)
+    kw = ({"dispatch": "batch", "max_pending": 16,
+           "max_supersteps": 20_000} if scheduler == "locking" else {})
+    serving = api.serve(graph, update, scheduler=scheduler, slack=3, **kw)
+    serving.recompute()
+
+    counter = [-1]                 # strictly decreasing injections
+    injected = np.arange(nv, dtype=np.int32)   # last-write state
+    all_edges = edges
+    for inserts, injects in batches:
+        if len(inserts):
+            serving.add_edges(inserts)
+            all_edges = np.vstack([all_edges, inserts])
+        for v in injects:
+            serving.update_vertex_data(
+                [v], {"label": np.asarray([counter[0]], np.int32)})
+            injected[v] = counter[0]
+            counter[0] -= 1
+        serving.recompute()
+
+    inc = np.asarray(serving.graph.vertex_data["label"])
+    # from-scratch: final structure + last-write injected labels
+    g2, u2, _ = cc.build(all_edges, nv, labels=injected)
+    res = api.run(g2, u2, scheduler=scheduler, **kw)
+    ref = np.asarray(res.vertex_data["label"])
+    oracle = cc.reference_components(all_edges, nv, labels=injected)
+    assert np.array_equal(ref, oracle)
+    assert np.array_equal(inc, ref), (inc, ref)
+
+
+@given(mutation_traces())
+@settings(max_examples=8, deadline=None)
+def test_interleaved_mutations_chromatic_bitwise(trace):
+    _run_trace(*trace, scheduler="chromatic")
+
+
+@given(mutation_traces())
+@settings(max_examples=8, deadline=None)
+def test_interleaved_mutations_locking_bitwise(trace):
+    _run_trace(*trace, scheduler="locking")
+
+
+@given(mutation_traces())
+@settings(max_examples=12, deadline=None)
+def test_compaction_roundtrip_property(trace):
+    """rebuild_compacted == the graph from_edges would have built: the
+    input-order edge list (+ extras) survives slack exhaustion."""
+    nv, edges, batches = trace
+    graph, _, _ = cc.build(edges, nv, slack=2)
+    extras = np.vstack([b[0] for b in batches]).reshape(-1, 2) \
+        if any(len(b[0]) for b in batches) else np.zeros((0, 2), np.int64)
+    g2 = rebuild_compacted(graph, extra_edges=extras if len(extras) else None)
+    ein, _ = input_order_edges(g2)
+    want = np.vstack([edges, extras]) if len(extras) else edges
+    assert np.array_equal(ein, want)
+    assert g2.slack == graph.slack
+    assert np.array_equal(ein[g2.edge_perm], g2.edges_np)
+
+
+@given(mutation_traces())
+@settings(max_examples=6, deadline=None)
+def test_snapshot_isolation_property(trace):
+    """A snapshot pinned before any batch never changes, whatever the
+    interleaving that follows it."""
+    nv, edges, batches = trace
+    graph, update, _ = cc.build(edges, nv, slack=3)
+    serving = api.serve(graph, update, scheduler="chromatic", slack=3)
+    serving.recompute()
+    pinned = serving.snapshot()
+    before = np.asarray(pinned.read_vertex(np.arange(nv), "label")).copy()
+    n_edges_before = pinned.n_edges
+    counter = [-1]
+    for inserts, injects in batches:
+        if len(inserts):
+            serving.add_edges(inserts)
+        for v in injects:
+            serving.update_vertex_data(
+                [v], {"label": np.asarray([counter[0]], np.int32)})
+            counter[0] -= 1
+        serving.recompute()
+    assert np.array_equal(
+        np.asarray(pinned.read_vertex(np.arange(nv), "label")), before)
+    assert pinned.n_edges == n_edges_before
